@@ -1,0 +1,56 @@
+"""§3.7 — aggregation at scale: 512 ranks' tallies through the local-master
+→ global-master tree (the paper's production-machine validation point)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from repro.core.aggregate import merge_tallies
+from repro.core.plugins.tally import ApiStat, Tally
+
+
+def _rank_tally(rank: int, apis: int = 24) -> Tally:
+    t = Tally()
+    t.hostnames.add(f"node{rank // 8:03d}")
+    t.processes.add(rank)
+    t.threads.add((rank, 0))
+    for a in range(apis):
+        st = ApiStat()
+        for i in range(50):
+            st.add(500 + 13 * a + i + rank)
+        t.apis[("ust_jaxrt", f"api_{a}")] = st
+    return t
+
+
+def run(ranks: int = 512, fanout: int = 32) -> Dict:
+    tallies = [_rank_tally(r) for r in range(ranks)]
+    t0 = time.perf_counter()
+    composite, stats = merge_tallies(tallies, fanout=fanout)
+    dt = time.perf_counter() - t0
+    key = ("ust_jaxrt", "api_0")
+    assert composite.apis[key].calls == ranks * 50
+    assert len(composite.processes) == ranks
+    return {
+        "ranks": ranks,
+        "fanout": fanout,
+        "depth": stats.depth,
+        "messages": stats.messages,
+        "merge_wall_s": dt,
+        "composite_calls": composite.apis[key].calls,
+        "hostnames": len(composite.hostnames),
+    }
+
+
+def main():
+    for fanout in (8, 32, 128):
+        out = run(fanout=fanout)
+        print(
+            f"  ranks={out['ranks']} fanout={fanout:3d} depth={out['depth']} "
+            f"messages={out['messages']} wall={out['merge_wall_s'] * 1000:.1f}ms"
+        )
+    return run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Fig 7a/7b — runtime overhead per tracing mode, with/without sampling.
+
+Protocol mirrors §5.2: run each suite app against a no-tracing baseline and
+the six configurations T-min/T-default/T-full and TS-* (sampling at 50 ms),
+reporting per-app and mean/median percentage overhead.
+
+Paper's claims to validate: T-default mean ≈ 5.36%, median ≈ 1.99%
+(HeCBench); SPEChpc default-mode mean 4.35–5.14%, max < 10%; sampling adds
+≈ 1%.  Our absolute workloads differ (smoke-scale JAX training on CPU) but
+the protocol and the relative ordering are the reproduction target.
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+import tempfile
+from typing import Dict, List
+
+from repro.core import TraceConfig
+
+from .workload import SUITE, run_training_workload
+
+CONFIGS = [
+    ("T-min", "minimal", False),
+    ("T-default", "default", False),
+    ("T-full", "full", False),
+    ("TS-min", "minimal", True),
+    ("TS-default", "default", True),
+    ("TS-full", "full", True),
+]
+
+
+def run(steps: int = 12, suite=SUITE, repeats: int = 1) -> Dict:
+    rows: List[dict] = []
+    for arch in suite:
+        base = min(
+            run_training_workload(arch, steps)["wall_s"] for _ in range(max(repeats, 1))
+        )
+        row = {"arch": arch, "baseline_s": base}
+        for label, mode, sample in CONFIGS:
+            with tempfile.TemporaryDirectory() as d:
+                r = run_training_workload(
+                    arch,
+                    steps,
+                    trace=TraceConfig(out_dir=d, mode=mode, sample=sample),
+                )
+            row[label] = 100.0 * (r["wall_s"] - base) / base
+            row[f"{label}_events"] = r.get("events", 0)
+        rows.append(row)
+    summary = {}
+    for label, _, _ in CONFIGS:
+        vals = [r[label] for r in rows]
+        summary[label] = {
+            "mean_pct": statistics.mean(vals),
+            "median_pct": statistics.median(vals),
+            "max_pct": max(vals),
+        }
+    return {"rows": rows, "summary": summary}
+
+
+def main():
+    out = run()
+    for r in out["rows"]:
+        print(
+            f"{r['arch']:22s} base={r['baseline_s']:.2f}s "
+            + " ".join(f"{l}={r[l]:+.1f}%" for l, _, _ in CONFIGS)
+        )
+    print("\nsummary (overhead %):")
+    for label, s in out["summary"].items():
+        print(
+            f"  {label:10s} mean={s['mean_pct']:+.2f}% median={s['median_pct']:+.2f}% "
+            f"max={s['max_pct']:+.2f}%"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    main()

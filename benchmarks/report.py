@@ -1,0 +1,85 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline/§Perf tables from
+results/*.json. (Run after dryrun + perf; the narrative in EXPERIMENTS.md
+references these tables.)
+
+    PYTHONPATH=src python -m benchmarks.report > results/report.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .roofline import RESULTS, load, render
+
+PERF = os.path.join(os.path.dirname(__file__), "..", "results", "perf")
+
+
+def perf_tables() -> str:
+    out = []
+    for path in sorted(glob.glob(os.path.join(PERF, "cell_*.json"))):
+        cell = os.path.basename(path)[len("cell_") : -len(".json")]
+        rows = json.load(open(path))
+        base = rows[0]
+        out.append(
+            f"\n### Cell {cell}: {base['arch']} × {base['shape']} ({base['mesh']})\n"
+        )
+        hdr = (
+            f"| variant | compute s | memory s | collective s | bound | "
+            f"useful/HLO | roofline% | peak HBM GiB |"
+        )
+        out.append(hdr)
+        out.append("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            rf = r["roofline"]
+            out.append(
+                f"| {r['variant']} | {rf['t_compute']:.4f} | {rf['t_memory']:.4f} | "
+                f"{rf['t_collective']:.4f} | {rf['bottleneck']} | "
+                f"{rf['useful_flops_ratio']:.3f} | {100 * rf['roofline_fraction']:.1f}% | "
+                f"{rf.get('peak_bytes', 0) / 2**30:.1f} |"
+            )
+        for r in rows[1:]:
+            out.append(f"\n**{r['variant']}**")
+            out.append(f"- hypothesis: {r['hypothesis']}")
+            out.append(f"- prediction: {r['prediction']}")
+            d = r["delta"]
+            out.append(
+                f"- measured: compute ×{d['t_compute']:.2f}, memory ×{d['t_memory']:.2f}, "
+                f"collective ×{d['t_collective']:.3f}, roofline ×{d['roofline_fraction']:.1f}, "
+                f"peak HBM ×{d['peak_bytes']:.2f}"
+            )
+    return "\n".join(out)
+
+
+def dryrun_summary() -> str:
+    rows = load()
+    single = [r for r in rows if not r.get("multi_pod")]
+    multi = [r for r in rows if r.get("multi_pod")]
+    ok_s = sum(1 for r in single if r.get("ok"))
+    ok_m = sum(1 for r in multi if r.get("ok"))
+    lines = [
+        f"single-pod (16×16=256 chips): {ok_s}/{len(single)} cells compiled",
+        f"multi-pod (2×16×16=512 chips): {ok_m}/{len(multi)} cells compiled",
+        "",
+        "```",
+        render(rows, multi_pod=False),
+        "```",
+        "",
+        "multi-pod memory/collective proof (per-device):",
+        "```",
+        render(rows, multi_pod=True),
+        "```",
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    print("## §Dry-run + §Roofline (generated)\n")
+    print(dryrun_summary())
+    print("\n## §Perf hillclimb (generated)\n")
+    print(perf_tables())
+
+
+if __name__ == "__main__":
+    main()

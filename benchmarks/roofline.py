@@ -1,0 +1,61 @@
+"""§Roofline — render the per-(arch × shape × mesh) roofline table from the
+dry-run's JSON results (results/dryrun).  Run the dry-run first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both -o results/dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(results_dir: str = RESULTS) -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def render(rows: List[dict], multi_pod: bool = False) -> str:
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'mesh':18s} {'compute':>9s} {'memory':>9s} "
+        f"{'coll':>9s} {'bound':>10s} {'MODEL/HLO':>9s} {'roofline%':>9s} {'HBM GiB':>8s}"
+    )
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("multi_pod", False) != multi_pod:
+            continue
+        if not r.get("ok"):
+            out.append(f"{r['arch']:22s} {r['shape']:12s} FAILED: {r.get('error', '?')[:60]}")
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:18s} "
+            f"{rf['t_compute']:9.4f} {rf['t_memory']:9.4f} {rf['t_collective']:9.4f} "
+            f"{rf['bottleneck']:>10s} {rf['useful_flops_ratio']:9.3f} "
+            f"{100 * rf['roofline_fraction']:8.1f}% "
+            f"{rf.get('peak_bytes', 0) / 2**30:8.1f}"
+        )
+    return "\n".join(out)
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("  (no dry-run results yet — run repro.launch.dryrun first)")
+        return []
+    print(render(rows, multi_pod=False))
+    multi = [r for r in rows if r.get("multi_pod")]
+    if multi:
+        print(f"\nmulti-pod compile proof: {sum(1 for r in multi if r.get('ok'))}/{len(multi)} cells OK")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Emits a ``name,us_per_call,derived`` CSV summary at the end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer steps / smaller suite")
+    args = ap.parse_args()
+
+    from . import aggregate_scale, overhead, roofline, space, tally_table, tracepoint_cost
+    from .workload import SUITE
+
+    suite = SUITE[:2] if args.quick else SUITE
+    steps = 8 if args.quick else 12
+    csv = []
+
+    print("== §3.1 tracepoint hot-path cost (LTTng analogue) ==")
+    tc = tracepoint_cost.main()
+    csv.append(("tracepoint_disabled", tc["disabled_ns"] / 1000, "ns->us per call"))
+    csv.append(("tracepoint_enabled", tc["enabled_ns"] / 1000, "us per call"))
+    csv.append(("tracepoint_drop", tc["drop_ns"] / 1000, "us per discarded event"))
+
+    print("\n== Fig 7 runtime overhead per tracing mode ==")
+    ov = overhead.run(steps=steps, suite=suite)
+    for r in ov["rows"]:
+        print(
+            f"  {r['arch']:22s} base={r['baseline_s']:.2f}s "
+            + " ".join(f"{l}={r[l]:+.1f}%" for l, _, _ in overhead.CONFIGS)
+        )
+    for label, s in ov["summary"].items():
+        print(f"  {label:10s} mean={s['mean_pct']:+.2f}% median={s['median_pct']:+.2f}%")
+    csv.append(
+        ("overhead_T-default_median", ov["summary"]["T-default"]["median_pct"], "pct")
+    )
+
+    print("\n== Fig 8 trace space per mode ==")
+    sp = space.run(steps=steps, suite=suite)
+    for label, pct in sp["normalized_vs_full_pct"].items():
+        print(f"  {label:10s} {pct:6.1f}% of T-full")
+    csv.append(("space_default_vs_full", sp["normalized_vs_full_pct"]["T-default"], "pct"))
+    csv.append(("space_min_vs_full", sp["normalized_vs_full_pct"]["T-min"], "pct"))
+
+    print("\n== §4.3 serving tally (layered backends) ==")
+    tally_table.main()
+
+    print("\n== §3.7 512-rank aggregation tree ==")
+    ag = aggregate_scale.main()
+    csv.append(("aggregate_512_ranks", ag["merge_wall_s"] * 1e6, "us total"))
+
+    print("\n== §Roofline table (from dry-run artifacts) ==")
+    roofline.main()
+
+    print("\nname,us_per_call,derived")
+    for name, val, derived in csv:
+        print(f"{name},{val:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

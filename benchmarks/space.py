@@ -1,0 +1,71 @@
+"""Fig 8a/8b — trace disk-space requirement per tracing mode.
+
+Paper's claims to validate: minimal < default < full; on average default
+needs <20% and minimal <17% of the space of full mode; sampling (TS-*)
+increases space; aggregate-only (§3.7) is kilobytes.
+"""
+
+from __future__ import annotations
+
+import os
+import statistics
+import tempfile
+from typing import Dict, List
+
+from repro.core import TraceConfig
+
+from .overhead import CONFIGS
+from .workload import SUITE, run_training_workload
+
+
+def run(steps: int = 10, suite=SUITE) -> Dict:
+    rows: List[dict] = []
+    for arch in suite:
+        row = {"arch": arch}
+        for label, mode, sample in CONFIGS:
+            with tempfile.TemporaryDirectory() as d:
+                r = run_training_workload(
+                    arch, steps, trace=TraceConfig(out_dir=d, mode=mode, sample=sample)
+                )
+            row[label] = r["trace_bytes"]
+        # beyond-paper: zstd-compressed default-mode streams
+        with tempfile.TemporaryDirectory() as d:
+            r = run_training_workload(
+                arch, steps, trace=TraceConfig(out_dir=d, mode="default", compress=True)
+            )
+            row["TZ-default"] = r["trace_bytes"]
+        # §3.7 aggregate-only footprint
+        with tempfile.TemporaryDirectory() as d:
+            run_training_workload(
+                arch, steps, trace=TraceConfig(out_dir=d, mode="default", aggregate_only=True)
+            )
+            row["aggregate"] = sum(
+                os.path.getsize(os.path.join(d, f)) for f in os.listdir(d) if f.endswith(".tally")
+            )
+        rows.append(row)
+    norm = {
+        label: statistics.mean(100.0 * r[label] / r["T-full"] for r in rows)
+        for label, _, _ in CONFIGS
+    }
+    norm["TZ-default"] = statistics.mean(
+        100.0 * r["TZ-default"] / r["T-full"] for r in rows
+    )
+    return {"rows": rows, "normalized_vs_full_pct": norm}
+
+
+def main():
+    out = run()
+    for r in out["rows"]:
+        print(
+            f"{r['arch']:22s} "
+            + " ".join(f"{l}={r[l] / 1024:.0f}KiB" for l, _, _ in CONFIGS)
+            + f" aggregate={r['aggregate']}B"
+        )
+    print("\nnormalized space vs T-full (%):")
+    for label, pct in out["normalized_vs_full_pct"].items():
+        print(f"  {label:10s} {pct:6.1f}%")
+    return out
+
+
+if __name__ == "__main__":
+    main()

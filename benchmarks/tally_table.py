@@ -1,0 +1,48 @@
+"""§4.3 table — layered-backend tally of a traced serving run.
+
+Reproduces the HIPLZ analysis: a serve workload traced in full mode, whose
+tally shows the framework layer (prefill/decode ≙ hip*) sitting on top of the
+dispatch layer (dispatch/poll_ready ≙ zeEventHostSynchronize's spin lock) —
+the same layering diagnosis the paper demonstrates on LRN/Aurora.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import TraceConfig, Tracer
+from repro.core.plugins.tally import render, tally_trace
+from repro.models import Model
+from repro.serve import ServeConfig, ServeEngine
+
+
+def run(arch: str = "h2o-danube-1.8b", n_requests: int = 6, mode: str = "full"):
+    model = Model(get_config(arch).smoke())
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(
+        model, params, ServeConfig(batch_slots=2, cache_len=48, max_new_tokens=8)
+    )
+    rng = np.random.default_rng(0)
+    with tempfile.TemporaryDirectory() as d:
+        with Tracer(TraceConfig(out_dir=d, mode=mode)):
+            for _ in range(n_requests):
+                eng.submit(rng.integers(0, model.cfg.vocab_size, size=(12,)))
+            eng.run_until_drained()
+        t = tally_trace(d)
+    return t
+
+
+def main():
+    t = run()
+    print(render(t))
+    print("\n-- device --")
+    print(render(t, device=True))
+    return t
+
+
+if __name__ == "__main__":
+    main()

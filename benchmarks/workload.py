@@ -1,0 +1,69 @@
+"""Shared benchmark workload: a small traced/untraced training or serving
+run — the benchmark-suite stand-in for the paper's HeCBench/SPEChpc apps."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import TraceConfig, Tracer
+from repro.models import Model, ShapeSpec
+from repro.sharding import Partitioner
+from repro.train import TrainConfig, Trainer, TrainerConfig
+
+#: the benchmark "suite": one app per model family (≙ HeCBench variety)
+SUITE = ("stablelm-3b", "h2o-danube-1.8b", "mamba2-1.3b", "moonshot-v1-16b-a3b")
+
+_SHAPE = ShapeSpec("bench", "train", 64, 4)
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def run_training_workload(
+    arch: str,
+    steps: int = 12,
+    trace: Optional[TraceConfig] = None,
+    seed: int = 0,
+) -> Dict[str, float]:
+    """Run `steps` smoke-config train steps; returns wall time + trace stats.
+
+    The first 2 steps (compile) are excluded from timing, matching the
+    paper's overhead protocol (steady-state tracing overhead).
+    """
+    mesh = _mesh()
+    model = Model(get_config(arch).smoke(), mesh)
+    trainer = Trainer(
+        model,
+        _SHAPE,
+        Partitioner(mesh),
+        TrainConfig(peak_lr=1e-3, warmup=2, total_steps=steps + 10),
+        TrainerConfig(steps=2, ckpt_every=10**9, ckpt_dir=None),
+        rng_seed=seed,
+    )
+    tracer = Tracer(trace) if trace is not None else None
+    if tracer is not None:
+        tracer.start()
+    try:
+        trainer.cfg.steps = 2
+        trainer.run()  # warmup/compile (2 steps)
+        t0 = time.perf_counter()
+        trainer.cfg.steps = 2 + steps
+        out = trainer.run()
+        wall = time.perf_counter() - t0
+    finally:
+        if tracer is not None:
+            tracer.stop()
+    res = {"wall_s": wall, "steps": steps, "final_loss": out["final_loss"]}
+    if tracer is not None and tracer.handle is not None:
+        res.update(
+            events=tracer.handle.events,
+            dropped=tracer.handle.dropped,
+            trace_bytes=tracer.handle.size_bytes,
+        )
+    return res

@@ -1,0 +1,47 @@
+"""Quickstart: train a small model for a few steps UNDER THAPI TRACING, then
+analyze the trace with the tally / validation plugins.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.core import TraceConfig, Tracer
+from repro.core.plugins.tally import render, tally_trace
+from repro.core.plugins.validate import render as vrender, validate_trace
+from repro.models import Model, ShapeSpec
+from repro.sharding import Partitioner
+from repro.train import TrainConfig, Trainer, TrainerConfig
+
+
+def main():
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    model = Model(get_config("h2o-danube-1.8b").smoke(), mesh)
+    trace_dir = tempfile.mkdtemp(prefix="thapi_quickstart_")
+
+    with Tracer(TraceConfig(out_dir=trace_dir, mode="default", sample=True)):
+        trainer = Trainer(
+            model,
+            ShapeSpec("quickstart", "train", 64, 4),
+            Partitioner(mesh),
+            TrainConfig(peak_lr=3e-3, warmup=5, total_steps=100),
+            TrainerConfig(steps=20, ckpt_every=10, ckpt_dir=trace_dir + "/ckpt"),
+        )
+        result = trainer.run()
+
+    print(f"trained {result['steps_run']} steps, final loss {result['final_loss']:.3f}\n")
+    t = tally_trace(trace_dir)
+    print(render(t))
+    print("\n-- device --")
+    print(render(t, device=True))
+    print()
+    print(vrender(validate_trace(trace_dir)))
+    print(f"\ntrace at {trace_dir} — try:")
+    print(f"  PYTHONPATH=src python -m repro.core.iprof timeline {trace_dir} -o /tmp/tl.json")
+
+
+if __name__ == "__main__":
+    main()

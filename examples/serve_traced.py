@@ -1,0 +1,45 @@
+"""Serve a small model with batched requests under tracing (§4.3 analogue):
+the tally shows the framework layer (prefill/decode) over the dispatch layer
+(dispatch/poll_ready spin lock in full mode) — the HIPLZ layering analysis.
+
+    PYTHONPATH=src python examples/serve_traced.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import TraceConfig, Tracer
+from repro.core.plugins.tally import render, tally_trace
+from repro.core.plugins.timeline import write_timeline
+from repro.models import Model
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main():
+    model = Model(get_config("stablelm-3b").smoke())
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(
+        model, params, ServeConfig(batch_slots=4, cache_len=64, max_new_tokens=12)
+    )
+    rng = np.random.default_rng(7)
+    trace_dir = tempfile.mkdtemp(prefix="thapi_serve_")
+
+    with Tracer(TraceConfig(out_dir=trace_dir, mode="full", sample=True)):
+        for _ in range(10):
+            eng.submit(rng.integers(0, model.cfg.vocab_size, size=(16,)))
+        done = eng.run_until_drained()
+
+    print(f"served {len(done)} requests "
+          f"({sum(len(r.out_tokens) for r in done)} tokens)\n")
+    t = tally_trace(trace_dir)
+    print(render(t))
+    tl = trace_dir + "/timeline.json"
+    n = write_timeline(trace_dir, tl)
+    print(f"\n{n} timeline events → {tl} (open in ui.perfetto.dev)")
+
+
+if __name__ == "__main__":
+    main()

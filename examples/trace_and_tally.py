@@ -1,0 +1,47 @@
+"""The paper's running example (§1.1): rich memcpy interception.
+
+Runs H2D/D2H transfers under tracing, pretty-prints the memcpy events to
+show the full call context (src/dst pointers, size), and demonstrates the
+H2D-vs-D2H deduction from pointer address classes (host 0x00…, device 0xff…)
+— exactly the zeCommandListAppendMemoryCopy walkthrough.
+
+    PYTHONPATH=src python examples/trace_and_tally.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.core import TraceConfig, Tracer, traced_device_get, traced_device_put
+from repro.core.babeltrace import CTFSource
+from repro.core.plugins.pretty import format_event
+
+def main():
+    trace_dir = tempfile.mkdtemp(prefix="thapi_memcpy_")
+    with Tracer(TraceConfig(out_dir=trace_dir, mode="full")):
+        x = np.random.default_rng(0).normal(size=(1 << 16,)).astype(np.float32)
+        dev = traced_device_put(x)  # H2D
+        back = traced_device_get(dev * 2)  # D2H
+
+    src = CTFSource(trace_dir)
+    print("memcpy events (full argument context, THAPI-style):\n")
+    for ev in src:
+        if "memcpy" not in ev.name:
+            continue
+        print(format_event(ev, src.meta.clock))
+        if ev.name.endswith("entry"):
+            f = ev.asdict()
+            kind = "H2D" if f["src"] >> 56 == 0 else "D2H"
+            print(
+                f"  → deduced {kind}: src 0x{f['src']:012x} "
+                f"({'host' if f['src'] >> 56 == 0 else 'device'}) → "
+                f"dst 0x{f['dst']:012x} "
+                f"({'device' if f['dst'] >> 56 == 0xFF else 'host'}), "
+                f"{f['nbytes']} bytes"
+            )
+    print("\n(compare §1.1: TAU records name+timestamp only; THAPI records the"
+          "\n full call context, enabling exactly this deduction.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""repro — THAPI (Tracing Heterogeneous APIs) reproduced as a JAX/TPU training
+and serving framework.
+
+Layout:
+  repro.core      — the paper's contribution: API-model-driven tracing (C1–C7)
+  repro.models    — 10-architecture model zoo (dense/MoE/SSM/hybrid/enc-dec/VLM)
+  repro.kernels   — Pallas TPU kernels for substrate hot spots (+ jnp oracles)
+  repro.data      — deterministic sharded data pipeline
+  repro.optim     — AdamW, schedules, gradient compression
+  repro.checkpoint— async atomic sharded checkpoints, elastic restore
+  repro.train     — train_step + fault-tolerant trainer
+  repro.serve     — KV-cache serving engine (prefill/decode)
+  repro.sharding  — logical-axis partitioning rules
+  repro.configs   — one module per assigned architecture
+  repro.launch    — production mesh, multi-pod dry-run, roofline
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+from .checkpointer import (  # noqa: F401
+    Checkpointer,
+    CheckpointManifest,
+    latest_checkpoint,
+)

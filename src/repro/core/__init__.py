@@ -1,0 +1,43 @@
+"""repro.core — THAPI: programming-model-centric tracing for the JAX stack.
+
+The paper's primary contribution implemented as a system: API-model-driven
+tracepoint codegen, per-thread ring buffers with discard mode, CTF-lite
+streams, interception wrappers for the JAX stack, a telemetry daemon, and a
+Babeltrace2-style analysis graph (pretty / tally / timeline / validate) with
+multi-rank aggregation.
+
+Public API:
+
+    from repro.core import TraceConfig, Tracer, trace_session       # collection
+    from repro.core import traced_jit, kernel_span, collective_span # interception
+    from repro.core.plugins.tally import tally_trace, render        # analysis
+"""
+
+from .api_model import (  # noqa: F401
+    APIModel,
+    APISpec,
+    P,
+    Param,
+    TraceModel,
+    build_trace_model,
+    builtin_models,
+    builtin_trace_model,
+)
+from .interception import (  # noqa: F401
+    TracedJit,
+    collective_span,
+    kernel_span,
+    traced_device_get,
+    traced_device_put,
+    traced_jit,
+    train_step_span,
+)
+from .tracer import (  # noqa: F401
+    MODES,
+    TraceConfig,
+    TraceHandle,
+    Tracer,
+    active_tracer,
+    get_tracepoints,
+    trace_session,
+)

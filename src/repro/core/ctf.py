@@ -1,0 +1,185 @@
+"""CTF-lite: compact binary trace streams + JSON metadata (THAPI §3.1, §3.4).
+
+LTTng writes Common Trace Format: binary event streams described by a
+metadata document, parsed post-mortem by Babeltrace2.  We reproduce the
+shape: a trace is a *directory* containing
+
+    metadata.json            trace model + clock + environment (≙ CTF TSDL)
+    stream_<pid>_<tid>.ctf   one binary stream per producer ring
+    <prefix>...              multiple ranks may share a dir with rank prefixes
+
+Stream layout: 16-byte magic/version header, then packets of framed records
+exactly as produced by the ring buffers (ringbuffer.RECORD_HEADER framing).
+The consumer daemon appends ring drains verbatim — zero re-encoding on the
+write path, which is how LTTng keeps the consumer cheap.
+
+Discarded events are materialized as ``ctf:events_discarded`` records
+(event id 0) whenever the consumer observes a ring's drop counter advance —
+the CTF discarded-events counter made explicit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from .api_model import DISCARD_EVENT_ID, TraceModel
+from .clock import ClockInfo
+from .ringbuffer import RECORD_HEADER, RECORD_HEADER_SIZE
+
+MAGIC = b"THAPIctf"  # 8 bytes
+VERSION = 1
+STREAM_HEADER = struct.Struct("<8sII")  # magic, version, reserved
+
+METADATA_FILE = "metadata.json"
+
+
+# ---------------------------------------------------------------------------
+# Write side
+# ---------------------------------------------------------------------------
+
+
+class StreamWriter:
+    """One binary stream (one ring → one file).
+
+    ``compress=True`` writes a zstd frame around the stream (the Fig 8 space
+    knob taken further: CTF stays the inner format; zstd is the container).
+    """
+
+    def __init__(self, path: str, pid: int, tid: int, compress: bool = False):
+        self.path = path
+        self.pid = pid
+        self.tid = tid
+        self.compress = compress
+        self._f = open(path, "wb", buffering=1 << 16)
+        if compress:
+            import zstandard as zstd
+
+            self._zw = zstd.ZstdCompressor(level=3).stream_writer(self._f)
+            self._out = self._zw
+        else:
+            self._zw = None
+            self._out = self._f
+        self._out.write(STREAM_HEADER.pack(MAGIC, VERSION, 0))
+        self._seen_dropped = 0
+        self.bytes_written = STREAM_HEADER.size
+
+    def append(self, chunk: bytes) -> None:
+        if chunk:
+            self._out.write(chunk)
+            self.bytes_written += len(chunk)
+
+    def note_drops(self, total_dropped: int, ts_ns: int) -> None:
+        """Emit a ctf:events_discarded record if the drop counter advanced."""
+        delta = total_dropped - self._seen_dropped
+        if delta > 0:
+            payload = struct.pack("<Q", delta)
+            rec = RECORD_HEADER.pack(
+                RECORD_HEADER_SIZE + len(payload), DISCARD_EVENT_ID, ts_ns
+            ) + payload
+            self._out.write(rec)
+            self.bytes_written += len(rec)
+            self._seen_dropped = total_dropped
+
+    def close(self) -> None:
+        if not self._f.closed:
+            if self._zw is not None:
+                self._zw.flush((__import__("zstandard")).FLUSH_FRAME)
+            self._f.flush()
+            self._f.close()
+
+
+def write_metadata(
+    trace_dir: str,
+    model: TraceModel,
+    clock: ClockInfo,
+    env: Optional[dict] = None,
+    mode: str = "default",
+) -> None:
+    doc = {
+        "format": "thapi-ctf-lite",
+        "version": VERSION,
+        "mode": mode,
+        "clock": clock.to_json(),
+        "env": env or {},
+        "events": model.to_json(),
+    }
+    tmp = os.path.join(trace_dir, METADATA_FILE + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+    os.replace(tmp, os.path.join(trace_dir, METADATA_FILE))
+
+
+# ---------------------------------------------------------------------------
+# Read side (consumed by the Babeltrace-style source component)
+# ---------------------------------------------------------------------------
+
+
+class TraceMeta:
+    def __init__(self, doc: dict):
+        self.doc = doc
+        self.model = TraceModel.from_json(doc["events"])
+        self.clock = ClockInfo.from_json(doc["clock"])
+        self.mode: str = doc.get("mode", "default")
+        self.env: dict = doc.get("env", {})
+
+    @staticmethod
+    def load(trace_dir: str) -> "TraceMeta":
+        with open(os.path.join(trace_dir, METADATA_FILE)) as f:
+            return TraceMeta(json.load(f))
+
+
+#: (eid, ts_ns, payload) — payload is a memoryview into the stream buffer.
+RawEvent = Tuple[int, int, memoryview]
+
+
+class StreamReader:
+    """Iterates framed records of one stream file."""
+
+    def __init__(self, path: str):
+        self.path = path
+        base = os.path.basename(path)
+        # stream_<pid>_<tid>.ctf, possibly with a rank prefix
+        stem = base[: -len(".ctf")] if base.endswith(".ctf") else base
+        parts = stem.split("_")
+        try:
+            self.pid, self.tid = int(parts[-2]), int(parts[-1])
+        except (ValueError, IndexError):
+            self.pid, self.tid = 0, 0
+
+    def __iter__(self) -> Iterator[RawEvent]:
+        with open(self.path, "rb") as f:
+            raw = f.read()
+        if raw[:4] == b"\x28\xb5\x2f\xfd":  # zstd frame magic
+            import zstandard as zstd
+
+            raw = zstd.ZstdDecompressor().stream_reader(raw).read()
+        if len(raw) < STREAM_HEADER.size:
+            return
+        magic, version, _ = STREAM_HEADER.unpack_from(raw)
+        if magic != MAGIC:
+            raise ValueError(f"{self.path}: not a THAPI ctf-lite stream")
+        if version != VERSION:
+            raise ValueError(f"{self.path}: unsupported version {version}")
+        data = memoryview(raw)[STREAM_HEADER.size :]
+        off, n = 0, len(data)
+        while off + RECORD_HEADER_SIZE <= n:
+            total, eid, ts = RECORD_HEADER.unpack_from(data, off)
+            if total < RECORD_HEADER_SIZE or off + total > n:
+                break  # truncated tail (e.g. crash mid-write) — stop cleanly
+            yield eid, ts, data[off + RECORD_HEADER_SIZE : off + total]
+            off += total
+
+
+def stream_files(trace_dir: str) -> List[str]:
+    out = []
+    for name in sorted(os.listdir(trace_dir)):
+        if name.endswith(".ctf"):
+            out.append(os.path.join(trace_dir, name))
+    return out
+
+
+def trace_size_bytes(trace_dir: str) -> int:
+    return sum(os.path.getsize(p) for p in stream_files(trace_dir))

@@ -1,0 +1,147 @@
+"""iprof — THAPI's launcher/analyzer CLI (§3.4, Fig 4).
+
+    "Tracing begins by launching the application using the iprof launcher…
+     iprof allows filtering events, choosing tracing modes, turning on or off
+     features such as hardware telemetry, and specifying parsing and analysis
+     types for the collected traces."
+
+Usage:
+    python -m repro.core.iprof run  -m default --sample -o /tmp/t -- pkg.module:main arg1 ...
+    python -m repro.core.iprof tally    /tmp/t [--device] [--top N]
+    python -m repro.core.iprof pretty   /tmp/t [-n N] [--filter memcpy]
+    python -m repro.core.iprof timeline /tmp/t -o timeline.json
+    python -m repro.core.iprof validate /tmp/t
+    python -m repro.core.iprof combine  /tmp/agg_root   # §3.7 global master
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+from typing import List, Optional
+
+from .aggregate import combine_aggregates, find_aggregates
+from .plugins import pretty as pretty_plugin
+from .plugins import tally as tally_plugin
+from .plugins import timeline as timeline_plugin
+from .plugins import validate as validate_plugin
+from .tracer import MODES, TraceConfig, Tracer
+
+
+def _run(args) -> int:
+    target = args.entry
+    mod_name, _, fn_name = target.partition(":")
+    mod = importlib.import_module(mod_name)
+    fn = getattr(mod, fn_name or "main")
+    cfg = TraceConfig(
+        out_dir=args.out,
+        mode=args.mode,
+        sample=args.sample,
+        sample_period_s=args.sample_period,
+        aggregate_only=args.aggregate_only,
+        rank=args.rank,
+        ranks=None if args.ranks is None else [int(r) for r in args.ranks.split(",")],
+    )
+    old_argv = sys.argv
+    sys.argv = [target] + list(args.args)
+    try:
+        with Tracer(cfg) as tr:
+            fn()
+    finally:
+        sys.argv = old_argv
+    h = tr.handle
+    print(
+        f"[iprof] trace: {h.trace_dir} mode={h.mode} events={h.events} "
+        f"dropped={h.dropped} bytes={h.size_bytes}"
+    )
+    return 0
+
+
+def _tally(args) -> int:
+    t = tally_plugin.tally_trace(args.trace_dir)
+    print(tally_plugin.render(t, top=args.top, device=False))
+    if args.device or t.device_apis:
+        print("\n-- device --")
+        print(tally_plugin.render(t, top=args.top, device=True))
+    return 0
+
+
+def _pretty(args) -> int:
+    pretty_plugin.pretty_print(args.trace_dir, limit=args.n, name_filter=args.filter)
+    return 0
+
+
+def _timeline(args) -> int:
+    n = timeline_plugin.write_timeline(args.trace_dir, args.out)
+    print(f"[iprof] wrote {n} timeline events to {args.out} (open in ui.perfetto.dev)")
+    return 0
+
+
+def _validate(args) -> int:
+    findings = validate_plugin.validate_trace(args.trace_dir)
+    print(validate_plugin.render(findings))
+    return 0 if not any(f.severity == "error" for f in findings) else 2
+
+
+def _combine(args) -> int:
+    paths = find_aggregates(args.root)
+    if not paths:
+        print(f"[iprof] no .tally aggregates under {args.root}", file=sys.stderr)
+        return 1
+    t = combine_aggregates(paths, fanout=args.fanout)
+    print(tally_plugin.render(t))
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="iprof", description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    r = sub.add_parser("run", help="launch a traced entry point")
+    r.add_argument("-m", "--mode", choices=MODES, default="default")
+    r.add_argument("--sample", action="store_true", help="enable device telemetry (§3.5)")
+    r.add_argument("--sample-period", type=float, default=0.05)
+    r.add_argument("-o", "--out", required=True)
+    r.add_argument("--aggregate-only", action="store_true", help="§3.7 aggregate-only mode")
+    r.add_argument("--rank", type=int, default=0)
+    r.add_argument("--ranks", default=None, help="comma-separated ranks to trace (§3.2)")
+    r.add_argument("entry", help="pkg.module:function")
+    r.add_argument("args", nargs="*")
+    r.set_defaults(fn=_run)
+
+    t = sub.add_parser("tally", help="summary table (§4.3)")
+    t.add_argument("trace_dir")
+    t.add_argument("--top", type=int, default=None)
+    t.add_argument("--device", action="store_true")
+    t.set_defaults(fn=_tally)
+
+    pr = sub.add_parser("pretty", help="pretty-print events (§3.4)")
+    pr.add_argument("trace_dir")
+    pr.add_argument("-n", type=int, default=None)
+    pr.add_argument("--filter", default=None)
+    pr.set_defaults(fn=_pretty)
+
+    tl = sub.add_parser("timeline", help="Perfetto timeline export (§3.6)")
+    tl.add_argument("trace_dir")
+    tl.add_argument("-o", "--out", default="timeline.json")
+    tl.set_defaults(fn=_timeline)
+
+    v = sub.add_parser("validate", help="post-mortem validation (§4.2)")
+    v.add_argument("trace_dir")
+    v.set_defaults(fn=_validate)
+
+    c = sub.add_parser("combine", help="merge rank aggregates (§3.7)")
+    c.add_argument("root")
+    c.add_argument("--fanout", type=int, default=32)
+    c.set_defaults(fn=_combine)
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,94 @@
+"""Online trace analysis (THAPI §6 future work, implemented).
+
+    "we are also working on online trace analysis, where tracing and analysis
+     can be performed concurrently to enable adaptive optimizations during
+     application runtime."
+
+The consumer daemon can hand each drained chunk to an :class:`OnlineAnalyzer`
+that decodes records incrementally and maintains a LIVE tally (same monoid as
+the offline plugin), without waiting for session stop.  The trainer (or an
+adaptive policy) can read ``snapshot()`` mid-run — e.g. to detect a dispatch/
+poll imbalance and adjust microbatching, the paper's "adaptive optimization"
+loop.
+
+Implementation: the analyzer consumes the same framed record stream the CTF
+writer receives, using the generated unpackers — write path stays zero-cost,
+analysis rides the consumer thread.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+from .api_model import DISCARD_EVENT_ID, TraceModel
+from .plugins.tally import ApiStat, Tally
+from .ringbuffer import RECORD_HEADER, RECORD_HEADER_SIZE
+from .tracepoints import Tracepoints
+
+
+class OnlineAnalyzer:
+    """Incremental entry/exit folding + live tally over drained chunks."""
+
+    def __init__(self, model: TraceModel, tracepoints: Optional[Tracepoints] = None):
+        self.model = model
+        self._unpack = (tracepoints or Tracepoints(model)).unpack
+        self._etypes = model.events
+        self._lock = threading.Lock()
+        self._tally = Tally()
+        #: open entry timestamps per (tid, provider:api) — LIFO like intervals
+        self._open: Dict[Tuple[int, str], list] = {}
+        self.events_seen = 0
+        self.discarded = 0
+
+    def feed(self, chunk: bytes, pid: int = 0, tid: int = 0) -> None:
+        off, n = 0, len(chunk)
+        etypes = self._etypes
+        with self._lock:
+            while off + RECORD_HEADER_SIZE <= n:
+                total, eid, ts = RECORD_HEADER.unpack_from(chunk, off)
+                if total < RECORD_HEADER_SIZE or off + total > n:
+                    break
+                self.events_seen += 1
+                if eid < len(etypes):
+                    et = etypes[eid]
+                    if eid == DISCARD_EVENT_ID:
+                        self.discarded += self._unpack[eid](
+                            memoryview(chunk)[off + RECORD_HEADER_SIZE : off + total]
+                        )[0]
+                    elif et.phase == "entry":
+                        self._open.setdefault((tid, et.provider + ":" + et.api), []).append(ts)
+                    elif et.phase == "exit":
+                        stack = self._open.get((tid, et.provider + ":" + et.api))
+                        if stack:
+                            t0 = stack.pop()
+                            self._stat(et.provider, et.api, False).add(max(0, ts - t0))
+                            self._tally.threads.add((pid, tid))
+                    elif et.phase == "span":
+                        payload = memoryview(chunk)[off + RECORD_HEADER_SIZE : off + total]
+                        vals = self._unpack[eid](payload)
+                        t0, t1 = vals[0], vals[1]
+                        name = et.api
+                        if et.api == "launch":
+                            # kernel name is the first post-span payload field
+                            name = vals[2] if len(vals) > 2 and isinstance(vals[2], str) else et.api
+                        self._stat(et.provider, name, True).add(max(0, t1 - t0))
+                off += total
+
+    def _stat(self, provider: str, api: str, device: bool) -> ApiStat:
+        table = self._tally.device_apis if device else self._tally.apis
+        st = table.get((provider, api))
+        if st is None:
+            st = table[(provider, api)] = ApiStat()
+        return st
+
+    def snapshot(self) -> Tally:
+        """Copy-on-read live tally (safe to render while tracing continues)."""
+        with self._lock:
+            return Tally().merge(self._tally)
+
+    def busy_fraction(self, provider: str, api: str, window_total_ns: int) -> float:
+        """Adaptive-optimization helper: share of wall time inside an API."""
+        with self._lock:
+            st = self._tally.apis.get((provider, api))
+            return (st.total_ns / window_total_ns) if st and window_total_ns else 0.0

@@ -1,0 +1,199 @@
+"""Tally plugin (THAPI §3.4, §4.3): per-API summary tables.
+
+Produces the paper's table: per API call — total time, share, call count,
+average/min/max — grouped under backend headers, plus the hostname/process/
+thread counts banner.  Tallies are *mergeable monoids*, which is what makes
+the §3.7 aggregation tree (local master → global master) possible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from ..babeltrace import CTFSource, Interval, IntervalFilter
+
+
+@dataclasses.dataclass
+class ApiStat:
+    calls: int = 0
+    total_ns: int = 0
+    min_ns: int = 2**63 - 1
+    max_ns: int = 0
+
+    def add(self, dur_ns: int) -> None:
+        self.calls += 1
+        self.total_ns += dur_ns
+        if dur_ns < self.min_ns:
+            self.min_ns = dur_ns
+        if dur_ns > self.max_ns:
+            self.max_ns = dur_ns
+
+    def merge(self, other: "ApiStat") -> None:
+        self.calls += other.calls
+        self.total_ns += other.total_ns
+        self.min_ns = min(self.min_ns, other.min_ns)
+        self.max_ns = max(self.max_ns, other.max_ns)
+
+    @property
+    def avg_ns(self) -> float:
+        return self.total_ns / self.calls if self.calls else 0.0
+
+
+@dataclasses.dataclass
+class Tally:
+    #: (provider, api) → stats
+    apis: Dict[Tuple[str, str], ApiStat] = dataclasses.field(default_factory=dict)
+    hostnames: Set[str] = dataclasses.field(default_factory=set)
+    processes: Set[int] = dataclasses.field(default_factory=set)
+    threads: Set[Tuple[int, int]] = dataclasses.field(default_factory=set)
+    discarded: int = 0
+    #: device-side totals (kernel/transfer spans) kept separately, like the
+    #: paper's host vs device timeline rows
+    device_apis: Dict[Tuple[str, str], ApiStat] = dataclasses.field(default_factory=dict)
+
+    def add_interval(self, iv: Interval) -> None:
+        table = self.device_apis if iv.device else self.apis
+        api = iv.api
+        if iv.device and iv.api == "launch":
+            # kernel spans tally per kernel name (the paper's per-API rows)
+            api = iv.entry.get("name", iv.api)
+        st = table.get((iv.provider, api))
+        if st is None:
+            st = table[(iv.provider, api)] = ApiStat()
+        st.add(iv.dur)
+        self.processes.add(iv.pid)
+        self.threads.add((iv.pid, iv.tid))
+
+    def merge(self, other: "Tally") -> "Tally":
+        for key, st in other.apis.items():
+            mine = self.apis.get(key)
+            if mine is None:
+                self.apis[key] = dataclasses.replace(st)
+            else:
+                mine.merge(st)
+        for key, st in other.device_apis.items():
+            mine = self.device_apis.get(key)
+            if mine is None:
+                self.device_apis[key] = dataclasses.replace(st)
+            else:
+                mine.merge(st)
+        self.hostnames |= other.hostnames
+        self.processes |= other.processes
+        self.threads |= other.threads
+        self.discarded += other.discarded
+        return self
+
+    # -- (de)serialization for the aggregation tree --------------------------
+    def to_obj(self) -> dict:
+        def enc(t):
+            return [
+                [p, a, s.calls, s.total_ns, s.min_ns, s.max_ns] for (p, a), s in t.items()
+            ]
+
+        return {
+            "apis": enc(self.apis),
+            "device_apis": enc(self.device_apis),
+            "hostnames": sorted(self.hostnames),
+            "processes": sorted(self.processes),
+            "threads": sorted(list(t) for t in self.threads),
+            "discarded": self.discarded,
+        }
+
+    @staticmethod
+    def from_obj(d: dict) -> "Tally":
+        def dec(items):
+            return {
+                (p, a): ApiStat(calls=c, total_ns=t, min_ns=mn, max_ns=mx)
+                for p, a, c, t, mn, mx in items
+            }
+
+        return Tally(
+            apis=dec(d["apis"]),
+            device_apis=dec(d["device_apis"]),
+            hostnames=set(d["hostnames"]),
+            processes=set(d["processes"]),
+            threads={tuple(t) for t in d["threads"]},
+            discarded=int(d["discarded"]),
+        )
+
+
+def tally_intervals(intervals: Iterable[Interval], hostname: str = "") -> Tally:
+    t = Tally()
+    if hostname:
+        t.hostnames.add(hostname)
+    for iv in intervals:
+        t.add_interval(iv)
+    return t
+
+
+def tally_trace(trace_dir: str) -> Tally:
+    src = CTFSource(trace_dir)
+    filt = IntervalFilter(iter(src))
+    t = tally_intervals(filt)
+    t.discarded = src.discarded
+    host = src.meta.env.get("hostname", "")
+    if host:
+        t.hostnames.add(host)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Rendering (the §4.3 table)
+# ---------------------------------------------------------------------------
+
+_UNITS = ((1_000_000_000, "s"), (1_000_000, "ms"), (1_000, "us"), (1, "ns"))
+
+
+def fmt_ns(ns: float) -> str:
+    for div, unit in _UNITS:
+        if abs(ns) >= div:
+            return f"{ns / div:.2f}{unit}"
+    return f"{ns:.0f}ns"
+
+
+_BACKEND_LABEL = {
+    "ust_repro": "BACKEND_REPRO",
+    "ust_jaxrt": "BACKEND_JAXRT",
+    "ust_kernel": "BACKEND_KERNEL",
+    "ust_collective": "BACKEND_COLL",
+    "ust_thapi": "BACKEND_THAPI",
+}
+
+
+def render(t: Tally, top: Optional[int] = None, device: bool = False) -> str:
+    table = t.device_apis if device else t.apis
+    backends = sorted({_BACKEND_LABEL.get(p, p.upper()) for p, _ in table})
+    banner = " | ".join(
+        [f"{b}" for b in backends]
+        + [
+            f"{len(t.hostnames) or 1} Hostnames",
+            f"{len(t.processes)} Processes",
+            f"{len(t.threads)} Threads",
+        ]
+    )
+    total = sum(s.total_ns for s in table.values()) or 1
+    rows: List[Tuple] = sorted(table.items(), key=lambda kv: -kv[1].total_ns)
+    if top is not None:
+        rows = rows[:top]
+    header = ("Name", "Time", "Time(%)", "Calls", "Average", "Min", "Max")
+    body = [
+        (
+            api,
+            fmt_ns(s.total_ns),
+            f"{100.0 * s.total_ns / total:.2f}%",
+            str(s.calls),
+            fmt_ns(s.avg_ns),
+            fmt_ns(s.min_ns if s.calls else 0),
+            fmt_ns(s.max_ns),
+        )
+        for (prov, api), s in rows
+    ]
+    widths = [max(len(h), *(len(r[i]) for r in body)) if body else len(h) for i, h in enumerate(header)]
+    def line(cells):
+        return " | ".join(c.ljust(w) if i == 0 else c.rjust(w) for i, (c, w) in enumerate(zip(cells, widths)))
+    out = [banner, line(header), "-+-".join("-" * w for w in widths)]
+    out.extend(line(r) for r in body)
+    if t.discarded:
+        out.append(f"[warning] {t.discarded} events discarded (ring-buffer pressure)")
+    return "\n".join(out)

@@ -1,0 +1,148 @@
+"""Per-thread ring buffers with discard mode (THAPI §3.1 / LTTng).
+
+LTTng's key collection property: *lockless per-CPU ring buffers* — no
+inter-core communication on the producer hot path — and *discard mode*: if
+the consumer cannot keep up, new events are dropped (counted) rather than
+blocking the traced application.
+
+We reproduce the architecture with per-*thread* byte rings (the Python
+analogue of per-CPU: under the GIL a thread owns its ring's write end).  The
+design is single-producer/single-consumer:
+
+  producer (traced thread)  — writes framed records at ``head``; only ever
+                              advances ``head``; never blocks; drops when full.
+  consumer (flusher daemon) — copies the committed region and advances
+                              ``tail``; never touches ``head``.
+
+``head``/``tail`` are monotonically increasing Python ints; a reader sees
+either the old or the new binding (GIL-atomic), so the committed prefix is
+always consistent.  Data is written *before* ``head`` is published, which is
+the same publish protocol as LTTng's sub-buffer commit counters.
+
+Record framing (little-endian):
+    u32  total record length (including this header)
+    u16  event id
+    u64  timestamp (monotonic ns)
+    ...  payload (per-event schema, packed by the generated tracepoints)
+"""
+
+from __future__ import annotations
+
+import struct
+import threading
+from typing import List, Optional
+
+RECORD_HEADER = struct.Struct("<IHQ")
+RECORD_HEADER_SIZE = RECORD_HEADER.size  # 14 bytes
+
+
+class RingBuffer:
+    """One SPSC byte ring. Capacity must be a power of two."""
+
+    __slots__ = (
+        "capacity",
+        "_mask",
+        "_buf",
+        "head",
+        "tail",
+        "dropped",
+        "events",
+        "pid",
+        "tid",
+        "tname",
+    )
+
+    def __init__(self, capacity: int, pid: int = 0, tid: int = 0, tname: str = ""):
+        if capacity & (capacity - 1) or capacity <= 0:
+            raise ValueError("ring capacity must be a power of two")
+        self.capacity = capacity
+        self._mask = capacity - 1
+        self._buf = bytearray(capacity)
+        self.head = 0  # producer-owned
+        self.tail = 0  # consumer-owned
+        self.dropped = 0  # producer-owned (discard-mode counter)
+        self.events = 0
+        self.pid = pid
+        self.tid = tid
+        self.tname = tname
+
+    # -- producer hot path ---------------------------------------------------
+
+    def write(self, record: bytes) -> bool:
+        """Append one framed record; drop (never block) when full."""
+        n = len(record)
+        if n > self.capacity - (self.head - self.tail):
+            self.dropped += 1
+            return False
+        h = self.head & self._mask
+        end = h + n
+        if end <= self.capacity:
+            self._buf[h:end] = record
+        else:  # wrap
+            k = self.capacity - h
+            self._buf[h:] = record[:k]
+            self._buf[: n - k] = record[k:]
+        self.head += n  # publish (single int store under the GIL)
+        self.events += 1
+        return True
+
+    # -- consumer side ---------------------------------------------------------
+
+    def drain(self) -> bytes:
+        """Copy out the committed region and release it. Consumer-only."""
+        t = self.tail
+        h = self.head  # snapshot; producer may advance after this — fine
+        n = h - t
+        if n == 0:
+            return b""
+        lo = t & self._mask
+        end = lo + n
+        if end <= self.capacity:
+            out = bytes(self._buf[lo:end])
+        else:
+            k = self.capacity - lo
+            out = bytes(self._buf[lo:]) + bytes(self._buf[: end - self.capacity])
+        self.tail = h  # release
+        return out
+
+    @property
+    def used(self) -> int:
+        return self.head - self.tail
+
+
+class RingRegistry:
+    """Tracks every thread's ring so the consumer daemon can drain them all.
+
+    Ring creation is the only locked operation (once per thread); the event
+    hot path never takes a lock — the LTTng property the paper leans on for
+    its overhead numbers (Fig 7).
+    """
+
+    def __init__(self, capacity: int, pid: int):
+        self._capacity = capacity
+        self._pid = pid
+        self._lock = threading.Lock()
+        self._rings: List[RingBuffer] = []
+        self._tls = threading.local()
+
+    def get(self) -> RingBuffer:
+        rb: Optional[RingBuffer] = getattr(self._tls, "ring", None)
+        if rb is None:
+            th = threading.current_thread()
+            rb = RingBuffer(self._capacity, pid=self._pid, tid=th.ident or 0, tname=th.name)
+            with self._lock:
+                self._rings.append(rb)
+            self._tls.ring = rb
+        return rb
+
+    def rings(self) -> List[RingBuffer]:
+        with self._lock:
+            return list(self._rings)
+
+    @property
+    def total_dropped(self) -> int:
+        return sum(r.dropped for r in self.rings())
+
+    @property
+    def total_events(self) -> int:
+        return sum(r.events for r in self.rings())

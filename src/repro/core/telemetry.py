@@ -1,0 +1,123 @@
+"""Device-sampling daemon (THAPI §3.5).
+
+THAPI's sampling framework is a daemon that polls Level-Zero Sysman counters
+(energy, frequency, memory, fabric, utilization) at a user-defined period
+(default 50 ms) and streams them into the LTTng trace.
+
+Our heterogeneous devices are JAX devices.  On TPU, ``device.memory_stats()``
+exposes HBM occupancy; on this CPU container the same call may return None,
+in which case we fall back to host counters only — the daemon architecture
+(thread + period + counter events into the trace) is identical.  Host RSS and
+CPU% stand in for the power/frequency domains that have no CPU analogue
+(DESIGN.md §2, §7).
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Callable, Optional
+
+_PAGE = os.sysconf("SC_PAGE_SIZE") if hasattr(os, "sysconf") else 4096
+
+
+def read_host_rss() -> int:
+    """Resident set size in bytes, from /proc (no psutil dependency)."""
+    try:
+        with open("/proc/self/statm") as f:
+            return int(f.read().split()[1]) * _PAGE
+    except (OSError, ValueError, IndexError):
+        return 0
+
+
+def read_device_memory(device=None) -> tuple:
+    """(in_use, peak, limit) bytes for the given (default: first) device."""
+    try:
+        import jax
+
+        dev = device if device is not None else jax.local_devices()[0]
+        stats = dev.memory_stats()
+        if stats:
+            return (
+                int(stats.get("bytes_in_use", 0)),
+                int(stats.get("peak_bytes_in_use", 0)),
+                int(stats.get("bytes_limit", 0)),
+            )
+    except Exception:
+        pass
+    return (0, 0, 0)
+
+
+class StepRateGauge:
+    """Shared gauge the trainer bumps each step; the daemon samples it.
+
+    Replaces the paper's GPU utilization domains with a framework-level
+    utilization signal (steps/s) that makes sense for a training runtime.
+    """
+
+    _lock = threading.Lock()
+    _count = 0
+    _t0 = time.monotonic()
+
+    @classmethod
+    def bump(cls, n: int = 1) -> None:
+        with cls._lock:
+            cls._count += n
+
+    @classmethod
+    def read_and_reset(cls) -> float:
+        with cls._lock:
+            t = time.monotonic()
+            dt = t - cls._t0
+            rate = cls._count / dt if dt > 0 else 0.0
+            cls._count = 0
+            cls._t0 = t
+            return rate
+
+
+class TelemetryDaemon:
+    """Sampling thread: one ``ust_thapi:sample`` counter event per period."""
+
+    def __init__(self, record: Callable, period_s: float = 0.05, device_index: int = 0):
+        self._record = record
+        self.period_s = period_s
+        self.device_index = device_index
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._last_cpu = (time.process_time(), time.monotonic())
+        self.samples = 0
+
+    def _cpu_pct(self) -> float:
+        pt, wt = time.process_time(), time.monotonic()
+        lpt, lwt = self._last_cpu
+        self._last_cpu = (pt, wt)
+        dw = wt - lwt
+        return 100.0 * (pt - lpt) / dw if dw > 0 else 0.0
+
+    def sample_once(self) -> None:
+        in_use, peak, limit = read_device_memory()
+        self._record(
+            self.device_index,
+            in_use,
+            peak,
+            limit,
+            read_host_rss(),
+            self._cpu_pct(),
+            StepRateGauge.read_and_reset(),
+        )
+        self.samples += 1
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.period_s):
+            self.sample_once()
+
+    def start(self) -> None:
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, name="thapi-sampler", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)

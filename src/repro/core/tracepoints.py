@@ -1,0 +1,188 @@
+"""Automatic tracepoint generation (THAPI §3.3, Fig 1b, Fig 3).
+
+THAPI generates the LTTng ``TRACEPOINT_EVENT`` C code and the interception
+wrappers from the API model.  We do exactly that, in Python: for every event
+type of the trace model we *generate source code* for
+
+  * a **recorder** — the tracepoint: packs the payload per the event schema
+    and writes one framed record into the calling thread's ring buffer;
+  * an **unpacker** — the inverse, used by the Babeltrace-style analysis
+    layer (and by Metababel's generated dispatchers), guaranteeing that the
+    write and read sides can never drift apart because they come from the
+    same schema.
+
+The generated recorder hot path is branch-light:
+
+    def ust_jaxrt__memcpy_entry(src, dst, nbytes, kind):
+        if not _enabled[7]: return
+        _rb = _rings.get()
+        _p = _S.pack(src, dst, nbytes, kind)
+        _rb.write(_H.pack(14 + len(_p), 7, _now()) + _p)
+
+Per-event enablement (`_enabled`, a flat list of ints) is LTTng's selective
+event activation (§3.2): the tracer flips entries per tracing mode; with no
+active session every entry is 0 and tracepoints cost one list index + branch.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Callable, Dict, List, Optional, Sequence
+
+from .api_model import FIELD_CLASSES, VARLEN, EventType, TraceModel
+from .clock import now
+from .ringbuffer import RECORD_HEADER, RECORD_HEADER_SIZE, RingRegistry
+
+_LEN = struct.Struct("<I")
+
+
+def _segments(fields) -> List:
+    """Split the field tuple into runs of fixed-size fields and varlen fields.
+
+    Returns a list of ("fixed", [Param...], struct.Struct) / ("var", Param).
+    """
+    segs: List = []
+    run = []
+    for f in fields:
+        if f.cls in VARLEN:
+            if run:
+                segs.append(("fixed", list(run)))
+                run = []
+            segs.append(("var", f))
+        else:
+            run.append(f)
+    if run:
+        segs.append(("fixed", list(run)))
+    out = []
+    for seg in segs:
+        if seg[0] == "fixed":
+            fmt = "<" + "".join(FIELD_CLASSES[p.cls] for p in seg[1])
+            out.append(("fixed", seg[1], struct.Struct(fmt)))
+        else:
+            out.append(seg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Recorder codegen
+# ---------------------------------------------------------------------------
+
+
+def codegen_recorder(ev: EventType) -> str:
+    """Source for one tracepoint function (≙ one TRACEPOINT_EVENT of Fig 3)."""
+    args = [p.name for p in ev.fields]
+    fname = ev.name.replace(":", "__")
+    lines = [f"def {fname}({', '.join(args)}):"]
+    lines.append(f"    if not _enabled[{ev.eid}]: return")
+    segs = _segments(ev.fields)
+    parts = []
+    for i, seg in enumerate(segs):
+        if seg[0] == "fixed":
+            _, params, _ = seg
+            argl = ", ".join(p.name for p in params)
+            lines.append(f"    _p{i} = _S{i}.pack({argl})")
+        else:
+            _, p = seg
+            if p.cls == "str":
+                lines.append(f"    _v{i} = {p.name}.encode() if type({p.name}) is str else bytes({p.name})")
+            else:
+                lines.append(f"    _v{i} = bytes({p.name})")
+            lines.append(f"    _p{i} = _L.pack(len(_v{i})) + _v{i}")
+        parts.append(f"_p{i}")
+    payload = " + ".join(parts) if parts else "b''"
+    lines.append(f"    _p = {payload}")
+    lines.append(
+        f"    _rings.get().write(_H.pack({RECORD_HEADER_SIZE} + len(_p), {ev.eid}, _now()) + _p)"
+    )
+    return "\n".join(lines)
+
+
+def codegen_unpacker(ev: EventType) -> str:
+    """Source for the payload unpacker (field-order tuple from a memoryview)."""
+    fname = "unpack_" + ev.name.replace(":", "__")
+    lines = [f"def {fname}(mv):", "    _o = 0", "    _out = []"]
+    for i, seg in enumerate(_segments(ev.fields)):
+        if seg[0] == "fixed":
+            _, params, st = seg
+            lines.append(f"    _out.extend(_S{i}.unpack_from(mv, _o)); _o += {st.size}")
+        else:
+            _, p = seg
+            lines.append("    _n = _L.unpack_from(mv, _o)[0]; _o += 4")
+            if p.cls == "str":
+                lines.append("    _out.append(bytes(mv[_o:_o+_n]).decode(errors='replace')); _o += _n")
+            else:
+                lines.append("    _out.append(bytes(mv[_o:_o+_n])); _o += _n")
+    lines.append("    return tuple(_out)")
+    return "\n".join(lines)
+
+
+class Tracepoints:
+    """All generated recorders/unpackers for one trace model.
+
+    ``record[name]`` — tracepoint callables keyed by event name.
+    ``unpack[eid]``  — payload unpackers keyed by event id.
+    ``enabled``      — per-event activation flags (shared with recorders).
+    """
+
+    def __init__(self, model: TraceModel):
+        self.model = model
+        self.enabled: List[int] = [0] * len(model.events)
+        self._registry_holder = _RegistryHolder()
+        self.record: Dict[str, Callable] = {}
+        self.unpack: Dict[int, Callable] = {}
+        for ev in model.events:
+            ns = {
+                "_enabled": self.enabled,
+                "_rings": self._registry_holder,
+                "_H": RECORD_HEADER,
+                "_L": _LEN,
+                "_now": now,
+            }
+            for i, seg in enumerate(_segments(ev.fields)):
+                if seg[0] == "fixed":
+                    ns[f"_S{i}"] = seg[2]
+            src = codegen_recorder(ev)
+            exec(compile(src, f"<tracepoint {ev.name}>", "exec"), ns)
+            self.record[ev.name] = ns[ev.name.replace(":", "__")]
+
+            uns = {"_L": _LEN}
+            for i, seg in enumerate(_segments(ev.fields)):
+                if seg[0] == "fixed":
+                    uns[f"_S{i}"] = seg[2]
+            usrc = codegen_unpacker(ev)
+            exec(compile(usrc, f"<unpacker {ev.name}>", "exec"), uns)
+            self.unpack[ev.eid] = uns["unpack_" + ev.name.replace(":", "__")]
+
+    # -- session binding -----------------------------------------------------
+
+    def attach(self, registry: RingRegistry, enabled_eids: Sequence[int]) -> None:
+        self._registry_holder.registry = registry
+        for eid in range(len(self.enabled)):
+            self.enabled[eid] = 0
+        for eid in enabled_eids:
+            self.enabled[eid] = 1
+
+    def detach(self) -> None:
+        for eid in range(len(self.enabled)):
+            self.enabled[eid] = 0
+        self._registry_holder.registry = None
+
+    def set_event(self, name: str, on: bool) -> None:
+        ev = self.model.by_name()[name]
+        self.enabled[ev.eid] = 1 if on else 0
+
+
+class _RegistryHolder:
+    """Indirection cell so generated code survives session swaps.
+
+    ``get()`` raises only if a recorder fires while enabled[eid]==1 but no
+    registry is attached — a tracer bug, not a user state.
+    """
+
+    __slots__ = ("registry",)
+
+    def __init__(self):
+        self.registry: Optional[RingRegistry] = None
+
+    def get(self):
+        return self.registry.get()

@@ -1,0 +1,290 @@
+"""Tracing session control (THAPI §3.2, §5.2).
+
+The tracer owns the collection side of the framework:
+
+  * **modes** — ``minimal`` / ``default`` / ``full`` (§5.2): minimal traces
+    device-side events only (kernel executions, device commands), default
+    traces everything except polling / spin-lock APIs ("non-spawned APIs"),
+    full traces everything including polled calls and argument dumps;
+  * **selective events / ranks** — per-event enable flags and a rank filter
+    ("trace specific groups of ranks in a large-scale setting", §3.2);
+  * **consumer daemon** — drains every thread's ring buffer to CTF-lite
+    streams on a period (LTTng's consumer/relay daemon), emitting
+    discarded-event records when drop counters advance;
+  * **aggregate-only mode** (§3.7) — for multi-node runs keep only the tally
+    aggregate (kilobytes) instead of the full streams.
+
+Usage (the iprof CLI wraps exactly this):
+
+    cfg = TraceConfig(out_dir="/tmp/t", mode="default", sample=True)
+    with Tracer(cfg) as tr:
+        ...traced application...
+    handle = tr.handle  # → analysis (pretty/tally/timeline)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import socket
+import sys
+import threading
+import time
+from typing import Dict, Iterable, Optional, Sequence, Set, Tuple
+
+from . import telemetry as _telemetry
+from .api_model import TraceModel, builtin_trace_model
+from .clock import ClockInfo, now
+from .ctf import StreamWriter, trace_size_bytes, write_metadata
+from .ringbuffer import RingRegistry
+from .tracepoints import Tracepoints
+
+MODES = ("minimal", "default", "full")
+
+
+@dataclasses.dataclass
+class TraceConfig:
+    out_dir: str
+    mode: str = "default"
+    sample: bool = False  # device telemetry daemon (TS-* configurations)
+    sample_period_s: float = 0.05  # paper default: 50 ms (§3.5)
+    ring_bytes: int = 1 << 22  # 4 MiB per thread
+    flush_period_s: float = 0.05
+    rank: int = 0
+    #: §3.2 — trace only these ranks (None = all). Non-selected ranks run untraced.
+    ranks: Optional[Sequence[int]] = None
+    #: §3.7 — keep only the aggregate tally, delete raw streams at stop().
+    aggregate_only: bool = False
+    #: zstd-compress CTF streams (space knob beyond Fig 8's mode ladder)
+    compress: bool = False
+    #: §6 future work, implemented: maintain a LIVE tally on the consumer
+    #: thread (read via tracer.online.snapshot() mid-run)
+    online: bool = False
+    #: extra per-event overrides applied after the mode preset, e.g.
+    #: {"ust_jaxrt:alloc_entry": False}
+    event_overrides: Optional[Dict[str, bool]] = None
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+
+
+def events_for_mode(model: TraceModel, mode: str, sample: bool) -> Set[int]:
+    """Mode → enabled event-id set (§5.2 definitions).
+
+    minimal : kernel execution + device command events (device spans).
+    default : every event except polling ("non-spawned") APIs.
+    full    : everything.
+    Telemetry counters ride on ``sample`` independent of the mode (T- vs TS-).
+    """
+    out: Set[int] = set()
+    for ev in model.events:
+        if ev.phase == "meta":
+            continue
+        if ev.provider == "ust_thapi":
+            if sample:
+                out.add(ev.eid)
+            continue
+        if mode == "minimal":
+            if ev.phase == "span":
+                out.add(ev.eid)
+        elif mode == "default":
+            if not ev.polling:
+                out.add(ev.eid)
+        else:  # full
+            out.add(ev.eid)
+    return out
+
+
+# Global tracepoints singleton over the builtin trace model. Interception
+# code references these recorder callables directly (no per-call lookups).
+_TRACEPOINTS: Optional[Tracepoints] = None
+_TP_LOCK = threading.Lock()
+
+
+def get_tracepoints() -> Tracepoints:
+    global _TRACEPOINTS
+    if _TRACEPOINTS is None:
+        with _TP_LOCK:
+            if _TRACEPOINTS is None:
+                _TRACEPOINTS = Tracepoints(builtin_trace_model())
+    return _TRACEPOINTS
+
+
+_ACTIVE: Optional["Tracer"] = None
+
+
+def active_tracer() -> Optional["Tracer"]:
+    return _ACTIVE
+
+
+@dataclasses.dataclass
+class TraceHandle:
+    """Result of a completed session, input to the analysis layer."""
+
+    trace_dir: str
+    mode: str
+    events: int
+    dropped: int
+    size_bytes: int
+    aggregate_path: Optional[str] = None
+
+
+class Tracer:
+    def __init__(self, cfg: TraceConfig, model: Optional[TraceModel] = None):
+        self.cfg = cfg
+        self.tp = get_tracepoints() if model is None else Tracepoints(model)
+        self.model = self.tp.model
+        self.clock: Optional[ClockInfo] = None
+        self.registry: Optional[RingRegistry] = None
+        self.handle: Optional[TraceHandle] = None
+        self._writers: Dict[Tuple[int, int], StreamWriter] = {}
+        self._consumer: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        self._sampler: Optional[_telemetry.TelemetryDaemon] = None
+        self._started = False
+        self.online = None  # OnlineAnalyzer when cfg.online
+        #: rank selected for tracing? (§3.2 selective rank tracing)
+        self.selected = cfg.ranks is None or cfg.rank in set(cfg.ranks)
+
+    # -- properties used by the interception layer ---------------------------
+    @property
+    def mode(self) -> str:
+        return self.cfg.mode
+
+    @property
+    def full(self) -> bool:
+        return self.cfg.mode == "full" and self.selected and self._started
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "Tracer":
+        global _ACTIVE
+        if _ACTIVE is not None:
+            raise RuntimeError("a tracing session is already active")
+        if not self.selected:
+            _ACTIVE = self  # active but disabled: recorders stay off
+            self._started = True
+            return self
+        os.makedirs(self.cfg.out_dir, exist_ok=True)
+        self.clock = ClockInfo.capture()
+        self.registry = RingRegistry(self.cfg.ring_bytes, pid=os.getpid())
+        enabled = events_for_mode(self.model, self.cfg.mode, self.cfg.sample)
+        if self.cfg.event_overrides:
+            name2ev = self.model.by_name()
+            for name, on in self.cfg.event_overrides.items():
+                eid = name2ev[name].eid
+                (enabled.add if on else enabled.discard)(eid)
+        self.tp.attach(self.registry, sorted(enabled))
+        if self.cfg.online:
+            from .online import OnlineAnalyzer
+
+            self.online = OnlineAnalyzer(self.model, self.tp)
+        self._stop_evt.clear()
+        self._consumer = threading.Thread(
+            target=self._consumer_loop, name="thapi-consumer", daemon=True
+        )
+        self._consumer.start()
+        if self.cfg.sample:
+            self._sampler = _telemetry.TelemetryDaemon(
+                record=self.tp.record["ust_thapi:sample"],
+                period_s=self.cfg.sample_period_s,
+            )
+            self._sampler.start()
+        self._started = True
+        _ACTIVE = self
+        return self
+
+    def stop(self) -> TraceHandle:
+        global _ACTIVE
+        if not self._started:
+            raise RuntimeError("tracer not started")
+        if not self.selected:
+            _ACTIVE = None
+            self._started = False
+            self.handle = TraceHandle(self.cfg.out_dir, self.cfg.mode, 0, 0, 0)
+            return self.handle
+        if self._sampler is not None:
+            self._sampler.stop()
+        self.tp.detach()  # stop producing before the final drain
+        self._stop_evt.set()
+        assert self._consumer is not None
+        self._consumer.join(timeout=10.0)
+        self._drain_once()  # final drain catches post-loop residue
+        for w in self._writers.values():
+            w.close()
+        assert self.registry is not None and self.clock is not None
+        write_metadata(
+            self.cfg.out_dir,
+            self.model,
+            self.clock,
+            env={
+                "hostname": socket.gethostname(),
+                "pid": os.getpid(),
+                "argv": sys.argv,
+                "rank": self.cfg.rank,
+                "sample": self.cfg.sample,
+            },
+            mode=self.cfg.mode,
+        )
+        events = self.registry.total_events
+        dropped = self.registry.total_dropped
+        agg_path = None
+        if self.cfg.aggregate_only:
+            agg_path = self._write_aggregate_and_prune()
+        self.handle = TraceHandle(
+            trace_dir=self.cfg.out_dir,
+            mode=self.cfg.mode,
+            events=events,
+            dropped=dropped,
+            size_bytes=trace_size_bytes(self.cfg.out_dir),
+            aggregate_path=agg_path,
+        )
+        _ACTIVE = None
+        self._started = False
+        return self.handle
+
+    def __enter__(self) -> "Tracer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- consumer daemon -------------------------------------------------------
+    def _drain_once(self) -> None:
+        assert self.registry is not None
+        for ring in self.registry.rings():
+            chunk = ring.drain()
+            key = (ring.pid, ring.tid)
+            w = self._writers.get(key)
+            if w is None:
+                path = os.path.join(self.cfg.out_dir, f"stream_{ring.pid}_{ring.tid}.ctf")
+                w = self._writers[key] = StreamWriter(
+                    path, ring.pid, ring.tid, compress=self.cfg.compress
+                )
+            w.append(chunk)
+            if self.online is not None:
+                self.online.feed(chunk, ring.pid, ring.tid)
+            w.note_drops(ring.dropped, now())
+
+    def _consumer_loop(self) -> None:
+        while not self._stop_evt.wait(self.cfg.flush_period_s):
+            self._drain_once()
+
+    # -- §3.7 aggregate-only ---------------------------------------------------
+    def _write_aggregate_and_prune(self) -> str:
+        # Imported here: analysis layer depends on tracer, not vice versa.
+        from .aggregate import save_tally
+        from .plugins.tally import tally_trace
+
+        tally = tally_trace(self.cfg.out_dir)
+        path = os.path.join(self.cfg.out_dir, f"aggregate_rank{self.cfg.rank}.tally")
+        save_tally(tally, path)
+        for name in os.listdir(self.cfg.out_dir):
+            if name.endswith(".ctf"):
+                os.unlink(os.path.join(self.cfg.out_dir, name))
+        return path
+
+
+def trace_session(out_dir: str, mode: str = "default", **kw) -> Tracer:
+    """Convenience constructor mirroring ``iprof -m <mode> --sample``."""
+    return Tracer(TraceConfig(out_dir=out_dir, mode=mode, **kw))

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticPipeline, make_eval_batch  # noqa: F401

@@ -1,0 +1,107 @@
+"""jit-ready dispatch wrappers for the Pallas kernels.
+
+Selection policy: the Pallas kernels target TPU; on this CPU container they
+run under ``interpret=True`` (validated in tests), while the default runtime
+path uses the jnp references — numerically identical, fast on CPU, and the
+dry-run lowers the same einsum structure XLA:TPU fuses well.
+
+Set ``impl="pallas"`` (or REPRO_KERNELS=pallas) to force the kernels; every
+wrapper also emits a THAPI ``ust_kernel:launch`` span with analytic FLOPs and
+bytes so traced runs attribute device time to the hot spots.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interception import kernel_span
+
+from . import ref as _ref
+
+
+def _impl(impl: Optional[str]) -> str:
+    if impl is not None:
+        return impl
+    env = os.environ.get("REPRO_KERNELS", "")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None, impl=None):
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    flops = 4 * B * H * S * T * hd // (2 if causal else 1)
+    bytes_accessed = sum(int(np.prod(t.shape)) * t.dtype.itemsize for t in (q, k, v)) * 2
+    with kernel_span("flash_attention", (B, H, S), flops, bytes_accessed):
+        if _impl(impl) == "pallas":
+            from .flash_attention import flash_attention_pallas
+
+            return flash_attention_pallas(
+                q, k, v, causal=causal, window=window, interpret=_interpret()
+            )
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def rglru(x, r, i, lam, h0=None, *, impl=None):
+    B, S, C = x.shape
+    flops = 6 * B * S * C
+    nbytes = 3 * B * S * C * x.dtype.itemsize
+    with kernel_span("rglru_scan", (B, S, C), flops, nbytes):
+        if _impl(impl) == "pallas":
+            from .rglru_scan import rglru_pallas
+
+            return rglru_pallas(x, r, i, lam, h0=h0, interpret=_interpret())
+        return _ref.rglru_ref(x, r, i, lam, h0=h0)
+
+
+def rglru_step(h, x_t, r_t, i_t, lam):
+    return _ref.rglru_step_ref(h, x_t, r_t, i_t, lam)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+
+def ssd(x, dt, A_log, Bm, Cm, D, *, chunk: int = 64, state0=None, impl=None):
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    flops = B * S * H * (2 * P * N * 3 + 2 * 64 * P)  # states + intra approx
+    nbytes = (x.size + Bm.size * 2) * x.dtype.itemsize * 2
+    with kernel_span("ssd_scan", (B, H, S // chunk), flops, nbytes):
+        if _impl(impl) == "pallas":
+            from .ssd_scan import ssd_pallas
+
+            return ssd_pallas(
+                x, dt, A_log, Bm, Cm, D, chunk=chunk, state0=state0, interpret=_interpret()
+            )
+        return _ref.ssd_ref(x, dt, A_log, Bm, Cm, D, chunk=chunk, state0=state0)
+
+
+def ssd_step(state, x_t, dt_t, A_log, B_t, C_t, D):
+    return _ref.ssd_step_ref(state, x_t, dt_t, A_log, B_t, C_t, D)
+
+
+def causal_conv1d(x, w, state=None):
+    return _ref.causal_conv1d_ref(x, w, state=state)

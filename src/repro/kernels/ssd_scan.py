@@ -1,0 +1,98 @@
+"""Pallas TPU Mamba2 SSD (state-space duality) chunked scan.
+
+TPU adaptation of the SSD algorithm: per (batch, head) the sequence is cut
+into chunks; within a chunk the quadratic "attention-like" form runs on the
+MXU ([chunk × N] · [N × chunk] and [chunk × chunk] · [chunk × P] tiles), and
+the O(1) inter-chunk state [P × N] is carried in VMEM scratch across the
+innermost grid dimension — the recurrence never leaves the core.  chunk=128,
+P=64/128, N=128 keep every matmul dimension lane/MXU aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, d_ref, y_ref, st_scr, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_scr[...] = jnp.zeros_like(st_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # [L, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # [L]
+    A = -jnp.exp(alog_ref[0].astype(jnp.float32))  # scalar
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)  # [L, N]
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)  # [L, N]
+    D = d_ref[0].astype(jnp.float32)
+
+    a = dt * A  # [L] log-decay
+    cum = jnp.cumsum(a)  # [L]
+    # intra-chunk quadratic form (lower triangular)
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    LT = jnp.where(jj <= ii, jnp.exp(seg), 0.0)
+    CB = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # [L, L]
+    W = CB * LT * dt[None, :]
+    y = jnp.dot(W, x, preferred_element_type=jnp.float32)  # [L, P]
+    # inter-chunk: contribution of the state entering this chunk
+    st = st_scr[...]  # [P, N]
+    y += jnp.exp(cum)[:, None] * jnp.dot(Cm, st.T, preferred_element_type=jnp.float32)
+    # state update for the next chunk
+    decay_to_end = jnp.exp(cum[-1] - cum)  # [L]
+    st_scr[...] = st * jnp.exp(cum[-1]) + jnp.dot(
+        (x * (dt * decay_to_end)[:, None]).T, Bm, preferred_element_type=jnp.float32
+    )
+    y += x * D
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x, dt, A_log, Bm, Cm, D, *, chunk: int = 128, state0=None, interpret: bool = False):
+    """Shapes as ssd_ref. state0 unsupported in-kernel (train path starts at 0);
+    returns (y, final_state) with final_state recomputed functionally."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    assert S % chunk == 0, f"S={S} % chunk={chunk}"
+    nc = S // chunk
+    grid = (B, H, nc)
+    kern = functools.partial(_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, ci: (b, ci, h // hpg, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, ci: (b, ci, h // hpg, 0)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A_log, Bm, Cm, D)
+    # final state: cheap O(S) reduction done outside the kernel
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    a = dt.astype(jnp.float32) * A[None, None, :]
+    cum_total = jnp.cumsum(a, axis=1)
+    decay_to_end = jnp.exp(cum_total[:, -1:, :] - cum_total)  # [B,S,H]
+    Bh = jnp.repeat(Bm.astype(jnp.float32), hpg, axis=2)
+    final = jnp.einsum(
+        "bsh,bshn,bshp->bhpn",
+        dt.astype(jnp.float32) * decay_to_end,
+        Bh,
+        x.astype(jnp.float32),
+    )
+    if state0 is not None:
+        final += state0.astype(jnp.float32) * jnp.exp(cum_total[:, -1, :])[..., None, None]
+    return y, final

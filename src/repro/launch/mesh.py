@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state — meshes are built by
+FUNCTIONS only (the dry-run sets XLA_FLAGS before any jax import; smoke
+tests and benches must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 chips per pod; 2 pods for the multi-pod dry-run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_parallel: Optional[int] = None) -> Mesh:
+    """Mesh over whatever devices are actually present (examples/trainer)."""
+    n = len(jax.devices())
+    mp = model_parallel or 1
+    if n % mp:
+        raise ValueError(f"{n} devices not divisible by model_parallel={mp}")
+    return jax.make_mesh((n // mp, mp), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+
+def describe(mesh: Mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())

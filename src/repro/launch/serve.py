@@ -1,0 +1,61 @@
+"""Serving launcher (smoke scale): batched requests through the engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
+        --requests 8 --trace full
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core import TraceConfig, Tracer
+from repro.core.plugins.tally import render, tally_trace
+from repro.models import Model
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--trace", choices=["off", "minimal", "default", "full"], default="off")
+    ap.add_argument("--trace-dir", default="/tmp/thapi_serve")
+    args = ap.parse_args(argv)
+
+    model = Model(get_config(args.arch).smoke())
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(
+        model,
+        params,
+        ServeConfig(
+            batch_slots=args.slots, cache_len=args.cache_len, max_new_tokens=args.new_tokens
+        ),
+    )
+    rng = np.random.default_rng(0)
+    tracer = None
+    if args.trace != "off":
+        tracer = Tracer(TraceConfig(out_dir=args.trace_dir, mode=args.trace)).start()
+    try:
+        for _ in range(args.requests):
+            eng.submit(rng.integers(0, model.cfg.vocab_size, size=(args.prompt_len,)))
+        done = eng.run_until_drained()
+    finally:
+        if tracer is not None:
+            tracer.stop()
+    print(f"served {len(done)} requests, {sum(len(r.out_tokens) for r in done)} tokens")
+    if tracer is not None:
+        print(render(tally_trace(args.trace_dir), top=10))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,87 @@
+"""Training launcher: ``--arch <id>`` selects an assigned architecture.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b --smoke \
+        --steps 20 --trace default --sample
+
+Full configs target the production mesh (use the dry-run on CPU); --smoke
+runs the reduced config on the local mesh end-to-end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.core import TraceConfig, Tracer
+from repro.core.plugins.tally import render, tally_trace
+from repro.models import Model, ShapeSpec
+from repro.sharding import Partitioner
+from repro.train import TrainConfig, Trainer, TrainerConfig
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config on the local mesh")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--trace", choices=["off", "minimal", "default", "full"], default="off")
+    ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--trace-dir", default="/tmp/thapi_train")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    elif len(jax.devices()) < 16:
+        print(
+            f"[train] full {args.arch} needs the production mesh; "
+            "use --smoke here or repro.launch.dryrun for the 256/512-chip lowering",
+            file=sys.stderr,
+        )
+        return 2
+
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    model = Model(cfg, mesh)
+    shape = ShapeSpec("cli", "train", args.seq, args.batch)
+    trainer = Trainer(
+        model,
+        shape,
+        Partitioner(mesh, fsdp=cfg.fsdp),
+        TrainConfig(
+            peak_lr=args.lr,
+            warmup=max(2, args.steps // 10),
+            total_steps=max(args.steps, 10),
+            microbatches=args.microbatches,
+            grad_compression=args.grad_compression,
+        ),
+        TrainerConfig(steps=args.steps, ckpt_every=max(args.steps // 2, 1), ckpt_dir=args.ckpt_dir),
+    )
+    tracer = None
+    if args.trace != "off":
+        tracer = Tracer(
+            TraceConfig(out_dir=args.trace_dir, mode=args.trace, sample=args.sample)
+        ).start()
+    try:
+        res = trainer.run()
+    finally:
+        if tracer is not None:
+            tracer.stop()
+    h = res["history"]
+    print(f"{args.arch}: loss {h[0]['loss']:.3f} → {h[-1]['loss']:.3f} in {res['steps_run']} steps")
+    if tracer is not None:
+        print(render(tally_trace(args.trace_dir), top=8))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+from .config import (  # noqa: F401
+    SHAPES,
+    EncDecConfig,
+    MoEConfig,
+    ModelConfig,
+    RGLRUConfig,
+    SSMConfig,
+    ShapeSpec,
+    applicable_shapes,
+)
+from .model import Model  # noqa: F401

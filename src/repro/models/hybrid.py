@@ -1,0 +1,308 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Block pattern (rec, rec, attn) repeats; 26 layers = 8 full groups + 2
+trailing recurrent blocks.  Full groups are scanned (stacked params); the
+remainder is unrolled — HLO stays O(pattern), not O(depth).
+
+Recurrent block: ln → [gate: W_gate→GeLU] ⊙ [W_x → causal conv1d → RG-LRU]
+→ W_o, followed by a GeGLU MLP sub-block.  RG-LRU gates are block-diagonal
+(cfg.num_heads blocks), matching RecurrentGemma's parameterization.
+Attention block: GQA (kv=1) with RoPE and a local window.
+
+Decode state: per rec block (conv tail [K-1, w], h [w]); per attn block a
+ring KV cache of the local window — O(window), which is why this arch runs
+long_500k.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+from .config import ModelConfig
+from .layers import (
+    apply_mlp,
+    apply_norm,
+    attend,
+    attn_out,
+    attn_specs,
+    cache_update,
+    embed,
+    embed_specs,
+    kv_cache_specs,
+    mlp_specs,
+    norm_spec,
+    qkv,
+)
+from .layers import unembed
+from .param import Spec
+from .transformer import _remat, model_scan
+
+
+def _w(cfg: ModelConfig) -> int:
+    return cfg.rglru.width or cfg.d_model
+
+
+def _nb(cfg: ModelConfig) -> int:
+    return max(cfg.num_heads, 1)  # RG-LRU block-diagonal head count
+
+
+def rec_specs(cfg: ModelConfig, stacked: int = 0) -> dict:
+    d, w, nb = cfg.d_model, _w(cfg), _nb(cfg)
+    bs = w // nb
+    K = cfg.rglru.d_conv
+    lead = (stacked,) if stacked else ()
+    lax = ("layers",) if stacked else ()
+    return {
+        "w_gate": Spec(lead + (d, w), lax + ("embed", "channels")),
+        "w_x": Spec(lead + (d, w), lax + ("embed", "channels")),
+        "conv_w": Spec(lead + (K, w), lax + ("conv", "channels")),
+        "w_r": Spec(lead + (nb, bs, bs), lax + ("channels", None, None)),
+        "b_r": Spec(lead + (w,), lax + ("channels",), "zeros"),
+        "w_i": Spec(lead + (nb, bs, bs), lax + ("channels", None, None)),
+        "b_i": Spec(lead + (w,), lax + ("channels",), "zeros"),
+        "lam": Spec(lead + (w,), lax + ("channels",), "lru_a"),
+        "w_o": Spec(lead + (w, d), lax + ("channels", "embed")),
+    }
+
+
+def _block_specs(cfg: ModelConfig, kind: str, stacked: int = 0) -> dict:
+    s = {
+        "ln1": norm_spec(cfg, stacked=stacked or None),
+        "ln2": norm_spec(cfg, stacked=stacked or None),
+        "mlp": mlp_specs(cfg, stacked=stacked or None),
+    }
+    if kind == "rec":
+        s["rec"] = rec_specs(cfg, stacked)
+    else:
+        s["attn"] = attn_specs(cfg, stacked=stacked or None)
+    return s
+
+
+def layout(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """(pattern, full groups, remainder kinds)."""
+    pat = cfg.rglru.pattern
+    g, r = divmod(cfg.num_layers, len(pat))
+    return pat, g, pat[:r]
+
+
+def specs(cfg: ModelConfig) -> dict:
+    assert cfg.rglru is not None
+    pat, g, rem = layout(cfg)
+    return {
+        "embed": embed_specs(cfg),
+        "groups": {f"b{i}_{kind}": _block_specs(cfg, kind, stacked=g) for i, kind in enumerate(pat)},
+        "tail": [_block_specs(cfg, kind) for kind in rem],
+        "ln_f": norm_spec(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block applications
+# ---------------------------------------------------------------------------
+
+
+def _blockdiag(x, W, b):
+    """x: [B,S,w] → block-diagonal linear with W [nb, bs, bs]."""
+    B, S, w = x.shape
+    nb, bs, _ = W.shape
+    y = jnp.einsum("bsnk,nkj->bsnj", x.reshape(B, S, nb, bs), W)
+    return y.reshape(B, S, w) + b
+
+
+def rec_mix(cfg: ModelConfig, p: dict, h, state=None):
+    """RG-LRU temporal mixer. state: None | (conv_tail, h_rec)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, p["w_gate"]))
+    xs = jnp.einsum("bsd,dw->bsw", h, p["w_x"])
+    conv_state = None if state is None else state[0]
+    xs, conv_tail = kops.causal_conv1d(xs, p["conv_w"], state=conv_state)
+    r = _blockdiag(xs, p["w_r"], p["b_r"])
+    i = _blockdiag(xs, p["w_i"], p["b_i"])
+    h0 = None if state is None else state[1]
+    y, h_last = kops.rglru(xs, r, i, p["lam"], h0=h0)
+    y = y * gate
+    return jnp.einsum("bsw,wd->bsd", y, p["w_o"]), (conv_tail, h_last)
+
+
+def apply_block(cfg: ModelConfig, kind: str, p: dict, x, positions):
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "rec":
+        y, _ = rec_mix(cfg, p["rec"], h)
+        x = x + y
+    else:
+        q, k, v = qkv(cfg, p["attn"], h, positions)
+        ctx = attend(q, k, v, causal=True, window=cfg.rglru.local_window)
+        x = x + attn_out(p["attn"], ctx)
+    h = apply_norm(cfg, p["ln2"], x)
+    return x + apply_mlp(cfg, p["mlp"], h)
+
+
+def forward_train(cfg: ModelConfig, params: dict, batch: dict):
+    x = embed(params["embed"], batch["tokens"])
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    pat, g, rem = layout(cfg)
+
+    def group_body(h, pg):
+        for i, kind in enumerate(pat):
+            h = apply_block(cfg, kind, pg[f"b{i}_{kind}"], h, positions)
+        return h, None
+
+    if g:
+        x, _ = model_scan(cfg, _remat(cfg, group_body), x, params["groups"])
+    for kind, p in zip(rem, params["tail"]):
+        x = apply_block(cfg, kind, p, x, positions)
+    x = apply_norm(cfg, params["ln_f"], x)
+    return unembed(cfg, params["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def _rec_state_specs(cfg: ModelConfig, batch: int, stacked: int = 0) -> dict:
+    w, K = _w(cfg), cfg.rglru.d_conv
+    lead = (stacked,) if stacked else ()
+    lax = ("layers",) if stacked else ()
+    return {
+        "conv": Spec(lead + (batch, K - 1, w), lax + ("batch", None, "channels"), "zeros"),
+        "h": Spec(lead + (batch, w), lax + ("batch", "channels"), "zeros"),
+    }
+
+
+def _attn_cache_specs(cfg: ModelConfig, batch: int, stacked: int = 0) -> dict:
+    win = cfg.rglru.local_window
+    Kv, hd = cfg.padded_kv_heads, cfg.head_dim_
+    lead = (stacked,) if stacked else ()
+    lax = ("layers",) if stacked else ()
+    return {
+        "k": Spec(lead + (batch, win, Kv, hd), lax + ("batch", "seq", "kv_heads", "head_dim"), "zeros"),
+        "v": Spec(lead + (batch, win, Kv, hd), lax + ("batch", "seq", "kv_heads", "head_dim"), "zeros"),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    pat, g, rem = layout(cfg)
+    groups = {}
+    for i, kind in enumerate(pat):
+        groups[f"b{i}_{kind}"] = (
+            _rec_state_specs(cfg, batch, stacked=g)
+            if kind == "rec"
+            else _attn_cache_specs(cfg, batch, stacked=g)
+        )
+    tail = [
+        _rec_state_specs(cfg, batch) if kind == "rec" else _attn_cache_specs(cfg, batch)
+        for kind in rem
+    ]
+    return {
+        "groups": groups,
+        "tail": tail,
+        "len": Spec((batch,), ("batch",), "zeros", dtype="int32"),
+    }
+
+
+def _prefill_block(cfg, kind, p, x, positions, eff):
+    """Apply block and return its serving state."""
+    S = x.shape[1]
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "rec":
+        y, (conv_tail, h_last) = rec_mix(cfg, p["rec"], h)
+        x = x + y
+        st = {"conv": conv_tail, "h": h_last}
+    else:
+        q, k, v = qkv(cfg, p["attn"], h, positions)
+        ctx = attend(q, k, v, causal=True, window=cfg.rglru.local_window)
+        x = x + attn_out(p["attn"], ctx)
+        if S >= eff:
+            kk, vv = k[:, -eff:], v[:, -eff:]
+            if S > eff:
+                kk = jnp.roll(kk, S % eff, axis=1)
+                vv = jnp.roll(vv, S % eff, axis=1)
+        else:
+            pad = [(0, 0), (0, eff - S), (0, 0), (0, 0)]
+            kk, vv = jnp.pad(k, pad), jnp.pad(v, pad)
+        st = {"k": kk, "v": vv}
+    h = apply_norm(cfg, p["ln2"], x)
+    return x + apply_mlp(cfg, p["mlp"], h), st
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, cache_len: int):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    eff = min(cache_len, cfg.rglru.local_window)
+    x = embed(params["embed"], tokens)
+    positions = jnp.arange(S)[None, :]
+    pat, g, rem = layout(cfg)
+
+    def group_body(h, pg):
+        sts = {}
+        for i, kind in enumerate(pat):
+            key = f"b{i}_{kind}"
+            h, st = _prefill_block(cfg, kind, pg[key], h, positions, eff)
+            sts[key] = st
+        return h, sts
+
+    groups_cache = {}
+    if g:
+        x, groups_cache = model_scan(cfg, _remat(cfg, group_body), x, params["groups"])
+    tail_cache = []
+    for kind, p in zip(rem, params["tail"]):
+        x, st = _prefill_block(cfg, kind, p, x, positions, eff)
+        tail_cache.append(st)
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = unembed(cfg, params["embed"], x[:, -1:])
+    return logits, {
+        "groups": groups_cache,
+        "tail": tail_cache,
+        "len": jnp.full((B,), S, jnp.int32),
+    }
+
+
+def _decode_block(cfg, kind, p, x, lengths, st):
+    positions = lengths[:, None]
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "rec":
+        y, (conv_tail, h_new) = rec_mix(cfg, p["rec"], h, state=(st["conv"], st["h"]))
+        x = x + y
+        st = {"conv": conv_tail, "h": h_new}
+    else:
+        q, k, v = qkv(cfg, p["attn"], h, positions)
+        ck, cv = cache_update(st["k"], st["v"], k, v, lengths, cfg.rglru.local_window)
+        kv_valid = jnp.minimum(lengths + 1, ck.shape[1])
+        ctx = attend(q, ck, cv, causal=False, kv_len=kv_valid)
+        x = x + attn_out(p["attn"], ctx)
+        st = {"k": ck, "v": cv}
+    h = apply_norm(cfg, p["ln2"], x)
+    return x + apply_mlp(cfg, p["mlp"], h), st
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, batch: dict):
+    token = batch["token"]
+    lengths = cache["len"]
+    x = embed(params["embed"], token[:, None])
+    pat, g, rem = layout(cfg)
+
+    def group_body(h, inputs):
+        pg, cg = inputs
+        new = {}
+        for i, kind in enumerate(pat):
+            key = f"b{i}_{kind}"
+            h, st = _decode_block(cfg, kind, pg[key], h, lengths, cg[key])
+            new[key] = st
+        return h, new
+
+    groups_new = cache["groups"]
+    if g:
+        x, groups_new = model_scan(cfg, group_body, x, (params["groups"], cache["groups"]))
+    tail_new = []
+    for kind, p, st in zip(rem, params["tail"], cache["tail"]):
+        x, st2 = _decode_block(cfg, kind, p, x, lengths, st)
+        tail_new.append(st2)
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = unembed(cfg, params["embed"], x)
+    return logits, {"groups": groups_new, "tail": tail_new, "len": lengths + 1}

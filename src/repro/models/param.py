@@ -1,0 +1,86 @@
+"""Parameter spec trees: one declaration drives init, shapes, and sharding.
+
+A model declares its parameters as a pytree of :class:`Spec` leaves.  From
+that single declaration we derive:
+
+  * ``init(tree, rng)``     — materialized arrays (smoke tests, real training)
+  * ``shapes(tree)``        — ShapeDtypeStructs (dry-run: lower without alloc)
+  * ``axes(tree)``          — logical-axis tuples (sharding/partition.py)
+
+This keeps the 10-arch zoo honest: the dry-run lowers exactly the shapes the
+trainer would allocate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | lru_a
+    scale: float = 0.02
+    dtype: Optional[str] = None  # override model dtype
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} rank mismatch")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def shapes(tree, dtype: str):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or dtype)),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def axes(tree):
+    return jax.tree_util.tree_map(lambda s: s.axes, tree, is_leaf=is_spec)
+
+
+def _init_leaf(s: Spec, key, dtype: str):
+    dt = jnp.dtype(s.dtype or dtype)
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dt)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dt)
+    if s.init == "lru_a":
+        # RG-LRU Λ init: a in [0.9, 0.999] → Λ = softplus^-1(-log(a)/c)
+        u = jax.random.uniform(key, s.shape, jnp.float32, 0.9, 0.999)
+        c = 8.0
+        lam = jnp.log(jnp.expm1(-jnp.log(u) / c))
+        return lam.astype(dt)
+    if s.init == "ssm_a":
+        # Mamba2 A init: -uniform[1, 16], stored as log
+        u = jax.random.uniform(key, s.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dt)
+    if s.init == "ssm_dt":
+        # dt bias ~ softplus^-1(uniform[1e-3, 1e-1])
+        u = jax.random.uniform(key, s.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dt)
+    return (jax.random.normal(key, s.shape, jnp.float32) * s.scale).astype(dt)
+
+
+def init(tree, rng, dtype: str):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def count(tree) -> int:
+    return sum(
+        int(np.prod(s.shape)) for s in jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    )

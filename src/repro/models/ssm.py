@@ -1,0 +1,181 @@
+"""Mamba2 (SSD — state-space duality) attention-free LM.
+
+Block: RMSNorm → {z, x, B, C, dt} projections → causal depthwise conv on
+(x|B|C) → SSD chunked scan (kernels.ops.ssd) → gated RMSNorm → out proj.
+Decode carries (conv tail, SSM state) — O(1) in sequence length, which is
+why this arch runs the long_500k shape.
+
+Sharding: SSD heads over "model" (64 heads / 16 = 4), projections
+column/row-parallel, conv channels over "model".
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+from .config import ModelConfig
+from .layers import embed, embed_specs, norm_spec, rmsnorm, unembed
+from .param import Spec
+from .transformer import _remat, model_scan
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return di, nh, s.n_groups, s.d_state, conv_ch
+
+
+def specs(cfg: ModelConfig) -> dict:
+    assert cfg.ssm is not None
+    L, d = cfg.num_layers, cfg.d_model
+    di, nh, G, N, conv_ch = _dims(cfg)
+    K = cfg.ssm.d_conv
+    return {
+        "embed": embed_specs(cfg),
+        "blocks": {
+            "ln": norm_spec(cfg, stacked=L),
+            "wz": Spec((L, d, di), ("layers", "embed", "channels")),
+            "wx": Spec((L, d, di), ("layers", "embed", "channels")),
+            "wB": Spec((L, d, G * N), ("layers", "embed", "state")),
+            "wC": Spec((L, d, G * N), ("layers", "embed", "state")),
+            "wdt": Spec((L, d, nh), ("layers", "embed", "ssm_heads")),
+            "conv_w": Spec((L, K, conv_ch), ("layers", "conv", "channels")),
+            "A_log": Spec((L, nh), ("layers", "ssm_heads"), "ssm_a"),
+            "D": Spec((L, nh), ("layers", "ssm_heads"), "ones"),
+            "dt_bias": Spec((L, nh), ("layers", "ssm_heads"), "ssm_dt"),
+            "norm_g": Spec((L, di), ("layers", "channels"), "zeros"),
+            "wo": Spec((L, di, d), ("layers", "channels", "embed")),
+        },
+        "ln_f": norm_spec(cfg),
+    }
+
+
+def _mix(cfg: ModelConfig, p: dict, h, conv_state=None):
+    """Projections + conv; returns (z, xs, Bm, Cm, dt, new conv tail)."""
+    di, nh, G, N, conv_ch = _dims(cfg)
+    z = jnp.einsum("bsd,de->bse", h, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", h, p["wx"])
+    Bm = jnp.einsum("bsd,de->bse", h, p["wB"])
+    Cm = jnp.einsum("bsd,de->bse", h, p["wC"])
+    dtl = jnp.einsum("bsd,dh->bsh", h, p["wdt"])
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xbc, conv_tail = kops.causal_conv1d(xbc, p["conv_w"], state=conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    dt = jax.nn.softplus(dtl.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xs, Bm, Cm, dt, conv_tail
+
+
+def block(cfg: ModelConfig, p: dict, x):
+    di, nh, G, N, _ = _dims(cfg)
+    B, S, _ = x.shape
+    h = rmsnorm(x, p["ln"]["w"])
+    z, xs, Bm, Cm, dt, _ = _mix(cfg, p, h)
+    y, _ = kops.ssd(
+        xs.reshape(B, S, nh, cfg.ssm.head_dim),
+        dt,
+        p["A_log"],
+        Bm.reshape(B, S, G, N),
+        Cm.reshape(B, S, G, N),
+        p["D"],
+        chunk=min(cfg.ssm.chunk, S),
+    )
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm_g"])
+    return x + jnp.einsum("bse,ed->bsd", y, p["wo"])
+
+
+def forward_train(cfg: ModelConfig, params: dict, batch: dict):
+    x = embed(params["embed"], batch["tokens"])
+    body = _remat(cfg, lambda h, pl: (block(cfg, pl, h), None))
+    x, _ = model_scan(cfg, body, x, params["blocks"])
+    x = rmsnorm(x, params["ln_f"]["w"])
+    return unembed(cfg, params["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# Serving: recurrent state instead of a KV cache
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    """State is O(1) in cache_len — the whole point of the SSM family."""
+    L = cfg.num_layers
+    di, nh, G, N, conv_ch = _dims(cfg)
+    K = cfg.ssm.d_conv
+    return {
+        "conv": Spec((L, batch, K - 1, conv_ch), ("layers", "batch", None, "channels"), "zeros"),
+        "state": Spec(
+            (L, batch, nh, cfg.ssm.head_dim, N),
+            ("layers", "batch", "ssm_heads", None, None),
+            "zeros",
+        ),
+        "len": Spec((batch,), ("batch",), "zeros", dtype="int32"),
+    }
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, cache_len: int):
+    tokens = batch["tokens"]
+    di, nh, G, N, _ = _dims(cfg)
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+
+    def body(h, pl):
+        hn = rmsnorm(h, pl["ln"]["w"])
+        z, xs, Bm, Cm, dt, conv_tail = _mix(cfg, pl, hn)
+        y, st = kops.ssd(
+            xs.reshape(B, S, nh, cfg.ssm.head_dim),
+            dt,
+            pl["A_log"],
+            Bm.reshape(B, S, G, N),
+            Cm.reshape(B, S, G, N),
+            pl["D"],
+            chunk=min(cfg.ssm.chunk, S),
+        )
+        y = y.reshape(B, S, di)
+        y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), pl["norm_g"])
+        h = h + jnp.einsum("bse,ed->bsd", y, pl["wo"])
+        return h, (conv_tail, st.astype(x.dtype))
+
+    x, (convs, states) = model_scan(cfg, _remat(cfg, body), x, params["blocks"])
+    x = rmsnorm(x, params["ln_f"]["w"])
+    logits = unembed(cfg, params["embed"], x[:, -1:])
+    cache = {"conv": convs, "state": states, "len": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, batch: dict):
+    token = batch["token"]
+    di, nh, G, N, _ = _dims(cfg)
+    B = token.shape[0]
+    x = embed(params["embed"], token[:, None])
+
+    def body(h, inputs):
+        pl, conv_st, ssm_st = inputs
+        hn = rmsnorm(h, pl["ln"]["w"])
+        z, xs, Bm, Cm, dt, conv_tail = _mix(cfg, pl, hn, conv_state=conv_st)
+        y, ssm_new = kops.ssd_step(
+            ssm_st.astype(jnp.float32),
+            xs[:, 0].reshape(B, nh, cfg.ssm.head_dim),
+            dt[:, 0],
+            pl["A_log"],
+            Bm[:, 0].reshape(B, G, N),
+            Cm[:, 0].reshape(B, G, N),
+            pl["D"],
+        )
+        y = y.reshape(B, 1, di)
+        y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), pl["norm_g"])
+        h = h + jnp.einsum("bse,ed->bsd", y, pl["wo"])
+        return h, (conv_tail, ssm_new.astype(h.dtype))
+
+    x, (convs, states) = model_scan(cfg, body, x, (params["blocks"], cache["conv"], cache["state"]))
+    x = rmsnorm(x, params["ln_f"]["w"])
+    logits = unembed(cfg, params["embed"], x)
+    return logits, {"conv": convs, "state": states, "len": cache["len"] + 1}

@@ -1,0 +1,161 @@
+"""Dense decoder-only LM (llama/qwen/mistral/stablelm/h2o-danube families)
+plus the VLM variant (llava-next: stub patch embeddings prepended).
+
+Layers are stacked and scanned (jax.lax.scan) so the HLO stays O(1) in depth
+— essential for compiling 88-layer configs in the dry-run.  Remat policy is
+applied to the scanned block body.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    apply_mlp,
+    apply_norm,
+    attend,
+    attend_cfg,
+    attn_out,
+    attn_specs,
+    cache_update,
+    embed,
+    embed_specs,
+    kv_cache_specs,
+    mlp_specs,
+    norm_spec,
+    qkv,
+    rope,
+    unembed,
+)
+from .param import Spec
+
+
+def model_scan(cfg: ModelConfig, body, init, xs):
+    """lax.scan over layer stacks; unrolled for roofline extrapolation."""
+    return jax.lax.scan(body, init, xs, unroll=cfg.num_layers if cfg.scan_unroll else 1)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def specs(cfg: ModelConfig) -> dict:
+    L = cfg.num_layers
+    return {
+        "embed": embed_specs(cfg),
+        "blocks": {
+            "attn": attn_specs(cfg, stacked=L),
+            "mlp": mlp_specs(cfg, stacked=L),
+            "ln1": norm_spec(cfg, stacked=L),
+            "ln2": norm_spec(cfg, stacked=L),
+        },
+        "ln_f": norm_spec(cfg),
+    }
+
+
+def block(cfg: ModelConfig, p: dict, x, positions):
+    h = apply_norm(cfg, p["ln1"], x)
+    q, k, v = qkv(cfg, p["attn"], h, positions)
+    ctx = attend_cfg(cfg, q, k, v, causal=True, window=cfg.sliding_window)
+    x = x + attn_out(p["attn"], ctx)
+    h = apply_norm(cfg, p["ln2"], x)
+    return x + apply_mlp(cfg, p["mlp"], h)
+
+
+def hidden_states(cfg: ModelConfig, params: dict, x, positions):
+    body = _remat(cfg, lambda h, pl: (block(cfg, pl, h, positions), None))
+    x, _ = model_scan(cfg, body, x, params["blocks"])
+    return apply_norm(cfg, params["ln_f"], x)
+
+
+def forward_train(cfg: ModelConfig, params: dict, batch: dict):
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens)
+    if cfg.vision_tokens:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    x = hidden_states(cfg, params, x, positions)
+    return unembed(cfg, params["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode against a KV cache
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    return kv_cache_specs(cfg, batch, cache_len, cfg.num_layers)
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, cache_len: int):
+    """Run the prompt, return last-position logits + a filled KV cache."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens)
+    if cfg.vision_tokens:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    eff = cache_len if cfg.sliding_window is None else min(cache_len, cfg.sliding_window)
+    positions = jnp.arange(S)[None, :]
+
+    def body(h, pl):
+        hn = apply_norm(cfg, pl["ln1"], h)
+        q, k, v = qkv(cfg, pl["attn"], hn, positions)
+        ctx = attend_cfg(cfg, q, k, v, causal=True, window=cfg.sliding_window)
+        h = h + attn_out(pl["attn"], ctx)
+        hn = apply_norm(cfg, pl["ln2"], h)
+        h = h + apply_mlp(cfg, pl["mlp"], hn)
+        # keep the last `eff` positions (post-RoPE K, ready for ring decode)
+        if S >= eff:
+            k_keep, v_keep = k[:, -eff:], v[:, -eff:]
+            if cfg.sliding_window is not None and S > eff:
+                # ring layout: slot of position p is p % eff
+                k_keep = jnp.roll(k_keep, S % eff, axis=1)
+                v_keep = jnp.roll(v_keep, S % eff, axis=1)
+        else:  # room to grow: fill slots [0, S), zero the tail
+            pad = [(0, 0), (0, eff - S), (0, 0), (0, 0)]
+            k_keep, v_keep = jnp.pad(k, pad), jnp.pad(v, pad)
+        return h, (k_keep, v_keep)
+
+    x, (ks, vs) = model_scan(cfg, _remat(cfg, body), x, params["blocks"])
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = unembed(cfg, params["embed"], x[:, -1:])
+    cache = {"k": ks, "v": vs, "len": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, batch: dict):
+    """One new token against the cache; returns (logits, new cache)."""
+    token = batch["token"]  # [B]
+    B = token.shape[0]
+    lengths = cache["len"]  # absolute #tokens generated so far
+    x = embed(params["embed"], token[:, None])  # [B, 1, d]
+    positions = lengths[:, None]
+
+    def body(h, inputs):
+        pl, ck, cv = inputs
+        hn = apply_norm(cfg, pl["ln1"], h)
+        q, k, v = qkv(cfg, pl["attn"], hn, positions)
+        ck, cv = cache_update(ck, cv, k, v, lengths, cfg.sliding_window)
+        kv_valid = jnp.minimum(lengths + 1, ck.shape[1])
+        ctx = attend(q, ck, cv, causal=False, q_offset=None, kv_len=kv_valid)
+        h = h + attn_out(pl["attn"], ctx)
+        hn = apply_norm(cfg, pl["ln2"], h)
+        h = h + apply_mlp(cfg, pl["mlp"], hn)
+        return h, (ck, cv)
+
+    x, (ks, vs) = model_scan(cfg, body, x, (params["blocks"], cache["k"], cache["v"]))
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = unembed(cfg, params["embed"], x)
+    return logits, {"k": ks, "v": vs, "len": lengths + 1}

@@ -1,0 +1,63 @@
+"""Gradient compression for the data-parallel reduction.
+
+Two wire formats, both usable inside the shard_map gradient reduction so the
+*compressed* representation is what crosses the ICI/DCN links (visible as s8
+all-gathers in the dry-run HLO — the roofline's collective term shrinks ~2×
+for bf16→int8):
+
+  * ``quantize_int8`` — per-block absmax int8 quantization (block = last-dim
+    rows), error-feedback-free (unbiased enough for DP-mean);
+  * ``topk_sparsify`` — magnitude top-k with index+value payloads, for the
+    sparser inter-pod (DCN) hop.
+
+``compressed_mean`` is the drop-in replacement for ``lax.pmean`` over the
+data axes: quantize locally → all_gather(int8 + scales) → dequantize → mean.
+all_gather moves ~half the bytes of the bf16 psum and the accumulate happens
+in f32 locally (no int overflow).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [...,] → (int8 values, f32 per-row scales). Rows = leading dims."""
+    xf = x.astype(jnp.float32)
+    flat = xf.reshape(-1, xf.shape[-1]) if xf.ndim > 1 else xf.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    if x.ndim > 1:
+        return q.reshape(x.shape), scale.reshape(x.shape[:-1] + (1,))
+    return q.reshape(-1), scale.reshape((1,))
+
+
+def dequantize_int8(q, scale) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Keep the k largest-magnitude entries (flattened); returns (values, idx)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_densify(vals, idx, size: int) -> jnp.ndarray:
+    return jnp.zeros((size,), jnp.float32).at[idx].set(vals)
+
+
+def compressed_mean(x, axis_name) -> jnp.ndarray:
+    """int8-compressed mean over a mesh axis (shard_map context only).
+
+    Wire bytes: ~1 byte/elem (+ scales) vs 2 (bf16) / 4 (f32) for pmean.
+    """
+    q, scale = quantize_int8(x)
+    qg = jax.lax.all_gather(q, axis_name)  # s8 on the wire
+    sg = jax.lax.all_gather(scale, axis_name)
+    deq = qg.astype(jnp.float32) * sg
+    return jnp.mean(deq, axis=0).astype(x.dtype)

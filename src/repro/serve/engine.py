@@ -1,0 +1,173 @@
+"""Batched serving engine: prefill + continuous decode over slot batches.
+
+The engine owns a fixed slot batch (decode efficiency demands static shapes
+on TPU).  Requests queue; a slot is (re)filled by running prefill for the
+incoming prompt and splicing its cache row into the live batch cache; every
+``step()`` decodes one token for all active slots.  Both phases run through
+THAPI ``prefill``/``decode_step`` spans — the serving tally of §4.3.
+
+The decode step is a TracedJit with explicit cache shardings (batch over the
+data axes, heads over model), donated cache — the same artifact the dry-run
+lowers for the decode_32k / long_500k shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.interception import TracedJit, decode_step_span, prefill_span
+from repro.models import Model, ShapeSpec
+from repro.models.param import axes as spec_axes, init as spec_init, shapes as spec_shapes
+from repro.sharding import Partitioner
+from repro.train.train_step import _tree_pspecs
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 4
+    cache_len: int = 128
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: length-only stopping (synthetic serving)
+    greedy: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        cfg: ServeConfig,
+        partitioner: Optional[Partitioner] = None,
+    ):
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.partitioner = partitioner
+        self._rid = itertools.count()
+        B = cfg.batch_slots
+        shape = ShapeSpec("serve", "decode", cfg.cache_len, B)
+        cache_specs = model.cache_specs(shape)
+        self._cache_shapes = spec_shapes(cache_specs, model.cfg.dtype)
+        cache_shardings = None
+        if partitioner is not None:
+            pspecs = _tree_pspecs(partitioner, self._cache_shapes, spec_axes(cache_specs))
+            cache_shardings = jax.tree_util.tree_map(
+                lambda ps: NamedSharding(partitioner.mesh, ps),
+                pspecs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        self.cache = spec_init(cache_specs, jax.random.PRNGKey(0), model.cfg.dtype)
+        self.cache = jax.tree_util.tree_map(jnp.zeros_like, self.cache)
+        if cache_shardings is not None:
+            self.cache = jax.device_put(self.cache, cache_shardings)
+        self._decode = TracedJit(
+            lambda p, c, b: model.decode_step(p, c, b),
+            name=f"decode_step[{model.cfg.name}]",
+            donate_argnums=(1,),
+            out_shardings=(None, cache_shardings),
+            flops=2 * model.cfg.active_params() * B,
+        )
+        self.slots: List[Optional[Request]] = [None] * B
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        self._tok = jnp.zeros((B,), jnp.int32)
+        self._prefill_jits: Dict[int, TracedJit] = {}
+
+    # -- request intake -----------------------------------------------------------
+    def submit(self, prompt: np.ndarray) -> Request:
+        r = Request(rid=next(self._rid), prompt=np.asarray(prompt, np.int32))
+        self.queue.append(r)
+        return r
+
+    def _fill_slots(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is not None or not self.queue:
+                continue
+            r = self.queue.pop(0)
+            self._prefill_into(i, r)
+            self.slots[i] = r
+
+    def _prefill_into(self, slot: int, r: Request) -> None:
+        """Prefill a single prompt, splice its cache row into the live batch."""
+        toks = r.prompt[None, :]
+        with prefill_span(r.rid, 1, int(toks.shape[1])):
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.model.cfg.family == "audio":
+                batch["frames"] = jnp.zeros(
+                    (1, self.model.cfg.encdec.enc_positions, self.model.cfg.d_model),
+                    self.cache_dtype(),
+                )
+            S = int(toks.shape[1])
+            if S not in self._prefill_jits:  # one compile per prompt length
+                self._prefill_jits[S] = TracedJit(
+                    lambda p, b: self.model.prefill(p, b, self.cfg.cache_len),
+                    name=f"prefill[{self.model.cfg.name}/S{S}]",
+                )
+            logits, row = self._prefill_jits[S](self.params, batch)
+        first = int(jnp.argmax(logits[0, 0, : self.model.cfg.vocab_size]))
+        r.out_tokens.append(first)
+        self._tok = self._tok.at[slot].set(first)
+        self.cache = jax.tree_util.tree_map(
+            lambda c, v: self._splice(c, v, slot), self.cache, row
+        )
+
+    def cache_dtype(self):
+        return jnp.bfloat16 if self.model.cfg.dtype == "bfloat16" else jnp.float32
+
+    @staticmethod
+    def _splice(cache_leaf, row_leaf, slot: int):
+        """Insert the size-1-batch prefill row at slot. Batch axis is the one
+        where the shapes differ (layers lead; batch follows)."""
+        for ax in range(cache_leaf.ndim):
+            if row_leaf.shape[ax] == 1 and cache_leaf.shape[ax] != 1:
+                idx = [slice(None)] * cache_leaf.ndim
+                idx[ax] = slice(slot, slot + 1)
+                return cache_leaf.at[tuple(idx)].set(row_leaf.astype(cache_leaf.dtype))
+        # scalar-per-batch leaves (e.g. len)
+        return cache_leaf.at[slot].set(row_leaf.reshape(-1)[0].astype(cache_leaf.dtype))
+
+    # -- decode loop -----------------------------------------------------------------
+    def step(self) -> int:
+        """One batched decode step; returns #active slots."""
+        self._fill_slots()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        rid = self.slots[active[0]].rid
+        with decode_step_span(rid, len(active), self.cfg.cache_len) as sp:
+            logits, self.cache = self._decode(self.params, self.cache, {"token": self._tok})
+            nxt = jnp.argmax(
+                logits[:, 0, : self.model.cfg.vocab_size], axis=-1
+            ).astype(jnp.int32)
+            sp.outs["tokens_out"] = len(active)
+        self._tok = nxt
+        host = np.asarray(nxt)
+        for i in active:
+            r = self.slots[i]
+            r.out_tokens.append(int(host[i]))
+            if len(r.out_tokens) >= self.cfg.max_new_tokens or int(host[i]) == self.cfg.eos_id:
+                r.done = True
+                self.completed.append(r)
+                self.slots[i] = None
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return self.completed

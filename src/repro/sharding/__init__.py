@@ -1,0 +1,5 @@
+from .partition import (  # noqa: F401
+    LOGICAL_RULES,
+    Partitioner,
+    logical_to_pspec,
+)

@@ -1,0 +1,174 @@
+"""Logical-axis partitioning: logical names → mesh PartitionSpec.
+
+Every parameter/activation in the model zoo is annotated with *logical axes*
+(("layers", "embed", "heads", "head_dim") …).  This module maps them onto the
+production mesh ("pod", "data", "model") with divisibility-aware fallback:
+if a dimension doesn't divide over the mesh axes of its rule, the rule falls
+back to a prefix of those axes (and ultimately replication) rather than
+failing to lower — head counts like 40 or 56 simply don't divide a 16-way
+model axis, and the correct baseline is replication, not padding (the
+hillclimb in EXPERIMENTS §Perf quantifies what padding would buy back).
+
+Sharding modes:
+  tp    — Megatron-style: weights sharded over "model" (heads/ffn/vocab/
+          experts/channels); batch over ("pod","data").
+  fsdp  — ZeRO-3-ish: additionally shards the "embed" dimension of weights
+          over ("pod","data"), so parameters and optimizer state scale with
+          the full device count (required for the 1T-param kimi config).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# logical axis → mesh axes (tried in order; longest dividing prefix wins)
+LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
+    # data-parallel axes
+    "batch": ("pod", "data"),
+    # tensor-parallel axes
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "channels": ("model",),  # RG-LRU / SSM channel dims
+    "ssm_heads": ("model",),
+    # sequence parallelism (activations only; enabled for long shapes)
+    "seq_sp": ("model",),
+    # replicated by default
+    "embed": (),
+    "layers": (),
+    "seq": (),
+    "head_dim": (),
+    "state": (),
+    "expert_mlp": (),
+    "conv": (),
+}
+
+FSDP_OVERRIDES: Dict[str, Tuple[str, ...]] = {
+    # ZeRO-3: weight "embed" dims sharded over the data axes too
+    "embed": ("pod", "data"),
+    "layers": (),
+}
+
+SERVE2D_OVERRIDES: Dict[str, Tuple[str, ...]] = {
+    # trillion-param MoE serving: weights stay RESIDENT — experts over
+    # "model" (rule above) × expert FFN dim over the data axes, so decode
+    # moves activations (MBs) instead of FSDP-gathering weights (GBs/step).
+    # KV-cache sequence shards over "model" (kv_heads like kimi's 8 can't).
+    "expert_mlp": ("pod", "data"),
+    "seq": ("model",),
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _fit_axes(dim: int, axes: Sequence[str], mesh: Mesh) -> Tuple[str, ...]:
+    """Longest prefix of ``axes`` (present in mesh) whose product divides dim."""
+    present = [a for a in axes if a in mesh.shape]
+    best: Tuple[str, ...] = ()
+    prod = 1
+    for a in present:
+        prod *= _axis_size(mesh, a)
+        if prod == 1:
+            continue
+        if dim % prod == 0:
+            best = tuple(present[: present.index(a) + 1])
+        else:
+            break
+    return best
+
+
+def logical_to_pspec(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+) -> PartitionSpec:
+    """Map logical axes of one array to a PartitionSpec for ``mesh``."""
+    rules = rules or LOGICAL_RULES
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} vs shape {shape} rank mismatch")
+    used: set = set()
+    entries = []
+    for ax, dim in zip(axes, shape):
+        if ax is None:
+            entries.append(None)
+            continue
+        rule = rules.get(ax)
+        if rule is None:
+            raise KeyError(f"no partition rule for logical axis {ax!r}")
+        fit = tuple(a for a in _fit_axes(dim, rule, mesh) if a not in used)
+        # re-check divisibility after removing already-used axes
+        prod = int(np.prod([_axis_size(mesh, a) for a in fit])) if fit else 1
+        while fit and dim % prod != 0:
+            fit = fit[:-1]
+            prod = int(np.prod([_axis_size(mesh, a) for a in fit])) if fit else 1
+        if not fit:
+            entries.append(None)
+            continue
+        used.update(fit)
+        entries.append(fit if len(fit) > 1 else fit[0])
+    # trim trailing None for tidiness
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+@dataclasses.dataclass
+class Partitioner:
+    """Bound (mesh, mode) partitioning helper used across the framework.
+
+    mode: "tp" (Megatron TP), "fsdp" (ZeRO-3 weights over data axes, for the
+    1T train config), "serve2d" (resident 2D expert sharding for MoE decode).
+    ``fsdp=True`` is sugar for mode="fsdp".
+    """
+
+    mesh: Mesh
+    fsdp: bool = False
+    mode: str = ""
+
+    def __post_init__(self):
+        if not self.mode:
+            self.mode = "fsdp" if self.fsdp else "tp"
+        self.fsdp = self.mode == "fsdp"
+
+    @property
+    def rules(self) -> Dict[str, Tuple[str, ...]]:
+        r = dict(LOGICAL_RULES)
+        if self.mode == "fsdp":
+            r.update(FSDP_OVERRIDES)
+        elif self.mode == "serve2d":
+            r.update(SERVE2D_OVERRIDES)
+        return r
+
+    def pspec(self, axes: Sequence[Optional[str]], shape: Sequence[int]) -> PartitionSpec:
+        return logical_to_pspec(axes, shape, self.mesh, self.rules)
+
+    def sharding(self, axes: Sequence[Optional[str]], shape: Sequence[int]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(axes, shape))
+
+    def tree_pspecs(self, shapes_tree, axes_tree):
+        """Map matching pytrees of shapes and logical-axes tuples to pspecs."""
+        return jax.tree_util.tree_map(
+            lambda sds, axes: self.pspec(axes, sds.shape),
+            shapes_tree,
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+        )
+
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.mesh.shape)
+
+    def model_axis_size(self) -> int:
+        return _axis_size(self.mesh, "model")
+
+    def dp_size(self) -> int:
+        return int(np.prod([_axis_size(self.mesh, a) for a in self.data_axes()]))

@@ -1,0 +1,2 @@
+from .train_step import TrainConfig, build_train_artifacts  # noqa: F401
+from .trainer import Trainer, TrainerConfig  # noqa: F401

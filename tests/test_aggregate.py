@@ -1,0 +1,96 @@
+"""§3.7 on-node processing: aggregate tallies, local→global master tree.
+The paper validated 512-node runs — we simulate a 512-rank aggregation."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.aggregate import (
+    aggregate_tree,
+    combine_aggregates,
+    load_tally,
+    merge_tallies,
+    save_tally,
+)
+from repro.core.plugins.tally import ApiStat, Tally
+
+
+def mk_tally(rank: int, calls: int = 10) -> Tally:
+    t = Tally()
+    t.hostnames.add(f"node{rank // 8:03d}")  # 8 ranks per node
+    t.processes.add(rank)
+    t.threads.add((rank, 1))
+    st_ = ApiStat()
+    for i in range(calls):
+        st_.add(1000 + rank + i)
+    t.apis[("ust_repro", "train_step")] = st_
+    s2 = ApiStat()
+    s2.add(50 * (rank + 1))
+    t.device_apis[("ust_kernel", "k")] = s2
+    return t
+
+
+def test_512_rank_tree_matches_flat_merge():
+    ranks = 512
+    tallies = [mk_tally(r) for r in range(ranks)]
+    flat = Tally()
+    for t in [mk_tally(r) for r in range(ranks)]:
+        flat.merge(t)
+    composite, stats = merge_tallies(tallies, fanout=32)
+    key = ("ust_repro", "train_step")
+    assert composite.apis[key].calls == flat.apis[key].calls == 512 * 10
+    assert composite.apis[key].total_ns == flat.apis[key].total_ns
+    assert composite.apis[key].min_ns == 1000
+    assert len(composite.hostnames) == 64
+    assert len(composite.processes) == 512
+    assert stats.leaves == 512
+    # 512 → 16 → 1 with fanout 32
+    assert stats.depth == 2
+    assert stats.messages == 511  # n-1 merges total, regardless of tree shape
+
+
+@pytest.mark.parametrize("fanout", [2, 8, 32, 600])
+def test_tree_shape_invariance(fanout):
+    tallies = [mk_tally(r, calls=3) for r in range(100)]
+    composite, stats = merge_tallies(tallies, fanout=fanout)
+    assert composite.apis[("ust_repro", "train_step")].calls == 300
+    assert stats.depth == max(1, math.ceil(math.log(100, fanout)))
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = mk_tally(7)
+    t.discarded = 5
+    p = str(tmp_path / "r7.tally")
+    nbytes = save_tally(t, p)
+    assert nbytes < 4096  # "typically in the range of kilobytes" (§3.7)
+    back = load_tally(p)
+    assert back.to_obj() == t.to_obj()
+
+
+def test_combine_aggregates_files(tmp_path):
+    paths = []
+    for r in range(16):
+        p = str(tmp_path / f"rank{r}.tally")
+        save_tally(mk_tally(r), p)
+        paths.append(p)
+    comp = combine_aggregates(paths)
+    assert comp.apis[("ust_repro", "train_step")].calls == 160
+
+
+def test_aggregate_tree_empty_raises():
+    with pytest.raises(ValueError):
+        aggregate_tree([], lambda a, b: a)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ns=st.lists(st.integers(min_value=1, max_value=10_000), min_size=1, max_size=64),
+    fanout=st.integers(min_value=2, max_value=16),
+)
+def test_property_tree_sum_invariant(ns, fanout):
+    """Aggregation result is independent of tree shape (monoid property)."""
+    total, stats = aggregate_tree(list(ns), lambda a, b: a + b, fanout=fanout)
+    assert total == sum(ns)
+    assert stats.messages == len(ns) - 1

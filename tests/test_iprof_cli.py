@@ -1,0 +1,67 @@
+"""iprof CLI (§3.4 Fig 4) end-to-end: run → tally/pretty/timeline/validate
+→ multi-rank combine."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import save_tally
+from repro.core.iprof import main as iprof
+from repro.core.plugins.tally import tally_trace
+
+
+def _traced_workload(tmp_path, rank=0, aggregate_only=False):
+    """Run a tiny traced workload via the iprof 'run' subcommand."""
+    out = str(tmp_path / f"trace_r{rank}")
+    args = ["run", "-m", "default", "-o", out, "--rank", str(rank)]
+    if aggregate_only:
+        args.append("--aggregate-only")
+    args.append("tests.iprof_target:main")
+    rc = iprof(args)
+    assert rc == 0
+    return out
+
+
+def test_run_and_tally(tmp_path, capsys):
+    out = _traced_workload(tmp_path)
+    capsys.readouterr()
+    assert iprof(["tally", out]) == 0
+    text = capsys.readouterr().out
+    assert "train_step" in text and "Time(%)" in text
+
+
+def test_pretty(tmp_path, capsys):
+    out = _traced_workload(tmp_path)
+    capsys.readouterr()
+    assert iprof(["pretty", out, "-n", "5"]) == 0
+    assert "vpid" in capsys.readouterr().out
+
+
+def test_timeline(tmp_path, capsys):
+    out = _traced_workload(tmp_path)
+    tl = str(tmp_path / "tl.json")
+    assert iprof(["timeline", out, "-o", tl]) == 0
+    doc = json.load(open(tl))
+    assert len(doc["traceEvents"]) > 0
+
+
+def test_validate(tmp_path, capsys):
+    out = _traced_workload(tmp_path)
+    assert iprof(["validate", out]) == 0
+
+
+def test_combine_ranks(tmp_path, capsys):
+    """§3.7: aggregate-only rank traces → global master composite."""
+    for r in range(4):
+        _traced_workload(tmp_path / f"r{r}", rank=r, aggregate_only=True)
+    capsys.readouterr()
+    assert iprof(["combine", str(tmp_path)]) == 0
+    text = capsys.readouterr().out
+    assert "train_step" in text
+    # composite counts = 4 ranks × 3 steps
+    import re
+
+    m = re.search(r"train_step.*?\|\s+(\d+)\s+\|", text)
+    assert m and int(m.group(1)) == 12

@@ -1,0 +1,61 @@
+"""Beyond-paper extensions: zstd-compressed CTF streams + online analysis
+(the paper's §6 future work, implemented)."""
+
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import TraceConfig, Tracer, collective_span, traced_jit, train_step_span
+from repro.core.plugins.tally import tally_trace
+
+
+def workload(steps=4):
+    f = traced_jit(lambda x: (x + 1).sum(), name="inc_sum")
+    x = jnp.arange(256.0)
+    for s in range(steps):
+        with train_step_span(s, 2, 64) as sp:
+            sp.outs["loss"] = float(f(x))
+            sp.outs["grad_norm"] = 1.0
+        with collective_span("all_reduce", 128, "data", 4):
+            pass
+
+
+def test_compressed_stream_roundtrip(tmp_path):
+    plain, comp = str(tmp_path / "plain"), str(tmp_path / "comp")
+    with Tracer(TraceConfig(out_dir=plain, mode="default")) as t1:
+        workload()
+    with Tracer(TraceConfig(out_dir=comp, mode="default", compress=True)) as t2:
+        workload()
+    tp, tc = tally_trace(plain), tally_trace(comp)
+    key = ("ust_repro", "train_step")
+    assert tc.apis[key].calls == tp.apis[key].calls == 4
+    # compression must actually shrink the on-disk trace
+    assert t2.handle.size_bytes < t1.handle.size_bytes
+
+
+def test_online_tally_matches_offline(tmp_path):
+    d = str(tmp_path / "online")
+    with Tracer(TraceConfig(out_dir=d, mode="default", online=True)) as tr:
+        workload(steps=6)
+        time.sleep(0.15)  # let the consumer drain
+        live = tr.online.snapshot()
+        # live tally is already populated mid-session
+        assert live.apis.get(("ust_repro", "train_step")) is not None
+    offline = tally_trace(d)
+    final = tr.online.snapshot()
+    key = ("ust_repro", "train_step")
+    assert final.apis[key].calls == offline.apis[key].calls == 6
+    assert final.apis[key].total_ns == offline.apis[key].total_ns
+    kkey = ("ust_kernel", "inc_sum")
+    assert final.device_apis[kkey].calls == offline.device_apis[kkey].calls
+
+
+def test_online_busy_fraction(tmp_path):
+    d = str(tmp_path / "busy")
+    with Tracer(TraceConfig(out_dir=d, mode="default", online=True)) as tr:
+        t0 = time.monotonic_ns()
+        workload(steps=3)
+        time.sleep(0.12)
+        frac = tr.online.busy_fraction("ust_repro", "train_step", time.monotonic_ns() - t0)
+    assert 0.0 <= frac <= 1.0

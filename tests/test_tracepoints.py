@@ -1,0 +1,145 @@
+"""Tracepoint codegen (THAPI §3.3) — generated recorders and unpackers must
+be exact inverses for every event schema, including varlen str/bytes fields
+and meta-parameter-derived out fields."""
+
+import struct
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.api_model import (
+    APIModel,
+    APISpec,
+    P,
+    build_trace_model,
+    builtin_trace_model,
+)
+from repro.core.ringbuffer import RECORD_HEADER, RingRegistry
+from repro.core.tracepoints import Tracepoints, codegen_recorder
+
+
+def drain_records(registry):
+    out = []
+    for ring in registry.rings():
+        blob = ring.drain()
+        off = 0
+        while off < len(blob):
+            total, eid, ts = RECORD_HEADER.unpack_from(blob, off)
+            out.append((eid, ts, blob[off + RECORD_HEADER.size : off + total]))
+            off += total
+    return out
+
+
+@pytest.fixture()
+def model():
+    return build_trace_model(
+        [
+            APIModel(
+                provider="ust_test",
+                apis=(
+                    APISpec(
+                        "mix",
+                        params=(P("a", "u32"), P("s", "str"), P("b", "u64"), P("blob", "bytes"), P("f", "f64")),
+                        result=P("rc", "i32"),
+                        meta=(("OutScalar", P("out", "f32")),),
+                    ),
+                    APISpec("spanny", params=(P("n", "u64"),), span=True),
+                ),
+            )
+        ]
+    )
+
+
+def test_builtin_model_events_dense_and_named():
+    m = builtin_trace_model()
+    names = [e.name for e in m.events]
+    assert names[0] == "ctf:events_discarded"
+    assert "ust_jaxrt:memcpy_entry" in names
+    assert "ust_kernel:launch_span" in names
+    assert "ust_thapi:sample" in names
+    assert len(set(names)) == len(names)
+    for i, e in enumerate(m.events):
+        assert e.eid == i
+
+
+def test_roundtrip_mixed_fields(model):
+    tp = Tracepoints(model)
+    reg = RingRegistry(1 << 16, pid=1)
+    tp.attach(reg, range(len(model.events)))
+    tp.record["ust_test:mix_entry"](7, "héllo", 2**40, b"\x00\xff", 3.25)
+    tp.record["ust_test:mix_exit"](-3, 1.5)
+    tp.record["ust_test:spanny_span"](100, 250, 2**33)
+    recs = drain_records(reg)
+    assert len(recs) == 3
+    by_eid = {e.eid: e for e in model.events}
+    eid, ts, payload = recs[0]
+    assert by_eid[eid].name == "ust_test:mix_entry"
+    vals = tp.unpack[eid](memoryview(payload))
+    assert vals == (7, "héllo", 2**40, b"\x00\xff", 3.25)
+    eid, _, payload = recs[1]
+    assert tp.unpack[eid](memoryview(payload)) == (-3, 1.5)
+    eid, _, payload = recs[2]
+    assert tp.unpack[eid](memoryview(payload)) == (100, 250, 2**33)
+
+
+def test_disabled_event_records_nothing(model):
+    tp = Tracepoints(model)
+    reg = RingRegistry(1 << 16, pid=1)
+    entry_eid = model.by_name()["ust_test:mix_entry"].eid
+    tp.attach(reg, [e.eid for e in model.events if e.eid != entry_eid])
+    tp.record["ust_test:mix_entry"](1, "x", 2, b"", 0.0)
+    tp.record["ust_test:mix_exit"](0, 0.0)
+    recs = drain_records(reg)
+    assert len(recs) == 1  # only the exit
+
+
+def test_detach_makes_recorders_noop(model):
+    tp = Tracepoints(model)
+    reg = RingRegistry(1 << 16, pid=1)
+    tp.attach(reg, range(len(model.events)))
+    tp.detach()
+    tp.record["ust_test:mix_exit"](0, 0.0)  # must not raise, must not write
+    assert drain_records(reg) == []
+
+
+def test_codegen_source_structure(model):
+    ev = model.by_name()["ust_test:mix_entry"]
+    src = codegen_recorder(ev)
+    assert f"_enabled[{ev.eid}]" in src
+    assert "def ust_test__mix_entry(a, s, b, blob, f):" in src
+
+
+def test_meta_out_scalars_on_exit_schema(model):
+    exit_ev = model.by_name()["ust_test:mix_exit"]
+    assert [p.name for p in exit_ev.fields] == ["rc", "out"]  # result + OutScalar
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    a=st.integers(min_value=0, max_value=2**32 - 1),
+    s=st.text(max_size=40),
+    b=st.integers(min_value=0, max_value=2**64 - 1),
+    blob=st.binary(max_size=64),
+    f=st.floats(allow_nan=False, allow_infinity=False, width=64),
+)
+def test_property_roundtrip(a, s, b, blob, f):
+    model = build_trace_model(
+        [
+            APIModel(
+                provider="ust_p",
+                apis=(
+                    APISpec(
+                        "m",
+                        params=(P("a", "u32"), P("s", "str"), P("b", "u64"), P("blob", "bytes"), P("f", "f64")),
+                    ),
+                ),
+            )
+        ]
+    )
+    tp = Tracepoints(model)
+    reg = RingRegistry(1 << 16, pid=1)
+    tp.attach(reg, range(len(model.events)))
+    tp.record["ust_p:m_entry"](a, s, b, blob, f)
+    (eid, _, payload), = drain_records(reg)
+    assert tp.unpack[eid](memoryview(payload)) == (a, s, b, blob, f)

@@ -1,0 +1,256 @@
+"""Tracer session + analysis plugins (THAPI §3.2/§3.4/§4.2/§5.2)."""
+
+import json
+import math
+import os
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    TraceConfig,
+    Tracer,
+    collective_span,
+    kernel_span,
+    traced_device_put,
+    traced_jit,
+    train_step_span,
+)
+from repro.core.api_model import builtin_trace_model
+from repro.core.plugins.pretty import pretty_print
+from repro.core.plugins.tally import Tally, fmt_ns, render, tally_trace
+from repro.core.plugins.timeline import timeline_events, write_timeline
+from repro.core.plugins.validate import validate_trace
+from repro.core.tracer import events_for_mode, get_tracepoints
+
+
+def run_session(tmp_path, mode="default", sample=False, steps=3, **kw):
+    d = str(tmp_path / f"trace_{mode}_{sample}")
+    f = traced_jit(lambda x: (x * 2).sum(), name="double_sum")
+    x = jnp.arange(128.0)
+    cfg = TraceConfig(out_dir=d, mode=mode, sample=sample, sample_period_s=0.005, **kw)
+    with Tracer(cfg) as tr:
+        for step in range(steps):
+            with train_step_span(step, 4, 128) as sp:
+                y = f(x)
+                sp.outs["loss"] = float(y)
+                sp.outs["grad_norm"] = 0.5
+            with collective_span("all_reduce", 4096, "data", 8):
+                pass
+            with kernel_span("my_kernel", grid=(4, 2), flops=1000, bytes_accessed=4096):
+                pass
+        if sample:
+            time.sleep(0.05)
+    return d, tr.handle
+
+
+# -- modes (§5.2) ------------------------------------------------------------
+
+
+def test_mode_event_sets_nested():
+    m = builtin_trace_model()
+    mn = events_for_mode(m, "minimal", False)
+    df = events_for_mode(m, "default", False)
+    fl = events_for_mode(m, "full", False)
+    assert mn < df < fl  # strictly increasing detail
+    by_name = m.by_name()
+    # minimal keeps device spans only
+    assert by_name["ust_kernel:launch_span"].eid in mn
+    assert by_name["ust_repro:train_step_entry"].eid not in mn
+    # default excludes polling ("non-spawned") APIs
+    assert by_name["ust_repro:poll_ready_entry"].eid not in df
+    assert by_name["ust_repro:poll_ready_entry"].eid in fl
+    # sampling flag controls telemetry independent of mode
+    assert by_name["ust_thapi:sample"].eid not in fl
+    assert by_name["ust_thapi:sample"].eid in events_for_mode(m, "minimal", True)
+
+
+def test_minimal_traces_device_only(tmp_path):
+    d, h = run_session(tmp_path, mode="minimal")
+    t = tally_trace(d)
+    assert not t.apis  # no host-side intervals
+    assert ("ust_kernel", "my_kernel") in t.device_apis
+    assert ("ust_collective", "all_reduce") in t.device_apis
+
+
+def test_default_captures_host_and_device(tmp_path):
+    d, h = run_session(tmp_path, mode="default")
+    t = tally_trace(d)
+    assert ("ust_repro", "train_step") in t.apis
+    assert ("ust_jaxrt", "dispatch") in t.apis
+    assert t.apis[("ust_repro", "train_step")].calls == 3
+    assert ("ust_kernel", "double_sum") in t.device_apis
+    assert h.events > 0 and h.dropped == 0
+
+
+def test_full_mode_polling_events(tmp_path):
+    d, _ = run_session(tmp_path, mode="full")
+    t = tally_trace(d)
+    # the spin-lock pattern of §4.3's zeEventHostSynchronize analogue
+    assert ("ust_repro", "poll_ready") in t.apis
+
+
+def test_space_ordering_minimal_default_full(tmp_path):
+    """Fig 8: minimal < default < full space requirement."""
+    sizes = {}
+    for mode in ("minimal", "default", "full"):
+        d, h = run_session(tmp_path, mode=mode, steps=5)
+        sizes[mode] = h.size_bytes
+    assert sizes["minimal"] < sizes["default"] < sizes["full"]
+
+
+def test_rank_filter_disables_tracing(tmp_path):
+    d = str(tmp_path / "ranksel")
+    cfg = TraceConfig(out_dir=d, rank=3, ranks=[0, 1])  # rank 3 not selected
+    with Tracer(cfg) as tr:
+        with train_step_span(0, 1, 1) as sp:
+            sp.outs["loss"] = 1.0
+    assert tr.handle.events == 0
+    assert not os.path.exists(os.path.join(d, "metadata.json"))
+
+
+def test_event_overrides(tmp_path):
+    d = str(tmp_path / "ovr")
+    cfg = TraceConfig(out_dir=d, mode="default", event_overrides={"ust_repro:train_step_entry": False})
+    with Tracer(cfg):
+        with train_step_span(0, 1, 1) as sp:
+            sp.outs["loss"] = 1.0
+    t = tally_trace(d)
+    # entry disabled → unmatched exit only, no train_step interval
+    assert ("ust_repro", "train_step") not in t.apis
+
+
+def test_aggregate_only_mode(tmp_path):
+    d = str(tmp_path / "agg")
+    cfg = TraceConfig(out_dir=d, mode="default", aggregate_only=True)
+    with Tracer(cfg) as tr:
+        with train_step_span(0, 1, 1) as sp:
+            sp.outs["loss"] = 1.0
+    h = tr.handle
+    assert h.aggregate_path and os.path.exists(h.aggregate_path)
+    assert not [f for f in os.listdir(d) if f.endswith(".ctf")]  # streams pruned
+    from repro.core.aggregate import load_tally
+
+    t = load_tally(h.aggregate_path)
+    assert ("ust_repro", "train_step") in t.apis
+
+
+def test_nested_sessions_rejected(tmp_path):
+    cfg = TraceConfig(out_dir=str(tmp_path / "a"))
+    with Tracer(cfg):
+        with pytest.raises(RuntimeError):
+            Tracer(TraceConfig(out_dir=str(tmp_path / "b"))).start()
+
+
+# -- transfers (§1.1 running example) -----------------------------------------
+
+
+def test_traced_device_put_records_memcpy(tmp_path):
+    import numpy as np
+
+    d = str(tmp_path / "memcpy")
+    with Tracer(TraceConfig(out_dir=d, mode="default")):
+        traced_device_put(np.ones((256,), dtype=np.float32))
+    t = tally_trace(d)
+    assert ("ust_jaxrt", "memcpy") in t.apis
+    assert ("ust_kernel", "transfer") in t.device_apis
+    # H2D deducible from pointer classes, like the paper's example
+    from repro.core.babeltrace import CTFSource
+
+    ev = next(e for e in CTFSource(d) if e.name == "ust_jaxrt:memcpy_entry")
+    f = ev.asdict()
+    assert f["src"] >> 56 == 0x00 and f["dst"] >> 56 == 0xFF
+    assert f["nbytes"] == 1024
+
+
+# -- plugins -------------------------------------------------------------------
+
+
+def test_pretty_print_format(tmp_path, capsys):
+    d, _ = run_session(tmp_path)
+    n = pretty_print(d, limit=5)
+    out = capsys.readouterr().out
+    assert n == 5
+    assert "ust_" in out and "vpid:" in out and "vtid:" in out
+
+
+def test_tally_render_table(tmp_path):
+    d, _ = run_session(tmp_path)
+    txt = render(tally_trace(d))
+    assert "Time(%)" in txt and "Calls" in txt and "train_step" in txt
+    assert "Hostnames" in txt and "Processes" in txt and "Threads" in txt
+
+
+def test_fmt_ns():
+    assert fmt_ns(4_730_000_000) == "4.73s"
+    assert fmt_ns(295_890_000) == "295.89ms"
+    assert fmt_ns(471.8) == "471.80ns"
+    assert fmt_ns(9_710) == "9.71us"
+
+
+def test_tally_merge_monoid(tmp_path):
+    d, _ = run_session(tmp_path, steps=2)
+    a, b = tally_trace(d), tally_trace(d)
+    merged = Tally().merge(a).merge(b)
+    key = ("ust_repro", "train_step")
+    assert merged.apis[key].calls == 2 * a.apis[key].calls
+    assert merged.apis[key].total_ns == 2 * a.apis[key].total_ns
+    assert merged.apis[key].max_ns == a.apis[key].max_ns
+
+
+def test_timeline_json_loadable(tmp_path):
+    d, _ = run_session(tmp_path, sample=True)
+    out = str(tmp_path / "tl.json")
+    n = write_timeline(d, out)
+    doc = json.load(open(out))
+    assert n == len(doc["traceEvents"]) > 0
+    phases = {e["ph"] for e in doc["traceEvents"]}
+    assert "X" in phases and "C" in phases and "M" in phases
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert all(e["dur"] > 0 for e in xs)
+
+
+def test_telemetry_sampled(tmp_path):
+    d, _ = run_session(tmp_path, sample=True)
+    from repro.core.babeltrace import CTFSource
+
+    samples = [e for e in CTFSource(d) if e.name == "ust_thapi:sample"]
+    assert len(samples) >= 2
+    assert all(e.field("host_rss") > 0 for e in samples)
+
+
+# -- validation plugin (§4.2) --------------------------------------------------
+
+
+def test_validate_clean_trace(tmp_path):
+    d, _ = run_session(tmp_path)
+    assert validate_trace(d) == []
+
+
+def test_validate_detects_nan_loss(tmp_path):
+    d = str(tmp_path / "nan")
+    with Tracer(TraceConfig(out_dir=d)):
+        with train_step_span(0, 1, 1) as sp:
+            sp.outs["loss"] = float("nan")
+            sp.outs["grad_norm"] = 1.0
+    rules = {f.rule for f in validate_trace(d)}
+    assert "nan_loss" in rules
+
+
+def test_validate_detects_unreleased_alloc(tmp_path):
+    from repro.core.interception import record_alloc
+
+    d = str(tmp_path / "leak")
+    with Tracer(TraceConfig(out_dir=d)):
+        record_alloc(1 << 20)
+    rules = {f.rule for f in validate_trace(d)}
+    assert "unreleased_alloc" in rules
+
+
+def test_validate_detects_unmatched_entry(tmp_path):
+    d = str(tmp_path / "open")
+    with Tracer(TraceConfig(out_dir=d)) as tr:
+        tr.tp.record["ust_repro:train_step_entry"](0, 1, 1)  # never exits
+    rules = {f.rule for f in validate_trace(d)}
+    assert "unmatched_entry" in rules

@@ -10,6 +10,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.jaxcompat import make_mesh
 from repro.core import TraceConfig, Tracer
 from repro.models import Model, ShapeSpec
 from repro.sharding import Partitioner
@@ -22,7 +23,7 @@ _SHAPE = ShapeSpec("bench", "train", 64, 4)
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def run_training_workload(

@@ -5,15 +5,30 @@ tally + validation report.
     PYTHONPATH=src python examples/distributed_train.py [--steps 200]
 
 (~100M params: 12L × d512 × ff2048 × 32k vocab ≈ 96M.)
+
+``--live`` instead demonstrates the §3.7+§6 streaming aggregation service on
+localhost: N worker processes each run a small traced workload, streaming
+live tally snapshots to a *local master* which forwards composites to a
+*global master* (the full fanout tree, live).  The driver renders the global
+composite while the ranks run — what ``iprof top`` shows — then proves the
+final live composite matches the offline ``iprof combine`` of the very same
+run's per-rank aggregates, API for API.
+
+    PYTHONPATH=src python examples/distributed_train.py --live
 """
 
 import argparse
 import dataclasses
+import os
+import subprocess
+import sys
 import tempfile
+import time
 
 import jax
 
 from repro.configs import get_config
+from repro.jaxcompat import make_mesh
 from repro.core import TraceConfig, Tracer
 from repro.core.plugins.tally import render, tally_trace
 from repro.core.plugins.validate import render as vrender, validate_trace
@@ -39,15 +54,142 @@ def config_100m():
     )
 
 
+# ---------------------------------------------------------------------------
+# --live: multi-process streaming aggregation demo
+# ---------------------------------------------------------------------------
+
+
+def live_worker(rank: int, out_dir: str, addr: str, steps: int) -> None:
+    """One traced rank: tiny jit workload, snapshots streamed to ``addr``,
+    final aggregate also written to disk (aggregate_only) so the driver can
+    cross-check the live composite against ``iprof combine``."""
+    import jax.numpy as jnp
+
+    from repro.core import collective_span, traced_jit, train_step_span
+
+    f = traced_jit(lambda x: (x * x).sum(), name="square_sum")
+    x = jnp.arange(128.0) + rank
+    cfg = TraceConfig(
+        out_dir=out_dir,
+        mode="default",
+        rank=rank,
+        aggregate_only=True,
+        stream_to=addr,
+        stream_period_s=0.1,
+    )
+    with Tracer(cfg):
+        for s in range(steps):
+            with train_step_span(s, 2, 64) as sp:
+                sp.outs["loss"] = float(f(x))
+                sp.outs["grad_norm"] = 1.0
+            with collective_span("all_reduce", 128, "data", 2):
+                pass
+            time.sleep(0.05)  # spread steps so mid-run snapshots differ
+
+
+def _api_totals(t):
+    """(table, provider, api) → (calls, total_ns); the acceptance currency."""
+    out = {}
+    for name, table in (("host", t.apis), ("device", t.device_apis)):
+        for key, st in table.items():
+            out[(name,) + key] = (st.calls, st.total_ns)
+    return out
+
+
+def run_live(args) -> int:
+    from repro.core import MasterServer, query_composite
+    from repro.core.aggregate import combine_aggregates, find_aggregates
+
+    root = tempfile.mkdtemp(prefix="thapi_live_")
+    # Global master at the tree root, one local master forwarding into it —
+    # the paper's rank → local master → global master chain, live.
+    global_m = MasterServer(port=0).start()
+    local_m = MasterServer(
+        port=0, forward_to=global_m.addr, forward_period_s=0.1
+    ).start()
+    print(f"[live] global master {global_m.addr} ← local master {local_m.addr}")
+
+    env = dict(os.environ)
+    procs = []
+    for r in range(args.live_ranks):
+        out = os.path.join(root, f"r{r}")
+        procs.append(
+            subprocess.Popen(
+                [
+                    sys.executable,
+                    os.path.abspath(__file__),
+                    "--live-worker",
+                    str(r),
+                    "--live-out",
+                    out,
+                    "--live-addr",
+                    local_m.addr,
+                    "--live-steps",
+                    str(args.live_steps),
+                ],
+                env=env,
+            )
+        )
+    print(f"[live] {len(procs)} ranks streaming; composite while they run:")
+    while any(p.poll() is None for p in procs):
+        time.sleep(0.5)
+        t, meta = query_composite(global_m.addr)
+        if t.apis or t.device_apis:
+            print(f"\n[live] -- {meta['sources']} sources, {meta['snapshots']} snapshots --")
+            print(render(t, top=5))
+    rc = max(p.wait() for p in procs)
+    if rc != 0:
+        print(f"[live] a worker failed (exit {rc})", file=sys.stderr)
+        return rc
+
+    # Final snapshots are pushed at tracer stop; wait for them to propagate
+    # up the tree, then compare against the offline batch combine.
+    offline = combine_aggregates(find_aggregates(root))
+    want = _api_totals(offline)
+    deadline = time.time() + 10.0
+    live = None
+    while time.time() < deadline:
+        local_m.flush(force=True)
+        live, _ = query_composite(global_m.addr)
+        if _api_totals(live) == want:
+            break
+        time.sleep(0.2)
+    local_m.stop()
+    global_m.stop()
+
+    print("\n[live] final composite (streaming, via global master):")
+    print(render(live))
+    print("\n[live] offline combine of the same run's rank aggregates:")
+    print(render(offline))
+    if _api_totals(live) == want:
+        print(f"\n[live] OK: live composite matches offline combine "
+              f"({len(want)} API rows, {args.live_ranks} ranks)")
+        return 0
+    print("\n[live] MISMATCH between live composite and offline combine", file=sys.stderr)
+    return 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--live", action="store_true", help="streaming aggregation demo")
+    ap.add_argument("--live-ranks", type=int, default=2)
+    ap.add_argument("--live-steps", type=int, default=20)
+    ap.add_argument("--live-worker", type=int, default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--live-out", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--live-addr", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
 
+    if args.live_worker is not None:
+        live_worker(args.live_worker, args.live_out, args.live_addr, args.live_steps)
+        return
+    if args.live:
+        sys.exit(run_live(args))
+
     cfg = config_100m()
-    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
     model = Model(cfg, mesh)
     print(f"{cfg.name}: {cfg.num_params() / 1e6:.0f}M params on {mesh.shape}")
 

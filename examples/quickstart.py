@@ -9,6 +9,7 @@ import tempfile
 import jax
 
 from repro.configs import get_config
+from repro.jaxcompat import make_mesh
 from repro.core import TraceConfig, Tracer
 from repro.core.plugins.tally import render, tally_trace
 from repro.core.plugins.validate import render as vrender, validate_trace
@@ -18,7 +19,7 @@ from repro.train import TrainConfig, Trainer, TrainerConfig
 
 
 def main():
-    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
     model = Model(get_config("h2o-danube-1.8b").smoke(), mesh)
     trace_dir = tempfile.mkdtemp(prefix="thapi_quickstart_")
 

@@ -2,6 +2,11 @@
 the tally shows the framework layer (prefill/decode) over the dispatch layer
 (dispatch/poll_ready spin lock in full mode) — the HIPLZ layering analysis.
 
+The session also opens a live master (``serve_port=0``): mid-run the engine
+reports its own live profile (``eng.live_profile()``), and ``iprof top`` can
+attach to the printed port while the server runs — the §6 streaming service
+from the serving side.
+
     PYTHONPATH=src python examples/serve_traced.py
 """
 
@@ -27,10 +32,15 @@ def main():
     rng = np.random.default_rng(7)
     trace_dir = tempfile.mkdtemp(prefix="thapi_serve_")
 
-    with Tracer(TraceConfig(out_dir=trace_dir, mode="full", sample=True)):
+    with Tracer(TraceConfig(out_dir=trace_dir, mode="full", sample=True, serve_port=0)) as tr:
+        print(f"live profile served on 127.0.0.1:{tr.server.port} (iprof top attaches)")
         for _ in range(10):
             eng.submit(rng.integers(0, model.cfg.vocab_size, size=(16,)))
         done = eng.run_until_drained()
+        live = eng.live_profile(top=5)
+        if live:
+            print("\n-- live profile (mid-session, engine's own view) --")
+            print(live)
 
     print(f"served {len(done)} requests "
           f"({sum(len(r.out_tokens) for r in done)} tokens)\n")

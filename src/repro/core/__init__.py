@@ -10,6 +10,7 @@ Public API:
 
     from repro.core import TraceConfig, Tracer, trace_session       # collection
     from repro.core import traced_jit, kernel_span, collective_span # interception
+    from repro.core import MasterServer, query_composite            # streaming
     from repro.core.plugins.tally import tally_trace, render        # analysis
 """
 
@@ -31,6 +32,12 @@ from .interception import (  # noqa: F401
     traced_device_put,
     traced_jit,
     train_step_span,
+)
+from .stream import (  # noqa: F401
+    MasterServer,
+    SnapshotStreamer,
+    live_snapshot,
+    query_composite,
 )
 from .tracer import (  # noqa: F401
     MODES,

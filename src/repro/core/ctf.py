@@ -41,11 +41,28 @@ METADATA_FILE = "metadata.json"
 # ---------------------------------------------------------------------------
 
 
+class _ZlibStreamWriter:
+    """stdlib fallback container used when ``zstandard`` is not installed."""
+
+    def __init__(self, f, level: int = 6):
+        import zlib
+
+        self._c = zlib.compressobj(level)
+        self._f = f
+
+    def write(self, b) -> None:
+        self._f.write(self._c.compress(bytes(b)))
+
+    def finish(self) -> None:
+        self._f.write(self._c.flush())
+
+
 class StreamWriter:
     """One binary stream (one ring → one file).
 
-    ``compress=True`` writes a zstd frame around the stream (the Fig 8 space
-    knob taken further: CTF stays the inner format; zstd is the container).
+    ``compress=True`` writes a compressed frame around the stream (the Fig 8
+    space knob taken further: CTF stays the inner format; the container is
+    zstd when available, zlib otherwise — readers sniff the frame magic).
     """
 
     def __init__(self, path: str, pid: int, tid: int, compress: bool = False):
@@ -55,12 +72,18 @@ class StreamWriter:
         self.compress = compress
         self._f = open(path, "wb", buffering=1 << 16)
         if compress:
-            import zstandard as zstd
+            try:
+                import zstandard as zstd
 
-            self._zw = zstd.ZstdCompressor(level=3).stream_writer(self._f)
+                self._zw = zstd.ZstdCompressor(level=3).stream_writer(self._f)
+                self._finish = lambda: self._zw.flush(zstd.FLUSH_FRAME)
+            except ImportError:
+                self._zw = _ZlibStreamWriter(self._f)
+                self._finish = self._zw.finish
             self._out = self._zw
         else:
             self._zw = None
+            self._finish = None
             self._out = self._f
         self._out.write(STREAM_HEADER.pack(MAGIC, VERSION, 0))
         self._seen_dropped = 0
@@ -85,8 +108,8 @@ class StreamWriter:
 
     def close(self) -> None:
         if not self._f.closed:
-            if self._zw is not None:
-                self._zw.flush((__import__("zstandard")).FLUSH_FRAME)
+            if self._finish is not None:
+                self._finish()
             self._f.flush()
             self._f.close()
 
@@ -156,6 +179,10 @@ class StreamReader:
             import zstandard as zstd
 
             raw = zstd.ZstdDecompressor().stream_reader(raw).read()
+        elif raw[:1] == b"\x78":  # zlib header (MAGIC starts with 'T')
+            import zlib
+
+            raw = zlib.decompress(raw)
         if len(raw) < STREAM_HEADER.size:
             return
         magic, version, _ = STREAM_HEADER.unpack_from(raw)

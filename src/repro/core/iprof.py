@@ -11,7 +11,9 @@ Usage:
     python -m repro.core.iprof pretty   /tmp/t [-n N] [--filter memcpy]
     python -m repro.core.iprof timeline /tmp/t -o timeline.json
     python -m repro.core.iprof validate /tmp/t
-    python -m repro.core.iprof combine  /tmp/agg_root   # §3.7 global master
+    python -m repro.core.iprof combine  /tmp/agg_root   # §3.7 batch global master
+    python -m repro.core.iprof serve --port 9000        # streaming master (§3.7+§6)
+    python -m repro.core.iprof top   127.0.0.1:9000     # live composite view
 """
 
 from __future__ import annotations
@@ -19,6 +21,7 @@ from __future__ import annotations
 import argparse
 import importlib
 import sys
+import time
 from typing import List, Optional
 
 from .aggregate import combine_aggregates, find_aggregates
@@ -42,6 +45,10 @@ def _run(args) -> int:
         aggregate_only=args.aggregate_only,
         rank=args.rank,
         ranks=None if args.ranks is None else [int(r) for r in args.ranks.split(",")],
+        online=args.online,
+        stream_to=args.stream_to,
+        stream_period_s=args.stream_period,
+        serve_port=args.serve_port,
     )
     old_argv = sys.argv
     sys.argv = [target] + list(args.args)
@@ -51,10 +58,13 @@ def _run(args) -> int:
     finally:
         sys.argv = old_argv
     h = tr.handle
-    print(
+    line = (
         f"[iprof] trace: {h.trace_dir} mode={h.mode} events={h.events} "
         f"dropped={h.dropped} bytes={h.size_bytes}"
     )
+    if args.stream_to:
+        line += f" streamed={h.streamed} stream_dropped={h.stream_dropped}"
+    print(line)
     return 0
 
 
@@ -84,6 +94,72 @@ def _validate(args) -> int:
     return 0 if not any(f.severity == "error" for f in findings) else 2
 
 
+def _serve(args) -> int:
+    """Run a streaming master (local when --forward-to, else global)."""
+    from .stream import MasterServer
+
+    try:
+        m = MasterServer(
+            port=args.port,
+            host=args.bind,
+            forward_to=args.forward_to,
+            forward_period_s=args.forward_period,
+            fanout=args.fanout,
+        ).start()
+    except OSError as e:
+        print(f"[iprof] cannot bind {args.bind}:{args.port}: {e}", file=sys.stderr)
+        return 1
+    role = f"local master → {args.forward_to}" if args.forward_to else "global master"
+    print(f"[iprof] {role} listening on {m.addr}", flush=True)
+    try:
+        if args.duration is not None:
+            time.sleep(args.duration)
+        else:
+            while True:
+                time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        m.stop()
+        st = m.stats()
+        print(
+            f"[iprof] master stopped: {st['sources']} sources, "
+            f"{st['snapshots']} snapshots, {st['queries']} queries"
+        )
+    return 0
+
+
+def _top(args) -> int:
+    """Attach to a master; render the live composite, refreshing."""
+    from .stream import ProtocolError, query_composite
+
+    i = 0
+    while args.iterations is None or i < args.iterations:
+        if i:
+            time.sleep(args.interval)
+        i += 1
+        try:
+            t, meta = query_composite(args.addr, timeout_s=args.timeout)
+        except ValueError:
+            print(f"[iprof] bad master address {args.addr!r} (want host:port)", file=sys.stderr)
+            return 2
+        except (OSError, ProtocolError) as e:
+            print(f"[iprof] master at {args.addr} unreachable: {e}", file=sys.stderr)
+            return 1
+        if not args.no_clear:
+            print("\x1b[2J\x1b[H", end="")
+        age = max(0.0, time.time() - meta["updated"]) if meta.get("updated") else 0.0
+        print(
+            f"[iprof top] {args.addr} | {meta.get('sources', 0)} sources | "
+            f"{meta.get('snapshots', 0)} snapshots | updated {age:.1f}s ago"
+        )
+        print(tally_plugin.render(t, top=args.top, device=False))
+        if args.device or t.device_apis:
+            print("\n-- device --")
+            print(tally_plugin.render(t, top=args.top, device=True))
+    return 0
+
+
 def _combine(args) -> int:
     paths = find_aggregates(args.root)
     if not paths:
@@ -106,6 +182,17 @@ def build_parser() -> argparse.ArgumentParser:
     r.add_argument("--aggregate-only", action="store_true", help="§3.7 aggregate-only mode")
     r.add_argument("--rank", type=int, default=0)
     r.add_argument("--ranks", default=None, help="comma-separated ranks to trace (§3.2)")
+    r.add_argument("--online", action="store_true", help="live tally on the consumer (§6)")
+    r.add_argument(
+        "--stream-to", default=None, help="push live snapshots to a master at host:port"
+    )
+    r.add_argument("--stream-period", type=float, default=0.25)
+    r.add_argument(
+        "--serve-port",
+        type=int,
+        default=None,
+        help="serve this process's live tally on a local master port (iprof top attaches)",
+    )
     r.add_argument("entry", help="pkg.module:function")
     r.add_argument("args", nargs="*")
     r.set_defaults(fn=_run)
@@ -135,6 +222,31 @@ def build_parser() -> argparse.ArgumentParser:
     c.add_argument("root")
     c.add_argument("--fanout", type=int, default=32)
     c.set_defaults(fn=_combine)
+
+    s = sub.add_parser("serve", help="run a streaming aggregation master (§3.7+§6)")
+    s.add_argument("--port", type=int, default=9000, help="0 picks an ephemeral port")
+    s.add_argument("--bind", default="127.0.0.1")
+    s.add_argument(
+        "--forward-to", default=None, help="parent master host:port (makes this a local master)"
+    )
+    s.add_argument("--forward-period", type=float, default=0.5)
+    s.add_argument("--fanout", type=int, default=32)
+    s.add_argument(
+        "--duration", type=float, default=None, help="serve for N seconds then exit (default: forever)"
+    )
+    s.set_defaults(fn=_serve)
+
+    tp = sub.add_parser("top", help="attach to a master and render the live composite")
+    tp.add_argument("addr", help="master host:port")
+    tp.add_argument("--interval", type=float, default=1.0)
+    tp.add_argument(
+        "--iterations", type=int, default=None, help="refresh N times then exit (default: forever)"
+    )
+    tp.add_argument("--timeout", type=float, default=3.0)
+    tp.add_argument("--top", type=int, default=None)
+    tp.add_argument("--device", action="store_true")
+    tp.add_argument("--no-clear", action="store_true", help="don't clear the screen between refreshes")
+    tp.set_defaults(fn=_top)
     return p
 
 

@@ -30,12 +30,19 @@ from .tracepoints import Tracepoints
 class OnlineAnalyzer:
     """Incremental entry/exit folding + live tally over drained chunks."""
 
-    def __init__(self, model: TraceModel, tracepoints: Optional[Tracepoints] = None):
+    def __init__(
+        self,
+        model: TraceModel,
+        tracepoints: Optional[Tracepoints] = None,
+        hostname: str = "",
+    ):
         self.model = model
         self._unpack = (tracepoints or Tracepoints(model)).unpack
         self._etypes = model.events
         self._lock = threading.Lock()
         self._tally = Tally()
+        if hostname:
+            self._tally.hostnames.add(hostname)
         #: open entry timestamps per (tid, provider:api) — LIFO like intervals
         self._open: Dict[Tuple[int, str], list] = {}
         self.events_seen = 0
@@ -63,6 +70,7 @@ class OnlineAnalyzer:
                         if stack:
                             t0 = stack.pop()
                             self._stat(et.provider, et.api, False).add(max(0, ts - t0))
+                            self._tally.processes.add(pid)
                             self._tally.threads.add((pid, tid))
                     elif et.phase == "span":
                         payload = memoryview(chunk)[off + RECORD_HEADER_SIZE : off + total]
@@ -73,6 +81,8 @@ class OnlineAnalyzer:
                             # kernel name is the first post-span payload field
                             name = vals[2] if len(vals) > 2 and isinstance(vals[2], str) else et.api
                         self._stat(et.provider, name, True).add(max(0, t1 - t0))
+                        self._tally.processes.add(pid)
+                        self._tally.threads.add((pid, tid))
                 off += total
 
     def _stat(self, provider: str, api: str, device: bool) -> ApiStat:

@@ -1,0 +1,492 @@
+"""Live streaming multi-rank aggregation (THAPI §3.7 joined with §6).
+
+The offline path (aggregate.py) is a *batch* tree reduction over ``.tally``
+files; the online path (online.py) is a *single-process* live tally.  This
+module joins them into a streaming service — the network-transported,
+always-current version of ``aggregate_tree``:
+
+    rank (OnlineAnalyzer) ──snapshot──▶ local master ──composite──▶ global master
+                                             ▲                          ▲
+                                        iprof top                  iprof top
+
+  * Each traced rank periodically pushes a serialized tally snapshot (the
+    same msgpack encoding ``aggregate.save_tally`` uses) over TCP to a
+    master (:class:`SnapshotStreamer`, driven by the tracer's consumer
+    thread).
+  * A :class:`MasterServer` keeps the **latest** snapshot per source and
+    merges them with the tally monoid on demand.  Snapshots are cumulative,
+    so latest-wins merging is idempotent and converges to exactly the
+    offline ``combine_aggregates`` result once every rank has pushed its
+    final snapshot (tracer stop pushes one unconditionally).
+  * Masters compose into a configurable-fanout tree: a master constructed
+    with ``forward_to=`` periodically pushes its own composite upstream as a
+    single snapshot, exactly the paper's "each local master sends its
+    aggregate to the global master" — but live, while the ranks still run.
+  * ``iprof serve`` runs a master; ``iprof top`` attaches to any master and
+    renders the refreshing composite; :func:`query_composite` is the
+    programmatic client.
+
+Transport is deliberately tiny: length-prefixed msgpack frames (4-byte
+big-endian length + body), one dict message per frame, ``type`` key selects
+the handler.  Snapshots are kilobytes (§3.7), so a 64 MiB frame cap is
+generous headroom, not a tuning knob.
+
+Failure model: the traced application must never block or crash because a
+master is slow, absent, or restarting.  The streamer connects lazily,
+retries with backoff, and *drops* snapshots it cannot deliver (counted in
+``dropped``) — the next successful push carries the full cumulative state,
+so nothing is lost but latency.
+"""
+
+from __future__ import annotations
+
+import os
+import socket
+import struct
+import threading
+import time
+from typing import Dict, List, Optional, Tuple, Union
+
+import msgpack
+
+from .aggregate import merge_tallies
+from .plugins.tally import Tally
+
+PROTOCOL_VERSION = 1
+MAX_FRAME = 64 << 20  # frames are tally snapshots: KBs in practice (§3.7)
+_HDR = struct.Struct("!I")
+
+
+class ProtocolError(RuntimeError):
+    """Malformed or truncated frame on a stream connection."""
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+
+def pack_frame(msg: dict) -> bytes:
+    """One message → one length-prefixed msgpack frame."""
+    body = msgpack.packb(msg, use_bin_type=True)
+    if len(body) > MAX_FRAME:
+        raise ProtocolError(f"frame of {len(body)} bytes exceeds cap {MAX_FRAME}")
+    return _HDR.pack(len(body)) + body
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return bytes(buf)
+
+
+def recv_frame(sock: socket.socket) -> Optional[dict]:
+    """Read one frame; None on clean EOF, ProtocolError on a torn frame."""
+    hdr = _recv_exact(sock, _HDR.size)
+    if hdr is None:
+        return None
+    (n,) = _HDR.unpack(hdr)
+    if n > MAX_FRAME:
+        raise ProtocolError(f"peer announced {n}-byte frame (cap {MAX_FRAME})")
+    body = _recv_exact(sock, n)
+    if body is None:
+        raise ProtocolError("connection closed mid-frame")
+    return msgpack.unpackb(body, raw=False)
+
+
+def parse_addr(addr: Union[str, Tuple[str, int]]) -> Tuple[str, int]:
+    """``"host:port"`` / ``":port"`` / ``(host, port)`` → ``(host, port)``."""
+    if isinstance(addr, tuple):
+        return addr[0], int(addr[1])
+    host, _, port = addr.rpartition(":")
+    return (host or "127.0.0.1"), int(port)
+
+
+def default_source(rank: int = 0) -> str:
+    return f"{socket.gethostname()}:{os.getpid()}:rank{rank}"
+
+
+# ---------------------------------------------------------------------------
+# Rank side: snapshot push client
+# ---------------------------------------------------------------------------
+
+
+class SnapshotStreamer:
+    """Pushes cumulative tally snapshots to a master; never blocks tracing.
+
+    Push cadence belongs to the caller (the tracer's consumer thread, a
+    master's forwarder loop); ``push(tally)`` always sends — the tracer's
+    stop path relies on that for the final, authoritative snapshot.
+    """
+
+    def __init__(
+        self,
+        addr: Union[str, Tuple[str, int]],
+        source: str,
+        retry_s: float = 0.5,
+        timeout_s: float = 2.0,
+    ):
+        self.addr = parse_addr(addr)
+        self.source = source
+        self.retry_s = retry_s
+        self.timeout_s = timeout_s
+        self.pushed = 0
+        self.dropped = 0
+        self._seq = 0
+        self._sock: Optional[socket.socket] = None
+        self._next_retry = 0.0
+        self._lock = threading.Lock()
+
+    def push(self, tally: Union[Tally, dict]) -> bool:
+        msg = {
+            "type": "snapshot",
+            "v": PROTOCOL_VERSION,
+            "source": self.source,
+            "seq": self._seq,
+            "ts": time.time(),
+            "tally": tally.to_obj() if isinstance(tally, Tally) else tally,
+        }
+        with self._lock:
+            sock = self._ensure_conn()
+            if sock is None:
+                self.dropped += 1
+                return False
+            try:
+                sock.sendall(pack_frame(msg))
+            except OSError:
+                self._drop_conn()
+                self.dropped += 1
+                return False
+            self._seq += 1
+            self.pushed += 1
+            return True
+
+    def _ensure_conn(self) -> Optional[socket.socket]:
+        if self._sock is not None:
+            return self._sock
+        if time.monotonic() < self._next_retry:
+            return None
+        try:
+            s = socket.create_connection(self.addr, timeout=self.timeout_s)
+            s.settimeout(self.timeout_s)
+            s.sendall(
+                pack_frame(
+                    {"type": "hello", "v": PROTOCOL_VERSION, "source": self.source}
+                )
+            )
+        except OSError:
+            self._next_retry = time.monotonic() + self.retry_s
+            return None
+        self._sock = s
+        return s
+
+    def _drop_conn(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def close(self) -> None:
+        with self._lock:
+            if self._sock is not None:
+                try:
+                    self._sock.sendall(pack_frame({"type": "bye", "source": self.source}))
+                except OSError:
+                    pass
+                self._drop_conn()
+
+
+# ---------------------------------------------------------------------------
+# Master daemon (local or global, depending on forward_to)
+# ---------------------------------------------------------------------------
+
+
+class MasterServer:
+    """Streaming master: latest-snapshot-per-source store + monoid merge.
+
+    * leaf ranks (or child masters) connect and push ``snapshot`` frames;
+    * any client may send ``query`` and gets the current composite back;
+    * with ``forward_to=`` set this is a *local* master: a forwarder thread
+      periodically pushes the composite upstream as one snapshot, making the
+      whole arrangement the live fanout tree of §3.7.
+    """
+
+    def __init__(
+        self,
+        port: int = 0,
+        host: str = "127.0.0.1",
+        forward_to: Optional[Union[str, Tuple[str, int]]] = None,
+        forward_period_s: float = 0.5,
+        fanout: int = 32,
+        source: Optional[str] = None,
+    ):
+        self.host = host
+        self.port = port  # rebound to the real port at start()
+        self.fanout = fanout
+        self.forward_to = forward_to
+        self.forward_period_s = forward_period_s
+        self.source = source or f"master:{socket.gethostname()}:{os.getpid()}"
+        #: source → (seq, cumulative tally, wall-clock receipt time)
+        self._latest: Dict[str, Tuple[int, Tally, float]] = {}
+        self._lock = threading.Lock()
+        self._dirty = False
+        self.frames = 0
+        self.snapshots = 0
+        self.queries = 0
+        self._lsock: Optional[socket.socket] = None
+        self._stop_evt = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._conns: List[socket.socket] = []
+        self._forwarder: Optional[SnapshotStreamer] = None
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "MasterServer":
+        ls = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        ls.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        ls.bind((self.host, self.port))
+        ls.listen(128)
+        self._lsock = ls
+        self.port = ls.getsockname()[1]
+        self._stop_evt.clear()
+        acceptor = threading.Thread(
+            target=self._accept_loop, name="thapi-master-accept", daemon=True
+        )
+        acceptor.start()
+        self._threads.append(acceptor)
+        if self.forward_to is not None:
+            self._forwarder = SnapshotStreamer(self.forward_to, source=self.source)
+            fwd = threading.Thread(
+                target=self._forward_loop, name="thapi-master-forward", daemon=True
+            )
+            fwd.start()
+            self._threads.append(fwd)
+        return self
+
+    def stop(self) -> None:
+        self._stop_evt.set()
+        if self._lsock is not None:
+            try:
+                self._lsock.close()
+            except OSError:
+                pass
+            self._lsock = None
+        if self._forwarder is not None:
+            self.flush(force=True)  # last composite must reach the parent
+            self._forwarder.close()
+        with self._lock:
+            conns, self._conns = self._conns, []
+            threads, self._threads = list(self._threads), []
+        for c in conns:
+            try:
+                c.close()
+            except OSError:
+                pass
+        for t in threads:
+            t.join(timeout=2.0)
+
+    def __enter__(self) -> "MasterServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    @property
+    def addr(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    @property
+    def forwarder(self) -> Optional[SnapshotStreamer]:
+        """The upstream push client (local masters only), for its counters."""
+        return self._forwarder
+
+    # -- state ---------------------------------------------------------------
+    def submit(
+        self, source: str, tally: Union[Tally, dict], seq: Optional[int] = None
+    ) -> None:
+        """Ingest a cumulative snapshot (socket handlers and the in-process
+        tracer both land here). Out-of-order frames (seq < stored) are stale
+        duplicates of state we already supersede — dropped."""
+        if not isinstance(tally, Tally):
+            tally = Tally.from_obj(tally)
+        with self._lock:
+            prev = self._latest.get(source)
+            if prev is not None and seq is not None and seq < prev[0]:
+                return
+            nseq = seq if seq is not None else (prev[0] + 1 if prev else 0)
+            self._latest[source] = (nseq, tally, time.time())
+            self.snapshots += 1
+            self._dirty = True
+
+    def _reset_seq(self, source: str) -> None:
+        with self._lock:
+            prev = self._latest.get(source)
+            if prev is not None:
+                # keep the last tally but accept any future seq from it
+                self._latest[source] = (-1, prev[1], prev[2])
+
+    def composite(self) -> Tally:
+        """Tree-merge the latest snapshot of every source (fanout-ary, like
+        the offline ``aggregate_tree``). Sources' stored tallies are never
+        mutated — merging runs on defensive copies."""
+        with self._lock:
+            copies = [Tally().merge(t) for (_, t, _) in self._latest.values()]
+        if not copies:
+            return Tally()
+        comp, _ = merge_tallies(copies, fanout=self.fanout)
+        return comp
+
+    def stats(self) -> dict:
+        with self._lock:
+            sources = len(self._latest)
+            updated = max((ts for (_, _, ts) in self._latest.values()), default=0.0)
+        return {
+            "sources": sources,
+            "frames": self.frames,
+            "snapshots": self.snapshots,
+            "queries": self.queries,
+            "updated": updated,
+            "forwarding": self.forward_to is not None,
+        }
+
+    def flush(self, force: bool = False) -> bool:
+        """Push the composite upstream now (local masters only)."""
+        if self._forwarder is None:
+            return False
+        with self._lock:
+            if not self._latest or (not self._dirty and not force):
+                return False
+            self._dirty = False
+        ok = self._forwarder.push(self.composite())
+        if not ok:
+            # parent unreachable: keep the trigger armed so the composite is
+            # re-forwarded once the parent comes back, not lost forever
+            with self._lock:
+                self._dirty = True
+        return ok
+
+    # -- threads -------------------------------------------------------------
+    def _accept_loop(self) -> None:
+        ls = self._lsock
+        while not self._stop_evt.is_set():
+            try:
+                conn, _peer = ls.accept()
+            except OSError:
+                break
+            with self._lock:
+                self._conns.append(conn)
+            t = threading.Thread(
+                target=self._client_loop, args=(conn,), name="thapi-master-conn", daemon=True
+            )
+            with self._lock:
+                self._threads.append(t)
+            t.start()
+
+    def _client_loop(self, conn: socket.socket) -> None:
+        try:
+            while not self._stop_evt.is_set():
+                try:
+                    msg = recv_frame(conn)
+                except (ProtocolError, OSError):
+                    break
+                if msg is None:
+                    break
+                self.frames += 1
+                kind = msg.get("type")
+                if kind == "snapshot":
+                    self.submit(
+                        str(msg.get("source", "?")), msg["tally"], msg.get("seq")
+                    )
+                elif kind == "hello":
+                    # a fresh connection restarts the peer's seq counter (e.g.
+                    # a new Tracer session in the same process): forget the
+                    # stored seq so its snapshots aren't dropped as stale
+                    self._reset_seq(str(msg.get("source", "?")))
+                elif kind == "query":
+                    self.queries += 1
+                    try:
+                        conn.sendall(pack_frame(self._composite_msg()))
+                    except OSError:
+                        break
+                elif kind == "ping":
+                    try:
+                        conn.sendall(pack_frame({"type": "pong", "v": PROTOCOL_VERSION}))
+                    except OSError:
+                        break
+                elif kind == "bye":
+                    break
+                # unknown types: ignored, no reply needed
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+            # long-lived masters see many short query connections: prune, or
+            # _conns/_threads grow without bound
+            with self._lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+                cur = threading.current_thread()
+                if cur in self._threads:
+                    self._threads.remove(cur)
+
+    def _forward_loop(self) -> None:
+        while not self._stop_evt.wait(self.forward_period_s):
+            self.flush()
+
+    def _composite_msg(self) -> dict:
+        comp = self.composite()
+        st = self.stats()
+        return {
+            "type": "composite",
+            "v": PROTOCOL_VERSION,
+            "tally": comp.to_obj(),
+            "sources": st["sources"],
+            "snapshots": st["snapshots"],
+            "updated": st["updated"],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Query client (iprof top, serve layer, tests)
+# ---------------------------------------------------------------------------
+
+
+def query_composite(
+    addr: Union[str, Tuple[str, int]], timeout_s: float = 3.0
+) -> Tuple[Tally, dict]:
+    """One-shot request: connect to a master, fetch (composite, meta)."""
+    host, port = parse_addr(addr)
+    with socket.create_connection((host, port), timeout=timeout_s) as s:
+        s.settimeout(timeout_s)
+        s.sendall(pack_frame({"type": "query", "v": PROTOCOL_VERSION}))
+        msg = recv_frame(s)
+    if not msg or msg.get("type") != "composite":
+        raise ProtocolError(f"expected composite reply, got {msg!r}")
+    meta = {k: msg[k] for k in ("sources", "snapshots", "updated") if k in msg}
+    return Tally.from_obj(msg["tally"]), meta
+
+
+def live_snapshot() -> Optional[Tally]:
+    """Global live profile of the *current process*, if a session is tracing.
+
+    With ``serve_port`` set the tracer runs an in-process master, so the
+    snapshot covers every source streaming to it (the global view); plain
+    ``online=True`` yields this rank's own live tally; otherwise None.
+    """
+    from .tracer import active_tracer
+
+    tr = active_tracer()
+    if tr is None:
+        return None
+    server = getattr(tr, "server", None)
+    if server is not None:
+        return server.composite()
+    if tr.online is not None:
+        return tr.online.snapshot()
+    return None

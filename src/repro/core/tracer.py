@@ -60,6 +60,17 @@ class TraceConfig:
     #: §6 future work, implemented: maintain a LIVE tally on the consumer
     #: thread (read via tracer.online.snapshot() mid-run)
     online: bool = False
+    #: §3.7+§6 streaming: push live tally snapshots to a master at
+    #: "host:port" (see core/stream.py). Implies ``online``.
+    stream_to: Optional[str] = None
+    #: snapshot push period; the final snapshot at stop() is always pushed
+    stream_period_s: float = 0.25
+    #: run an in-process master on this port (0 = ephemeral) serving this
+    #: rank's live tally — and, via ``stream_to`` on other ranks, theirs too;
+    #: ``iprof top`` attaches here. Implies ``online``.
+    serve_port: Optional[int] = None
+    #: master-tree fanout used when this process is itself a master
+    stream_fanout: int = 32
     #: extra per-event overrides applied after the mode preset, e.g.
     #: {"ust_jaxrt:alloc_entry": False}
     event_overrides: Optional[Dict[str, bool]] = None
@@ -67,6 +78,8 @@ class TraceConfig:
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.stream_to is not None or self.serve_port is not None:
+            self.online = True
 
 
 def events_for_mode(model: TraceModel, mode: str, sample: bool) -> Set[int]:
@@ -128,6 +141,9 @@ class TraceHandle:
     dropped: int
     size_bytes: int
     aggregate_path: Optional[str] = None
+    #: snapshots delivered / undeliverable to the stream_to master
+    streamed: int = 0
+    stream_dropped: int = 0
 
 
 class Tracer:
@@ -144,6 +160,10 @@ class Tracer:
         self._sampler: Optional[_telemetry.TelemetryDaemon] = None
         self._started = False
         self.online = None  # OnlineAnalyzer when cfg.online
+        self.streamer = None  # SnapshotStreamer when cfg.stream_to
+        self.server = None  # MasterServer when cfg.serve_port
+        self._stream_source = ""
+        self._stream_next = 0.0
         #: rank selected for tracing? (§3.2 selective rank tracing)
         self.selected = cfg.ranks is None or cfg.rank in set(cfg.ranks)
 
@@ -178,7 +198,27 @@ class Tracer:
         if self.cfg.online:
             from .online import OnlineAnalyzer
 
-            self.online = OnlineAnalyzer(self.model, self.tp)
+            self.online = OnlineAnalyzer(
+                self.model, self.tp, hostname=socket.gethostname()
+            )
+        if self.cfg.serve_port is not None or self.cfg.stream_to is not None:
+            from .stream import MasterServer, SnapshotStreamer, default_source
+
+            self._stream_source = default_source(self.cfg.rank)
+            if self.cfg.serve_port is not None:
+                # In-process master: serves this rank's live tally (plus any
+                # children streaming to it); forwards upstream when stream_to
+                # is also set — this rank then acts as a local master.
+                self.server = MasterServer(
+                    port=self.cfg.serve_port,
+                    forward_to=self.cfg.stream_to,
+                    forward_period_s=self.cfg.stream_period_s,
+                    fanout=self.cfg.stream_fanout,
+                ).start()
+            else:
+                self.streamer = SnapshotStreamer(
+                    self.cfg.stream_to, source=self._stream_source
+                )
         self._stop_evt.clear()
         self._consumer = threading.Thread(
             target=self._consumer_loop, name="thapi-consumer", daemon=True
@@ -203,44 +243,59 @@ class Tracer:
             self._started = False
             self.handle = TraceHandle(self.cfg.out_dir, self.cfg.mode, 0, 0, 0)
             return self.handle
-        if self._sampler is not None:
-            self._sampler.stop()
-        self.tp.detach()  # stop producing before the final drain
-        self._stop_evt.set()
-        assert self._consumer is not None
-        self._consumer.join(timeout=10.0)
-        self._drain_once()  # final drain catches post-loop residue
-        for w in self._writers.values():
-            w.close()
-        assert self.registry is not None and self.clock is not None
-        write_metadata(
-            self.cfg.out_dir,
-            self.model,
-            self.clock,
-            env={
-                "hostname": socket.gethostname(),
-                "pid": os.getpid(),
-                "argv": sys.argv,
-                "rank": self.cfg.rank,
-                "sample": self.cfg.sample,
-            },
-            mode=self.cfg.mode,
-        )
-        events = self.registry.total_events
-        dropped = self.registry.total_dropped
-        agg_path = None
-        if self.cfg.aggregate_only:
-            agg_path = self._write_aggregate_and_prune()
-        self.handle = TraceHandle(
-            trace_dir=self.cfg.out_dir,
-            mode=self.cfg.mode,
-            events=events,
-            dropped=dropped,
-            size_bytes=trace_size_bytes(self.cfg.out_dir),
-            aggregate_path=agg_path,
-        )
-        _ACTIVE = None
-        self._started = False
+        try:
+            if self._sampler is not None:
+                self._sampler.stop()
+            self.tp.detach()  # stop producing before the final drain
+            self._stop_evt.set()
+            assert self._consumer is not None
+            self._consumer.join(timeout=10.0)
+            self._drain_once()  # final drain catches post-loop residue
+            self._stream_tick(final=True)  # authoritative last snapshot
+            if self.streamer is not None:
+                self.streamer.close()
+            if self.server is not None:
+                self.server.stop()  # flushes the composite upstream first
+            for w in self._writers.values():
+                w.close()
+            assert self.registry is not None and self.clock is not None
+            write_metadata(
+                self.cfg.out_dir,
+                self.model,
+                self.clock,
+                env={
+                    "hostname": socket.gethostname(),
+                    "pid": os.getpid(),
+                    "argv": sys.argv,
+                    "rank": self.cfg.rank,
+                    "sample": self.cfg.sample,
+                },
+                mode=self.cfg.mode,
+            )
+            events = self.registry.total_events
+            dropped = self.registry.total_dropped
+            agg_path = None
+            if self.cfg.aggregate_only:
+                agg_path = self._write_aggregate_and_prune()
+            # upstream delivery counters live on the leaf streamer, or on the
+            # in-process master's forwarder when this rank is a local master
+            pusher = self.streamer
+            if pusher is None and self.server is not None:
+                pusher = self.server.forwarder
+            self.handle = TraceHandle(
+                trace_dir=self.cfg.out_dir,
+                mode=self.cfg.mode,
+                events=events,
+                dropped=dropped,
+                size_bytes=trace_size_bytes(self.cfg.out_dir),
+                aggregate_path=agg_path,
+                streamed=pusher.pushed if pusher else 0,
+                stream_dropped=pusher.dropped if pusher else 0,
+            )
+        finally:
+            # a failed teardown must never leave the process un-traceable
+            _ACTIVE = None
+            self._started = False
         return self.handle
 
     def __enter__(self) -> "Tracer":
@@ -269,6 +324,27 @@ class Tracer:
     def _consumer_loop(self) -> None:
         while not self._stop_evt.wait(self.cfg.flush_period_s):
             self._drain_once()
+            self._stream_tick()
+
+    def _stream_tick(self, final: bool = False) -> None:
+        """Push the live tally to the streaming service (§3.7+§6).
+
+        One snapshot feeds both targets: the in-process master (when this
+        rank serves) and the upstream master (when this rank is a leaf).
+        The final push at stop() is unconditional — it carries the
+        authoritative cumulative tally the composite converges on.
+        """
+        if self.online is None or (self.streamer is None and self.server is None):
+            return
+        t = time.monotonic()
+        if not final and t < self._stream_next:
+            return
+        self._stream_next = t + self.cfg.stream_period_s
+        snap = self.online.snapshot()
+        if self.server is not None:
+            self.server.submit(self._stream_source, snap)
+        if self.streamer is not None:
+            self.streamer.push(snap)
 
     # -- §3.7 aggregate-only ---------------------------------------------------
     def _write_aggregate_and_prune(self) -> str:

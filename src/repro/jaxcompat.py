@@ -1,0 +1,64 @@
+"""Compatibility layer for the jax API surface this repo uses.
+
+The codebase targets the modern mesh/sharding API (``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=)``, ``jax.shard_map(..., check_vma=)``,
+``AbstractMesh(sizes, names)``); older jaxlib builds (< 0.5) predate all four
+spellings.  Every mesh/shard_map construction in the repo goes through these
+helpers so the rest of the code can write the modern form once.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import AbstractMesh, Mesh
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # noqa: F401
+
+    _HAS_AXIS_TYPE = True
+except ImportError:
+    AxisType = None
+    _HAS_AXIS_TYPE = False
+
+try:  # jax >= 0.6 exposes shard_map at top level (check_vma spelling)
+    from jax import shard_map as _new_shard_map
+except ImportError:
+    _new_shard_map = None
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    if _HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names), axis_types=(AxisType.Auto,) * len(axis_names)
+        )
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def device_mesh(devices, axis_names: Sequence[str]) -> Mesh:
+    """``Mesh`` over an explicit device array, Auto axis types where supported."""
+    if _HAS_AXIS_TYPE:
+        return Mesh(devices, tuple(axis_names), axis_types=(AxisType.Auto,) * len(axis_names))
+    return Mesh(devices, tuple(axis_names))
+
+
+def make_abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]) -> AbstractMesh:
+    """``AbstractMesh(sizes, names)``; old jax spells it ``((name, size), ...)``."""
+    try:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map``; ``check_vma`` maps to legacy ``check_rep``."""
+    if _new_shard_map is not None:
+        return _new_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    return _old_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )

@@ -10,14 +10,16 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.jaxcompat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16×16 chips per pod; 2 pods for the multi-pod dry-run."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: Optional[int] = None) -> Mesh:
@@ -26,7 +28,7 @@ def make_local_mesh(model_parallel: Optional[int] = None) -> Mesh:
     mp = model_parallel or 1
     if n % mp:
         raise ValueError(f"{n} devices not divisible by model_parallel={mp}")
-    return jax.make_mesh((n // mp, mp), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((n // mp, mp), ("data", "model"))
 
 
 def describe(mesh: Mesh) -> str:

@@ -16,6 +16,7 @@ import sys
 import jax
 
 from repro.configs import ARCHS, get_config
+from repro.jaxcompat import make_mesh
 from repro.core import TraceConfig, Tracer
 from repro.core.plugins.tally import render, tally_trace
 from repro.models import Model, ShapeSpec
@@ -50,7 +51,7 @@ def main(argv=None) -> int:
         )
         return 2
 
-    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
     model = Model(cfg, mesh)
     shape = ShapeSpec("cli", "train", args.seq, args.batch)
     trainer = Trainer(

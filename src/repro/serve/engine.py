@@ -171,3 +171,24 @@ class ServeEngine:
             if not self.step() and not self.queue:
                 break
         return self.completed
+
+    # -- live profile (§3.7+§6 streaming service) ------------------------------
+    def live_tally(self):
+        """Live tally of the surrounding tracing session, or None.
+
+        Requires the engine to run under ``Tracer(TraceConfig(online=True))``
+        (or any streaming knob, which implies it).  With ``serve_port`` set
+        the session runs an in-process master, so this is the *global*
+        composite — the prefill/decode spans of this server merged with
+        every rank streaming into it.
+        """
+        from repro.core.stream import live_snapshot
+
+        return live_snapshot()
+
+    def live_profile(self, top: Optional[int] = None) -> Optional[str]:
+        """Rendered live tally (the §4.3 table) for /profile-style endpoints."""
+        from repro.core.plugins.tally import render
+
+        t = self.live_tally()
+        return None if t is None else render(t, top=top)

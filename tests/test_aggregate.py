@@ -2,10 +2,9 @@
 The paper validated 512-node runs — we simulate a 512-rank aggregation."""
 
 import math
+import random
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core.aggregate import (
     aggregate_tree,
@@ -84,13 +83,36 @@ def test_aggregate_tree_empty_raises():
         aggregate_tree([], lambda a, b: a)
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    ns=st.lists(st.integers(min_value=1, max_value=10_000), min_size=1, max_size=64),
-    fanout=st.integers(min_value=2, max_value=16),
-)
-def test_property_tree_sum_invariant(ns, fanout):
-    """Aggregation result is independent of tree shape (monoid property)."""
+def test_property_tree_sum_invariant_hypothesis():
+    """Aggregation result is independent of tree shape (monoid property).
+
+    Property-based version; ``hypothesis`` is an optional dev dependency
+    (requirements-dev.txt) — skipped when absent, with the seeded pure-pytest
+    fallback below covering the same invariant.
+    """
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(max_examples=30, deadline=None)
+    @hypothesis.given(
+        ns=st.lists(st.integers(min_value=1, max_value=10_000), min_size=1, max_size=64),
+        fanout=st.integers(min_value=2, max_value=16),
+    )
+    def prop(ns, fanout):
+        total, stats = aggregate_tree(list(ns), lambda a, b: a + b, fanout=fanout)
+        assert total == sum(ns)
+        assert stats.messages == len(ns) - 1
+
+    prop()
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_property_tree_sum_invariant_fallback(seed):
+    """Pure-pytest fallback for the monoid invariant: seeded random lists and
+    fanouts instead of hypothesis-generated ones."""
+    rng = random.Random(seed)
+    ns = [rng.randint(1, 10_000) for _ in range(rng.randint(1, 64))]
+    fanout = rng.randint(2, 16)
     total, stats = aggregate_tree(list(ns), lambda a, b: a + b, fanout=fanout)
     assert total == sum(ns)
     assert stats.messages == len(ns) - 1

@@ -2,12 +2,11 @@
 robustness to truncated streams (crash mid-write), interval filter edges."""
 
 import os
+import random
 import struct
 
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import TraceConfig, Tracer, traced_jit, train_step_span
 from repro.core.babeltrace import CTFSource, IntervalFilter, muxer
@@ -33,16 +32,45 @@ def test_muxer_emits_global_time_order(tmp_path):
     assert len(ts) > 0
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.lists(st.integers(0, 10_000), min_size=0, max_size=20), min_size=1, max_size=5))
-def test_property_muxer_merges_sorted_streams(streams):
-    class E:  # minimal Event stand-in
-        def __init__(self, ts):
-            self.ts = ts
+class _E:  # minimal Event stand-in for muxer property tests
+    def __init__(self, ts):
+        self.ts = ts
 
-    its = [iter([E(t) for t in sorted(s)]) for s in streams]
+
+def _check_muxer_merges(streams):
+    its = [iter([_E(t) for t in sorted(s)]) for s in streams]
     merged = [e.ts for e in muxer(its)]
     assert merged == sorted(t for s in streams for t in s)
+
+
+def test_property_muxer_merges_sorted_streams_hypothesis():
+    """Property-based; hypothesis is optional (see requirements-dev.txt)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(max_examples=20, deadline=None)
+    @hypothesis.given(
+        st.lists(
+            st.lists(st.integers(0, 10_000), min_size=0, max_size=20),
+            min_size=1,
+            max_size=5,
+        )
+    )
+    def prop(streams):
+        _check_muxer_merges(streams)
+
+    prop()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_property_muxer_merges_sorted_streams_fallback(seed):
+    """Seeded pure-pytest fallback for the muxer merge invariant."""
+    rng = random.Random(seed)
+    streams = [
+        [rng.randint(0, 10_000) for _ in range(rng.randint(0, 20))]
+        for _ in range(rng.randint(1, 5))
+    ]
+    _check_muxer_merges(streams)
 
 
 def test_metababel_dispatch_callbacks(tmp_path):

@@ -20,14 +20,15 @@ _SCRIPT = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType, PartitionSpec as P, NamedSharding
+    from jax.sharding import PartitionSpec as P, NamedSharding
 
     from repro.configs import get_config
+    from repro.jaxcompat import device_mesh, make_mesh, shard_map
     from repro.models import Model, ShapeSpec
     from repro.models.moe import _moe_dense, moe_ffn
     from repro.sharding import Partitioner
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = get_config("moonshot-v1-16b-a3b").smoke()   # 8 experts, top-2
     model = Model(cfg, mesh)
     params = model.init(jax.random.PRNGKey(0))
@@ -62,13 +63,12 @@ _SCRIPT = textwrap.dedent(
 
     # --- compressed_mean vs pmean --------------------------------------------
     from repro.optim.compression import compressed_mean
-    from jax import shard_map
     g = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
-    mesh1 = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh1 = make_mesh((8,), ("data",))
     want = jnp.mean(g, axis=0)
     got = shard_map(
         lambda v: compressed_mean(v[0], "data"),
-        mesh=mesh1, in_specs=P("data"), out_specs=P(), check_vma=False,
+        mesh1, P("data"), P(),
     )(g)
     cerr = float(jnp.max(jnp.abs(got - want)))
     # int8 quantization error bound: half a step of the largest row scale
@@ -91,9 +91,7 @@ _SCRIPT = textwrap.dedent(
     with mesh:
         _, met_sh = step_sh(state_sh, batch)
 
-    from jax.sharding import Mesh
-    mesh1x1 = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"),
-                   axis_types=(AxisType.Auto,) * 2)
+    mesh1x1 = device_mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     m_1 = Model(dcfg, mesh1x1)
     step_1, *_ = build_train_artifacts(m_1, Partitioner(mesh1x1), shape, tc)
     state_1 = init_state(m_1, tc, jax.random.PRNGKey(1))

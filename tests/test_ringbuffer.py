@@ -5,8 +5,7 @@ import struct
 import threading
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests.hypothesis_optional import given, settings, st
 
 from repro.core.ringbuffer import RECORD_HEADER, RingBuffer, RingRegistry
 

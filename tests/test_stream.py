@@ -1,0 +1,357 @@
+"""Streaming aggregation service (§3.7+§6): framing, master merge vs the
+offline batch combine, the forwarding tree, and tracer-driven end-to-end."""
+
+import os
+import socket
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core.aggregate import combine_aggregates, save_tally
+from repro.core.plugins.tally import ApiStat, Tally
+from repro.core.stream import (
+    MasterServer,
+    ProtocolError,
+    SnapshotStreamer,
+    pack_frame,
+    parse_addr,
+    query_composite,
+    recv_frame,
+)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def mk_tally(rank: int, calls: int = 10) -> Tally:
+    t = Tally()
+    t.hostnames.add(f"node{rank // 8:03d}")
+    t.processes.add(rank)
+    t.threads.add((rank, 1))
+    st = ApiStat()
+    for i in range(calls):
+        st.add(1000 + rank + i)
+    t.apis[("ust_repro", "train_step")] = st
+    s2 = ApiStat()
+    s2.add(50 * (rank + 1))
+    t.device_apis[("ust_kernel", "k")] = s2
+    return t
+
+
+def totals(t: Tally):
+    out = {}
+    for label, table in (("host", t.apis), ("device", t.device_apis)):
+        for key, st in table.items():
+            out[(label,) + key] = (st.calls, st.total_ns)
+    return out
+
+
+def wait_until(pred, timeout_s=5.0, period_s=0.02):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(period_s)
+    return pred()
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+
+def test_frame_roundtrip_over_socketpair():
+    a, b = socket.socketpair()
+    try:
+        msgs = [
+            {"type": "hello", "source": "r0"},
+            {"type": "snapshot", "seq": 3, "tally": mk_tally(2).to_obj()},
+            {"type": "query"},
+        ]
+        for m in msgs:
+            a.sendall(pack_frame(m))
+        got = [recv_frame(b) for _ in msgs]
+        assert got == msgs
+        back = Tally.from_obj(got[1]["tally"])
+        assert back.to_obj() == mk_tally(2).to_obj()
+        a.close()
+        assert recv_frame(b) is None  # clean EOF
+    finally:
+        b.close()
+
+
+def test_frame_torn_mid_body_raises():
+    a, b = socket.socketpair()
+    try:
+        frame = pack_frame({"type": "snapshot", "tally": mk_tally(0).to_obj()})
+        a.sendall(frame[: len(frame) - 5])
+        a.close()
+        with pytest.raises(ProtocolError):
+            recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_frame_oversize_announcement_raises():
+    a, b = socket.socketpair()
+    try:
+        import struct
+
+        a.sendall(struct.pack("!I", (64 << 20) + 1))
+        with pytest.raises(ProtocolError):
+            recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_parse_addr():
+    assert parse_addr("10.0.0.1:9000") == ("10.0.0.1", 9000)
+    assert parse_addr(":9000") == ("127.0.0.1", 9000)
+    assert parse_addr(("h", 1)) == ("h", 1)
+
+
+# ---------------------------------------------------------------------------
+# Master: merge correctness against the offline batch path
+# ---------------------------------------------------------------------------
+
+
+def test_master_merge_matches_combine_aggregates(tmp_path):
+    """Streamed snapshots and `iprof combine` over the same tallies must
+    produce the same composite."""
+    n = 8
+    paths = []
+    for r in range(n):
+        p = str(tmp_path / f"rank{r}.tally")
+        save_tally(mk_tally(r), p)
+        paths.append(p)
+    offline = combine_aggregates(paths)
+
+    with MasterServer(port=0) as m:
+        for r in range(n):
+            s = SnapshotStreamer(m.addr, source=f"rank{r}")
+            assert s.push(mk_tally(r))
+            s.close()
+        assert wait_until(lambda: m.stats()["sources"] == n)
+        live, meta = query_composite(m.addr)
+
+    assert meta["sources"] == n
+    assert totals(live) == totals(offline)
+    assert live.hostnames == offline.hostnames
+    assert live.processes == offline.processes
+
+
+def test_master_latest_snapshot_wins():
+    """Snapshots are cumulative: a source's newer push replaces (never adds
+    to) its older one, so re-pushes don't double-count."""
+    with MasterServer(port=0) as m:
+        s = SnapshotStreamer(m.addr, source="r0")
+        assert s.push(mk_tally(0, calls=5))
+        assert s.push(mk_tally(0, calls=9))
+        s.close()
+        assert wait_until(lambda: m.stats()["snapshots"] == 2)
+        t, _ = query_composite(m.addr)
+    assert t.apis[("ust_repro", "train_step")].calls == 9
+
+
+def test_master_ignores_stale_out_of_order_seq():
+    m = MasterServer(port=0)
+    m.submit("r0", mk_tally(0, calls=9), seq=5)
+    m.submit("r0", mk_tally(0, calls=3), seq=2)  # stale duplicate
+    assert m.composite().apis[("ust_repro", "train_step")].calls == 9
+
+
+def test_master_composite_does_not_mutate_stored_tallies():
+    m = MasterServer(port=0)
+    for r in range(4):
+        m.submit(f"r{r}", mk_tally(r))
+    first = totals(m.composite())
+    assert totals(m.composite()) == first  # idempotent across calls
+
+
+def test_forward_tree_local_to_global():
+    """rank → local master → global master: totals survive the hop."""
+    with MasterServer(port=0) as g:
+        with MasterServer(port=0, forward_to=g.addr, forward_period_s=0.05) as l:
+            for r in range(4):
+                s = SnapshotStreamer(l.addr, source=f"rank{r}")
+                assert s.push(mk_tally(r))
+                s.close()
+            assert wait_until(lambda: l.stats()["sources"] == 4)
+            expect = totals(l.composite())
+            assert wait_until(
+                lambda: g.stats()["sources"] == 1
+                and totals(query_composite(g.addr)[0]) == expect
+            )
+            # local master shows up as ONE source at the global master
+            _, meta = query_composite(g.addr)
+            assert meta["sources"] == 1
+
+
+def test_forward_survives_parent_outage():
+    """A failed upstream push must re-arm the forward trigger: the composite
+    reaches the parent once it comes back, even with no new rank traffic."""
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    parent_port = probe.getsockname()[1]
+    probe.close()  # parent not up yet
+    local = MasterServer(
+        port=0, forward_to=f"127.0.0.1:{parent_port}", forward_period_s=0.05
+    ).start()
+    local._forwarder.retry_s = 0.01
+    try:
+        local.submit("r0", mk_tally(0))
+        assert not local.flush()  # parent down: push fails, trigger survives
+        with MasterServer(port=parent_port) as parent:
+            assert wait_until(lambda: parent.stats()["sources"] == 1)
+            t, _ = query_composite(parent.addr)
+            assert t.apis[("ust_repro", "train_step")].calls == 10
+    finally:
+        local.stop()
+
+
+def test_master_new_session_same_source_not_stale():
+    """A new session from the same source restarts seq at 0; its hello must
+    reset the stored seq so the fresh snapshots aren't dropped as stale."""
+    with MasterServer(port=0) as m:
+        s1 = SnapshotStreamer(m.addr, source="r0")
+        for calls in (3, 5, 7):  # seqs 0,1,2
+            assert s1.push(mk_tally(0, calls=calls))
+        s1.close()
+        assert wait_until(lambda: m.stats()["snapshots"] == 3)
+        s2 = SnapshotStreamer(m.addr, source="r0")  # seq restarts at 0
+        assert s2.push(mk_tally(0, calls=9))
+        s2.close()
+        assert wait_until(lambda: m.stats()["snapshots"] == 4)
+        t, _ = query_composite(m.addr)
+    assert t.apis[("ust_repro", "train_step")].calls == 9
+
+
+def test_streamer_drops_without_master_then_recovers():
+    """No master listening: pushes are dropped, tracing is never disturbed;
+    once a master appears the next cumulative push lands in full."""
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()  # nothing listening here now
+    s = SnapshotStreamer(f"127.0.0.1:{port}", source="r0", retry_s=0.01)
+    assert not s.push(mk_tally(0))
+    assert s.dropped == 1
+    with MasterServer(port=port) as m:
+        assert wait_until(lambda: s.push(mk_tally(0, calls=7)), timeout_s=2.0)
+        assert wait_until(lambda: m.stats()["sources"] == 1)
+        t, _ = query_composite(m.addr)
+        assert t.apis[("ust_repro", "train_step")].calls == 7
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# iprof top CLI against a live master
+# ---------------------------------------------------------------------------
+
+
+def test_iprof_top_renders_composite(capsys):
+    from repro.core.iprof import main as iprof
+
+    with MasterServer(port=0) as m:
+        m.submit("r0", mk_tally(0))
+        rc = iprof(["top", m.addr, "--iterations", "1", "--no-clear"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "train_step" in out and "1 sources" in out
+    assert "-- device --" in out  # mk_tally has device rows
+
+
+def test_iprof_top_unreachable_master(capsys):
+    from repro.core.iprof import main as iprof
+
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+    rc = iprof(["top", f"127.0.0.1:{port}", "--iterations", "1", "--timeout", "0.2"])
+    assert rc == 1
+
+
+# ---------------------------------------------------------------------------
+# Tracer-driven end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_streams_final_tally_matching_offline(tmp_path):
+    """Single rank, in-process: the tracer's consumer thread pushes live
+    snapshots; after stop the master composite equals tally_trace."""
+    import jax.numpy as jnp
+
+    from repro.core import TraceConfig, Tracer, traced_jit, train_step_span
+    from repro.core.plugins.tally import tally_trace
+
+    d = str(tmp_path / "t")
+    with MasterServer(port=0) as m:
+        f = traced_jit(lambda x: (x + 1).sum(), name="inc_sum")
+        x = jnp.arange(64.0)
+        cfg = TraceConfig(out_dir=d, mode="default", stream_to=m.addr, stream_period_s=0.05)
+        assert cfg.online  # streaming implies the live tally
+        with Tracer(cfg) as tr:
+            for s_ in range(5):
+                with train_step_span(s_, 2, 32) as sp:
+                    sp.outs["loss"] = float(f(x))
+                    sp.outs["grad_norm"] = 1.0
+                time.sleep(0.03)
+        assert tr.handle.streamed >= 1  # final push is unconditional
+        live, _ = query_composite(m.addr)
+    offline = tally_trace(d)
+    assert totals(live) == totals(offline)
+    assert live.hostnames == offline.hostnames
+
+
+def test_tracer_serve_port_mid_run_attach(tmp_path):
+    """serve_port runs an in-process master: a client can attach mid-run and
+    see the live profile of the traced process."""
+    import jax.numpy as jnp
+
+    from repro.core import TraceConfig, Tracer, live_snapshot, traced_jit, train_step_span
+
+    d = str(tmp_path / "t")
+    cfg = TraceConfig(out_dir=d, mode="default", serve_port=0, stream_period_s=0.02)
+    f = traced_jit(lambda x: (x * 2).sum(), name="dbl_sum")
+    x = jnp.arange(64.0)
+    with Tracer(cfg) as tr:
+        key = ("ust_repro", "train_step")
+        for s_ in range(4):
+            with train_step_span(s_, 2, 32) as sp:
+                sp.outs["loss"] = float(f(x))
+                sp.outs["grad_norm"] = 1.0
+        assert wait_until(
+            lambda: query_composite(f"127.0.0.1:{tr.server.port}")[0].apis.get(key)
+            is not None
+        )
+        assert live_snapshot() is not None  # serve-layer hook sees it too
+    assert live_snapshot() is None  # session over
+
+
+@pytest.mark.slow
+def test_two_rank_live_example_end_to_end():
+    """The acceptance scenario: examples/distributed_train.py --live runs two
+    local ranks streaming through a local master to a global master, and the
+    live composite must match `iprof combine` on the same run."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [
+            sys.executable,
+            os.path.join(REPO_ROOT, "examples", "distributed_train.py"),
+            "--live",
+            "--live-steps",
+            "6",
+        ],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=180,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "live composite matches offline combine" in proc.stdout

@@ -7,11 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests.hypothesis_optional import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
+from repro.jaxcompat import make_abstract_mesh, make_mesh
 from repro.data import DataConfig, SyntheticPipeline
 from repro.models import Model, ShapeSpec
 from repro.optim import (
@@ -169,38 +169,38 @@ def test_topk_roundtrip():
 
 @pytest.fixture(scope="module")
 def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_pspec_divisible(mesh11):
-    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     # with axis size 1, everything falls back to replication
     assert logical_to_pspec(("vocab", "embed"), (32000, 128), mesh) == P()
 
 
 def test_pspec_nondivisible_falls_back():
     # simulate a 16-way model axis via an abstract mesh
-    mesh = jax.sharding.AbstractMesh((16,), ("model",))
+    mesh = make_abstract_mesh((16,), ("model",))
     assert logical_to_pspec(("heads", None, None), (40, 1, 1), mesh) == P()  # 40 % 16 ≠ 0
     assert logical_to_pspec(("heads", None, None), (64, 1, 1), mesh) == P("model")
 
 
 def test_pspec_batch_axes_multi_pod():
-    mesh = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     assert logical_to_pspec(("batch", "seq"), (256, 4096), mesh) == P(("pod", "data"))
     # batch=1 cannot shard
     assert logical_to_pspec(("batch",), (1,), mesh) == P()
 
 
 def test_pspec_no_axis_reuse():
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     # both dims want "model": only the first gets it
     spec = logical_to_pspec(("mlp", "channels"), (1600, 1600), mesh)
     assert spec == P("model")
 
 
 def test_fsdp_rules_shard_embed_over_data():
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     part = Partitioner(mesh, fsdp=True)
     spec = part.pspec(("embed", "mlp"), (4096, 1600))
     assert spec == P("data", "model")

@@ -5,8 +5,7 @@ and meta-parameter-derived out fields."""
 import struct
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests.hypothesis_optional import given, settings, st
 
 from repro.core.api_model import (
     APIModel,

@@ -10,6 +10,7 @@ import pytest
 
 from repro.checkpoint import Checkpointer, latest_checkpoint
 from repro.configs import get_config
+from repro.jaxcompat import make_mesh
 from repro.models import Model, ShapeSpec
 from repro.sharding import Partitioner
 from repro.serve import Request, ServeConfig, ServeEngine
@@ -19,7 +20,7 @@ from repro.train.train_step import build_train_artifacts, init_state
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Docs link check: every relative markdown link must resolve to a file.
+
+Scans *.md at the repo root and under docs/ for [text](target) links, skips
+absolute URLs and mailto:, strips #anchors, and fails (exit 1) listing any
+target that does not exist on disk.  No network access — external links are
+out of scope by design so CI stays hermetic.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```.*?```", re.S)
+INLINE_CODE_RE = re.compile(r"`[^`]*`")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(root: str):
+    for name in sorted(os.listdir(root)):
+        if name.endswith(".md"):
+            yield os.path.join(root, name)
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        for name in sorted(os.listdir(docs)):
+            if name.endswith(".md"):
+                yield os.path.join(docs, name)
+
+
+def main() -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    broken = []
+    checked = 0
+    for path in md_files(root):
+        base = os.path.dirname(path)
+        text = open(path, encoding="utf-8").read()
+        # code spans/blocks legitimately contain []()-shaped text, not links
+        text = INLINE_CODE_RE.sub("", FENCE_RE.sub("", text))
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue
+            checked += 1
+            resolved = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(resolved):
+                broken.append(f"{os.path.relpath(path, root)}: {m.group(1)}")
+    if broken:
+        print("broken relative links:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"docs link check OK ({checked} relative links resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,7 +17,15 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="fewer steps / smaller suite")
     args = ap.parse_args()
 
-    from . import aggregate_scale, overhead, roofline, space, tally_table, tracepoint_cost
+    from . import (
+        aggregate_scale,
+        overhead,
+        roofline,
+        space,
+        stream_bw,
+        tally_table,
+        tracepoint_cost,
+    )
     from .workload import SUITE
 
     suite = SUITE[:2] if args.quick else SUITE
@@ -56,6 +64,12 @@ def main() -> None:
     print("\n== §3.7 512-rank aggregation tree ==")
     ag = aggregate_scale.main()
     csv.append(("aggregate_512_ranks", ag["merge_wall_s"] * 1e6, "us total"))
+
+    print("\n== §3.7+§6 wide-tally streaming: full vs delta bytes-on-wire ==")
+    bw = stream_bw.main(
+        width=500 if args.quick else 2000, rounds=10 if args.quick else 40
+    )
+    csv.append(("stream_delta_reduction", bw["ratio"], "x fewer bytes"))
 
     print("\n== §Roofline table (from dry-run artifacts) ==")
     roofline.main()

@@ -8,11 +8,13 @@ tally + validation report.
 
 ``--live`` instead demonstrates the §3.7+§6 streaming aggregation service on
 localhost: N worker processes each run a small traced workload, streaming
-live tally snapshots to a *local master* which forwards composites to a
-*global master* (the full fanout tree, live).  The driver renders the global
-composite while the ranks run — what ``iprof top`` shows — then proves the
-final live composite matches the offline ``iprof combine`` of the very same
-run's per-rank aggregates, API for API.
+live tally state (protocol-v2 delta frames) to a *local master* which
+forwards composites to a *global master* (the full fanout tree, live).  Each
+worker also runs an adaptive policy that retunes its snapshot cadence from
+the live ``busy_fraction`` of ``train_step`` mid-run.  The driver renders
+the global composite while the ranks run — what ``iprof top`` shows — then
+proves the final live composite matches the offline ``iprof combine`` of the
+very same run's per-rank aggregates, API for API.
 
     PYTHONPATH=src python examples/distributed_train.py --live
 """
@@ -60,15 +62,38 @@ def config_100m():
 
 
 def live_worker(rank: int, out_dir: str, addr: str, steps: int) -> None:
-    """One traced rank: tiny jit workload, snapshots streamed to ``addr``,
-    final aggregate also written to disk (aggregate_only) so the driver can
-    cross-check the live composite against ``iprof combine``."""
+    """One traced rank: tiny jit workload, tally state streamed to ``addr``
+    (v2 delta frames in steady state), final aggregate also written to disk
+    (aggregate_only) so the driver can cross-check the live composite
+    against ``iprof combine``.
+
+    Each worker also runs the §6 adaptive consumer: a cadence policy watches
+    the live windowed ``busy_fraction`` of ``train_step`` and retunes the
+    snapshot push period mid-run — snapshots arrive fast while the rank is
+    compiling/computing, slow while it idles.  Every knob turn is printed
+    and recorded as an ``ust_repro:advisory`` event in the trace.
+    """
     import jax.numpy as jnp
 
-    from repro.core import collective_span, traced_jit, train_step_span
+    from repro.core import (
+        AdaptiveController,
+        StreamCadencePolicy,
+        collective_span,
+        traced_jit,
+        train_step_span,
+    )
 
     f = traced_jit(lambda x: (x * x).sum(), name="square_sum")
     x = jnp.arange(128.0) + rank
+    ctrl = AdaptiveController(
+        [
+            StreamCadencePolicy(
+                "ust_repro", "train_step", high=0.05, low=0.005, fast_s=0.05, slow_s=0.5
+            )
+        ],
+        period_s=0.1,
+        on_action=lambda a: print(f"[rank {rank}] {a}", flush=True),
+    )
     cfg = TraceConfig(
         out_dir=out_dir,
         mode="default",
@@ -76,8 +101,9 @@ def live_worker(rank: int, out_dir: str, addr: str, steps: int) -> None:
         aggregate_only=True,
         stream_to=addr,
         stream_period_s=0.1,
+        adaptive=ctrl,
     )
-    with Tracer(cfg):
+    with Tracer(cfg) as tr:
         for s in range(steps):
             with train_step_span(s, 2, 64) as sp:
                 sp.outs["loss"] = float(f(x))
@@ -85,6 +111,13 @@ def live_worker(rank: int, out_dir: str, addr: str, steps: int) -> None:
             with collective_span("all_reduce", 128, "data", 2):
                 pass
             time.sleep(0.05)  # spread steps so mid-run snapshots differ
+    st = tr.streamer
+    print(
+        f"[rank {rank}] streamed {st.pushed} frames "
+        f"({st.delta_frames} deltas, {st.full_frames} full, {st.bytes_sent} B); "
+        f"{len(ctrl.actions)} adaptive knob turns",
+        flush=True,
+    )
 
 
 def _api_totals(t):
@@ -157,6 +190,12 @@ def run_live(args) -> int:
     local_m.stop()
     global_m.stop()
 
+    lst = local_m.stats()
+    print(
+        f"\n[live] local master ingested {lst['snapshots']} state updates "
+        f"({lst['deltas']} deltas, {lst['full_snapshots']} full snapshots, "
+        f"{lst['resyncs']} resyncs)"
+    )
     print("\n[live] final composite (streaming, via global master):")
     print(render(live))
     print("\n[live] offline combine of the same run's rank aggregates:")

@@ -11,6 +11,7 @@ Public API:
     from repro.core import TraceConfig, Tracer, trace_session       # collection
     from repro.core import traced_jit, kernel_span, collective_span # interception
     from repro.core import MasterServer, query_composite            # streaming
+    from repro.core import AdaptiveController, WidenSamplingPolicy  # §6 adaptive
     from repro.core.plugins.tally import tally_trace, render        # analysis
 """
 
@@ -33,11 +34,21 @@ from .interception import (  # noqa: F401
     traced_jit,
     train_step_span,
 )
+from .adaptive import (  # noqa: F401
+    AdaptiveAction,
+    AdaptiveController,
+    AdaptivePolicy,
+    RingPressurePolicy,
+    StreamCadencePolicy,
+    ThresholdAdvisoryPolicy,
+    WidenSamplingPolicy,
+)
 from .stream import (  # noqa: F401
     MasterServer,
     SnapshotStreamer,
     live_snapshot,
     query_composite,
+    subscribe_composites,
 )
 from .tracer import (  # noqa: F401
     MODES,

@@ -1,0 +1,454 @@
+"""Adaptive-optimization consumer (THAPI §6, the paper's closing vision).
+
+    "we are also working on online trace analysis, where tracing and analysis
+     can be performed concurrently to enable adaptive optimizations during
+     application runtime."
+
+``online.py`` gives a rank a *live tally*; ``stream.py`` gives the cluster a
+*live composite*.  This module closes the loop: an :class:`AdaptiveController`
+rides the tracer's consumer thread, computes **windowed** rates from
+successive live snapshots (busy fraction, per-call latency, ring-buffer
+drops), and hands them to pluggable :class:`AdaptivePolicy` objects that may
+turn session knobs *mid-run* — widen event sampling, resize ring buffers for
+new threads, retune snapshot cadence — or emit ``ust_repro:advisory`` events
+into the trace so the reconfiguration itself is visible post-mortem.
+
+Wiring:
+
+  * ``TraceConfig(adaptive=[...policies...])`` — the tracer builds a
+    controller and ticks it from the consumer loop every
+    ``adaptive_period_s`` (collection hot paths never see it);
+  * ``ServeEngine(..., adaptive=controller_or_policies)`` — the serving loop
+    ticks the same machinery between decode steps, with ``ctx.engine`` set
+    so policies can reach serving knobs;
+  * every knob change is recorded as an :class:`AdaptiveAction` (see
+    ``controller.actions``) *and* traced as an advisory event.
+
+Windowed metrics, not cumulative ones: ``OnlineAnalyzer.busy_fraction`` is
+share-of-total since session start; a policy reacting mid-run needs the
+share over the *last* window, so the controller diffs consecutive snapshots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, List, Optional, Sequence, Tuple, Union
+
+from .plugins.tally import Tally
+
+
+@dataclasses.dataclass
+class AdaptiveAction:
+    """One knob change (or advisory) taken by a policy, for the audit log."""
+
+    ts: float  # wall clock
+    policy: str
+    knob: str
+    value: str
+    reason: str
+
+    def __str__(self) -> str:
+        return f"[adaptive] {self.policy}: {self.knob}={self.value} ({self.reason})"
+
+
+class AdaptiveContext:
+    """What a policy sees on one tick: windowed live metrics + session knobs.
+
+    Metrics are computed from the difference between the previous tick's
+    tally snapshot and the current one over ``window_s`` of wall time, so
+    they describe *recent* behavior.  Knob setters go through the
+    controller, which records an :class:`AdaptiveAction` and emits an
+    advisory event into the trace.
+    """
+
+    def __init__(
+        self,
+        controller: "AdaptiveController",
+        prev: Tally,
+        cur: Tally,
+        window_s: float,
+        engine=None,
+    ):
+        self._controller = controller
+        self._prev = prev
+        self._cur = cur
+        self.window_s = window_s
+        #: the ServeEngine driving this tick, when ticked from the serving
+        #: loop (None on consumer-thread ticks)
+        self.engine = engine
+        self._policy = "?"  # set by the controller per policy
+
+    # -- windowed metrics ----------------------------------------------------
+    def _window(self, provider: str, api: str, device: bool) -> Tuple[int, int]:
+        """(calls, total_ns) accumulated inside the last window."""
+        cur_t = self._cur.device_apis if device else self._cur.apis
+        prev_t = self._prev.device_apis if device else self._prev.apis
+        c = cur_t.get((provider, api))
+        if c is None:
+            return 0, 0
+        p = prev_t.get((provider, api))
+        if p is None:
+            return c.calls, c.total_ns
+        return c.calls - p.calls, c.total_ns - p.total_ns
+
+    def busy_fraction(self, provider: str, api: str, device: bool = False) -> float:
+        """Share of the last window's wall time spent inside ``api``."""
+        if self.window_s <= 0:
+            return 0.0
+        _, total_ns = self._window(provider, api, device)
+        return total_ns / (self.window_s * 1e9)
+
+    def window_calls(self, provider: str, api: str, device: bool = False) -> int:
+        """Calls to ``api`` completed during the last window."""
+        calls, _ = self._window(provider, api, device)
+        return calls
+
+    def window_latency_ns(self, provider: str, api: str, device: bool = False) -> float:
+        """Mean per-call latency of ``api`` over the last window (0 if idle)."""
+        calls, total_ns = self._window(provider, api, device)
+        return total_ns / calls if calls > 0 else 0.0
+
+    def dropped_in_window(self) -> int:
+        """Ring-buffer events discarded during the last window."""
+        return self._controller._window_dropped
+
+    def snapshot(self) -> Tally:
+        """The current cumulative live tally (for policies that need it)."""
+        return self._cur
+
+    # -- knobs ---------------------------------------------------------------
+    def set_stream_period(self, seconds: float, reason: str = "") -> None:
+        """Retune the live-snapshot push cadence (``stream_period_s``)."""
+        tr = self._controller._tracer
+        if tr is None:
+            return
+        tr.cfg.stream_period_s = max(0.01, float(seconds))
+        self._act("stream_period_s", f"{tr.cfg.stream_period_s:g}", reason)
+
+    def set_flush_period(self, seconds: float, reason: str = "") -> None:
+        """Retune the consumer drain period (``flush_period_s``)."""
+        tr = self._controller._tracer
+        if tr is None:
+            return
+        tr.cfg.flush_period_s = max(0.005, float(seconds))
+        self._act("flush_period_s", f"{tr.cfg.flush_period_s:g}", reason)
+
+    def set_sample_period(self, seconds: float, reason: str = "") -> None:
+        """Retune the telemetry daemon's sampling period, when it runs."""
+        tr = self._controller._tracer
+        sampler = getattr(tr, "_sampler", None) if tr is not None else None
+        if sampler is None:
+            return
+        sampler.period_s = max(0.005, float(seconds))
+        self._act("sample_period_s", f"{sampler.period_s:g}", reason)
+
+    def set_event(self, name: str, on: bool, reason: str = "") -> None:
+        """Enable/disable one tracepoint live (widen or narrow sampling)."""
+        tr = self._controller._tracer
+        if tr is None:
+            return
+        tr.tp.set_event(name, on)
+        self._act(f"event:{name}", "on" if on else "off", reason)
+
+    def set_ring_bytes(self, nbytes: int, reason: str = "") -> None:
+        """Resize the ring-buffer capacity used for *future* threads."""
+        tr = self._controller._tracer
+        if tr is None or tr.registry is None:
+            return
+        tr.registry.set_capacity(int(nbytes))
+        self._act("ring_bytes", str(int(nbytes)), reason)
+
+    def advise(self, knob: str, value: str, reason: str = "") -> None:
+        """Record an advisory-only action (no knob turned): it lands in the
+        controller log and as an ``ust_repro:advisory`` trace event."""
+        self._act(knob, value, reason)
+
+    def _act(self, knob: str, value: str, reason: str) -> None:
+        self._controller._record(self._policy, knob, value, reason)
+
+
+class AdaptivePolicy:
+    """Base class: look at an :class:`AdaptiveContext`, optionally turn knobs.
+
+    Policies are stateful objects, invoked once per controller tick on the
+    consumer (or serving) thread; they must be fast and must never raise —
+    the controller isolates exceptions, but a throwing policy stops
+    adapting.  ``name`` labels the policy in action logs and advisory
+    events.
+    """
+
+    name = "policy"
+
+    def tick(self, ctx: AdaptiveContext) -> None:
+        raise NotImplementedError
+
+
+class WidenSamplingPolicy(AdaptivePolicy):
+    """Widen tally sampling when one API dominates the window.
+
+    While ``busy_fraction(provider, api)`` stays above ``high``, the events
+    in ``widen_events`` (typically polling / telemetry events excluded by
+    the mode preset) are enabled to capture *why* the API is hot; once the
+    fraction falls below ``low`` they are disabled again — Fig 7's overhead
+    ladder applied dynamically instead of picked up front.
+    """
+
+    name = "widen-sampling"
+
+    def __init__(
+        self,
+        provider: str,
+        api: str,
+        widen_events: Sequence[str],
+        high: float = 0.5,
+        low: float = 0.1,
+    ):
+        self.provider = provider
+        self.api = api
+        self.widen_events = tuple(widen_events)
+        self.high = high
+        self.low = low
+        self.widened = False
+
+    def tick(self, ctx: AdaptiveContext) -> None:
+        busy = ctx.busy_fraction(self.provider, self.api)
+        if not self.widened and busy >= self.high:
+            self.widened = True
+            for name in self.widen_events:
+                ctx.set_event(
+                    name, True, f"busy_fraction({self.api})={busy:.2f}≥{self.high}"
+                )
+        elif self.widened and busy <= self.low:
+            self.widened = False
+            for name in self.widen_events:
+                ctx.set_event(
+                    name, False, f"busy_fraction({self.api})={busy:.2f}≤{self.low}"
+                )
+
+
+class StreamCadencePolicy(AdaptivePolicy):
+    """Snapshot faster while a watched API is hot, slower while idle.
+
+    A live dashboard wants fresh composites exactly when something is
+    happening; when the window is quiet, pushing snapshots is pure wire
+    noise.  Moves ``stream_period_s`` between ``fast_s`` and ``slow_s`` on
+    the ``high`` / ``low`` busy-fraction thresholds.
+    """
+
+    name = "stream-cadence"
+
+    def __init__(
+        self,
+        provider: str,
+        api: str,
+        high: float = 0.3,
+        low: float = 0.05,
+        fast_s: float = 0.1,
+        slow_s: float = 1.0,
+    ):
+        self.provider = provider
+        self.api = api
+        self.high = high
+        self.low = low
+        self.fast_s = fast_s
+        self.slow_s = slow_s
+        self._state = ""  # "", "fast", "slow"
+
+    def tick(self, ctx: AdaptiveContext) -> None:
+        busy = ctx.busy_fraction(self.provider, self.api)
+        if busy >= self.high and self._state != "fast":
+            self._state = "fast"
+            ctx.set_stream_period(
+                self.fast_s, f"busy_fraction({self.api})={busy:.2f}≥{self.high}"
+            )
+        elif busy <= self.low and self._state != "slow":
+            self._state = "slow"
+            ctx.set_stream_period(
+                self.slow_s, f"busy_fraction({self.api})={busy:.2f}≤{self.low}"
+            )
+
+
+class RingPressurePolicy(AdaptivePolicy):
+    """Grow ring-buffer capacity when the window shows discarded events.
+
+    Rings drop rather than block (§3.1); sustained drops mean the configured
+    capacity undershoots the event rate.  Each tick that observes new drops
+    doubles the capacity used for future threads' rings (bounded by
+    ``max_bytes``) and emits an advisory either way, so the drop burst is
+    visible in the trace even when the cap is reached.
+    """
+
+    name = "ring-pressure"
+
+    def __init__(self, factor: float = 2.0, max_bytes: int = 1 << 26):
+        self.factor = factor
+        self.max_bytes = max_bytes
+
+    def tick(self, ctx: AdaptiveContext) -> None:
+        dropped = ctx.dropped_in_window()
+        if dropped <= 0:
+            return
+        tr = ctx._controller._tracer
+        if tr is None or tr.registry is None:
+            return
+        cur = tr.registry.capacity
+        if cur >= self.max_bytes:
+            ctx.advise("ring_bytes", str(cur), f"{dropped} drops but cap reached")
+            return
+        ctx.set_ring_bytes(
+            min(self.max_bytes, int(cur * self.factor)),
+            f"{dropped} events dropped in window",
+        )
+
+
+class ThresholdAdvisoryPolicy(AdaptivePolicy):
+    """Emit an advisory whenever a busy fraction crosses a threshold.
+
+    The no-knob policy: it only narrates.  Useful to mark phases in the
+    trace ("train_step saturated from t₁ to t₂") or as the template for
+    application-defined reactions — subclass and override :meth:`react`.
+    """
+
+    name = "threshold-advisory"
+
+    def __init__(self, provider: str, api: str, high: float = 0.5, low: float = 0.1):
+        self.provider = provider
+        self.api = api
+        self.high = high
+        self.low = low
+        self.above = False
+
+    def react(self, ctx: AdaptiveContext, above: bool, busy: float) -> None:
+        ctx.advise(
+            f"busy:{self.provider}:{self.api}",
+            "high" if above else "low",
+            f"busy_fraction={busy:.2f}",
+        )
+
+    def tick(self, ctx: AdaptiveContext) -> None:
+        busy = ctx.busy_fraction(self.provider, self.api)
+        if not self.above and busy >= self.high:
+            self.above = True
+            self.react(ctx, True, busy)
+        elif self.above and busy <= self.low:
+            self.above = False
+            self.react(ctx, False, busy)
+
+
+class AdaptiveController:
+    """Owns the policies; diffs live snapshots; rate-limits ticks.
+
+    Built by the tracer from ``TraceConfig.adaptive`` (or handed to a
+    :class:`ServeEngine`); both call :meth:`tick` from their loops and the
+    controller decides (every ``period_s``) whether a window has elapsed.
+    Thread-safe: consumer-thread and serving-thread ticks may interleave.
+
+    ``actions`` is the append-only audit log; ``on_action`` (optional
+    callable) observes every action as it happens — handy for tests and
+    for surfacing adaptations in training logs.
+    """
+
+    def __init__(
+        self,
+        policies: Sequence[AdaptivePolicy],
+        period_s: float = 0.5,
+        on_action: Optional[Callable[[AdaptiveAction], None]] = None,
+    ):
+        self.policies = list(policies)
+        self.period_s = period_s
+        self.on_action = on_action
+        self.actions: List[AdaptiveAction] = []
+        self.ticks = 0
+        self._tracer = None
+        self._advise_record = None  # ust_repro:advisory recorder, when traced
+        self._lock = threading.Lock()
+        self._prev_snap: Optional[Tally] = None
+        self._prev_t = 0.0
+        self._prev_dropped = 0
+        self._window_dropped = 0
+
+    def attach(self, tracer) -> "AdaptiveController":
+        """Bind to a live tracing session (the tracer calls this at start)."""
+        self._tracer = tracer
+        rec = getattr(tracer, "tp", None)
+        self._advise_record = rec.record.get("ust_repro:advisory") if rec else None
+        with self._lock:
+            self._prev_snap = None
+            self._prev_t = 0.0
+            self._prev_dropped = 0
+        return self
+
+    def tick(self, engine=None, force: bool = False) -> bool:
+        """Run one adaptation window if due; True when policies actually ran.
+
+        The first due tick only baselines (no policy sees a window computed
+        against an empty history). Policy exceptions are swallowed per
+        policy, so one misbehaving policy cannot stop the others — or the
+        consumer thread.
+
+        An unattached controller (e.g. a ``ServeEngine`` built before its
+        ``Tracer`` started) attaches itself to the process's active session
+        on first tick, so construction order doesn't matter.
+        """
+        if self._tracer is None:
+            from .tracer import active_tracer
+
+            tr = active_tracer()
+            if tr is not None:
+                self.attach(tr)
+        tr = self._tracer
+        if tr is None or tr.online is None:
+            return False
+        with self._lock:
+            now = time.monotonic()
+            if not force and self._prev_snap is not None and (
+                now - self._prev_t < self.period_s
+            ):
+                return False
+            cur = tr.online.snapshot()
+            dropped_total = tr.registry.total_dropped if tr.registry is not None else 0
+            prev, prev_t = self._prev_snap, self._prev_t
+            self._window_dropped = dropped_total - self._prev_dropped
+            self._prev_snap, self._prev_t = cur, now
+            self._prev_dropped = dropped_total
+            if prev is None:
+                return False  # baseline window
+            self.ticks += 1
+            ctx = AdaptiveContext(self, prev, cur, max(1e-9, now - prev_t), engine)
+            for pol in self.policies:
+                ctx._policy = pol.name
+                try:
+                    pol.tick(ctx)
+                except Exception:
+                    pass  # a policy must never kill the consumer thread
+            return True
+
+    def _record(self, policy: str, knob: str, value: str, reason: str) -> None:
+        act = AdaptiveAction(time.time(), policy, knob, value, reason)
+        self.actions.append(act)
+        if self._advise_record is not None:
+            try:
+                self._advise_record(policy, knob, f"{value} ({reason})")
+            except Exception:
+                pass  # advisory must never break adaptation
+        if self.on_action is not None:
+            self.on_action(act)
+
+    def render_log(self) -> str:
+        """Human-readable action log (one line per action)."""
+        return "\n".join(str(a) for a in self.actions)
+
+
+def build_controller(
+    policies: Union["AdaptiveController", Sequence[AdaptivePolicy], None],
+    period_s: float = 0.5,
+) -> Optional[AdaptiveController]:
+    """Normalize ``TraceConfig.adaptive`` / ``ServeEngine(adaptive=…)`` input:
+    pass through a ready controller, wrap a policy list, map None to None."""
+    if policies is None:
+        return None
+    if isinstance(policies, AdaptiveController):
+        return policies
+    return AdaptiveController(list(policies), period_s=period_s)

@@ -356,6 +356,13 @@ def framework_model() -> APIModel:
                 result=P("ready", "bool"),
                 meta=(("Polling", P("handle", "ptr")),),
             ),
+            APISpec(  # §6 adaptive consumer: one advisory per knob change,
+                # recorded into the trace so post-mortem analysis sees when
+                # and why the session reconfigured itself mid-run
+                "advisory",
+                params=(P("policy", "str"), P("knob", "str"), P("detail", "str")),
+                counter=True,
+            ),
         ),
     )
 

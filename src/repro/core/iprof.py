@@ -13,7 +13,7 @@ Usage:
     python -m repro.core.iprof validate /tmp/t
     python -m repro.core.iprof combine  /tmp/agg_root   # §3.7 batch global master
     python -m repro.core.iprof serve --port 9000        # streaming master (§3.7+§6)
-    python -m repro.core.iprof top   127.0.0.1:9000     # live composite view
+    python -m repro.core.iprof top   127.0.0.1:9000 [--live]  # live composite view
 """
 
 from __future__ import annotations
@@ -48,6 +48,8 @@ def _run(args) -> int:
         online=args.online,
         stream_to=args.stream_to,
         stream_period_s=args.stream_period,
+        stream_delta=not args.no_stream_delta,
+        stream_resync_every=args.stream_resync_every,
         serve_port=args.serve_port,
     )
     old_argv = sys.argv
@@ -124,40 +126,61 @@ def _serve(args) -> int:
         st = m.stats()
         print(
             f"[iprof] master stopped: {st['sources']} sources, "
-            f"{st['snapshots']} snapshots, {st['queries']} queries"
+            f"{st['snapshots']} snapshots ({st['deltas']} deltas, "
+            f"{st['resyncs']} resyncs), {st['queries']} queries"
         )
     return 0
+
+
+def _render_composite(args, t, meta) -> None:
+    """One `iprof top` refresh: header line + tally table(s)."""
+    if not args.no_clear:
+        print("\x1b[2J\x1b[H", end="")
+    age = max(0.0, time.time() - meta["updated"]) if meta.get("updated") else 0.0
+    print(
+        f"[iprof top] {args.addr} | {meta.get('sources', 0)} sources | "
+        f"{meta.get('snapshots', 0)} snapshots | updated {age:.1f}s ago"
+    )
+    print(tally_plugin.render(t, top=args.top, device=False))
+    if args.device or t.device_apis:
+        print("\n-- device --")
+        print(tally_plugin.render(t, top=args.top, device=True))
 
 
 def _top(args) -> int:
-    """Attach to a master; render the live composite, refreshing."""
-    from .stream import ProtocolError, query_composite
+    """Attach to a master; render the live composite, refreshing.
 
-    i = 0
-    while args.iterations is None or i < args.iterations:
-        if i:
-            time.sleep(args.interval)
-        i += 1
-        try:
+    Default mode polls with one query connection per refresh; ``--live``
+    holds a single connection open and renders composites as the master
+    pushes them (the v2 ``subscribe`` frame).
+    """
+    from .stream import ProtocolError, query_composite, subscribe_composites
+
+    try:
+        if args.live:
+            i = 0
+            for t, meta in subscribe_composites(
+                args.addr, period_s=args.interval, timeout_s=args.timeout
+            ):
+                _render_composite(args, t, meta)
+                i += 1
+                if args.iterations is not None and i >= args.iterations:
+                    break
+            return 0
+        i = 0
+        while args.iterations is None or i < args.iterations:
+            if i:
+                time.sleep(args.interval)
+            i += 1
             t, meta = query_composite(args.addr, timeout_s=args.timeout)
-        except ValueError:
-            print(f"[iprof] bad master address {args.addr!r} (want host:port)", file=sys.stderr)
-            return 2
-        except (OSError, ProtocolError) as e:
-            print(f"[iprof] master at {args.addr} unreachable: {e}", file=sys.stderr)
-            return 1
-        if not args.no_clear:
-            print("\x1b[2J\x1b[H", end="")
-        age = max(0.0, time.time() - meta["updated"]) if meta.get("updated") else 0.0
-        print(
-            f"[iprof top] {args.addr} | {meta.get('sources', 0)} sources | "
-            f"{meta.get('snapshots', 0)} snapshots | updated {age:.1f}s ago"
-        )
-        print(tally_plugin.render(t, top=args.top, device=False))
-        if args.device or t.device_apis:
-            print("\n-- device --")
-            print(tally_plugin.render(t, top=args.top, device=True))
-    return 0
+            _render_composite(args, t, meta)
+        return 0
+    except ValueError:
+        print(f"[iprof] bad master address {args.addr!r} (want host:port)", file=sys.stderr)
+        return 2
+    except (OSError, ProtocolError) as e:
+        print(f"[iprof] master at {args.addr} unreachable: {e}", file=sys.stderr)
+        return 1
 
 
 def _combine(args) -> int:
@@ -187,6 +210,17 @@ def build_parser() -> argparse.ArgumentParser:
         "--stream-to", default=None, help="push live snapshots to a master at host:port"
     )
     r.add_argument("--stream-period", type=float, default=0.25)
+    r.add_argument(
+        "--no-stream-delta",
+        action="store_true",
+        help="disable v2 delta frames: push full snapshots every period",
+    )
+    r.add_argument(
+        "--stream-resync-every",
+        type=int,
+        default=32,
+        help="full-snapshot resync frame every N delta pushes",
+    )
     r.add_argument(
         "--serve-port",
         type=int,
@@ -238,6 +272,11 @@ def build_parser() -> argparse.ArgumentParser:
 
     tp = sub.add_parser("top", help="attach to a master and render the live composite")
     tp.add_argument("addr", help="master host:port")
+    tp.add_argument(
+        "--live",
+        action="store_true",
+        help="subscribe for pushed composite updates instead of polling queries",
+    )
     tp.add_argument("--interval", type=float, default=1.0)
     tp.add_argument(
         "--iterations", type=int, default=None, help="refresh N times then exit (default: forever)"

@@ -28,7 +28,15 @@ from .tracepoints import Tracepoints
 
 
 class OnlineAnalyzer:
-    """Incremental entry/exit folding + live tally over drained chunks."""
+    """Incremental entry/exit folding + live tally over drained chunks.
+
+    The live member of the analysis family: fed by the tracer's consumer
+    thread (never by recorders), it folds the framed record stream into the
+    same :class:`~repro.core.plugins.tally.Tally` monoid the offline plugin
+    produces, so live snapshots, streamed snapshots, and batch aggregates
+    all merge interchangeably.  ``snapshot()`` is what the streaming layer
+    ships and the adaptive controller diffs.
+    """
 
     def __init__(
         self,
@@ -49,6 +57,12 @@ class OnlineAnalyzer:
         self.discarded = 0
 
     def feed(self, chunk: bytes, pid: int = 0, tid: int = 0) -> None:
+        """Fold one drained ring-buffer chunk into the live tally.
+
+        Entry events open per-(tid, api) LIFO stacks; exits pop and
+        accumulate; device spans accumulate directly; discard records bump
+        ``discarded``.  Safe to call concurrently with ``snapshot()``.
+        """
         off, n = 0, len(chunk)
         etypes = self._etypes
         with self._lock:
@@ -98,7 +112,13 @@ class OnlineAnalyzer:
             return Tally().merge(self._tally)
 
     def busy_fraction(self, provider: str, api: str, window_total_ns: int) -> float:
-        """Adaptive-optimization helper: share of wall time inside an API."""
+        """Adaptive-optimization helper: share of wall time inside an API.
+
+        Cumulative since session start — the caller supplies the elapsed
+        window (``window_total_ns``).  For *recent* busy fractions computed
+        from successive snapshots, use the windowed metrics on
+        :class:`repro.core.adaptive.AdaptiveContext` instead.
+        """
         with self._lock:
             st = self._tally.apis.get((provider, api))
             return (st.total_ns / window_total_ns) if st and window_total_ns else 0.0

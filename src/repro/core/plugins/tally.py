@@ -117,6 +117,73 @@ class Tally:
             discarded=int(d["discarded"]),
         )
 
+    # -- delta encoding for the streaming protocol (v2) -----------------------
+    def delta_to(self, prev: "Tally") -> dict:
+        """Encode the change from ``prev`` (an older cumulative state of this
+        same tally) as a delta object for the v2 streaming protocol.
+
+        Cumulative tallies only grow: API entries accumulate, sets gain
+        members, keys never disappear.  A delta therefore carries the *full
+        cumulative value* of every changed or new entry (so applying it is a
+        per-key replace, not an add — idempotent for a given seq) plus only
+        the newly-seen set members.  ``discarded`` is shipped cumulatively.
+
+        Raises ``ValueError`` if ``prev`` is not a prefix of this tally (an
+        API entry or set member present in ``prev`` but missing here) — the
+        delta format cannot express removal, and callers must fall back to a
+        full snapshot.
+        """
+
+        def enc_changed(cur, old, label):
+            if old.keys() - cur.keys():
+                raise ValueError(f"delta cannot express removed {label} entries")
+            out = []
+            for key, st in cur.items():
+                ps = old.get(key)
+                if ps is None or (
+                    ps.calls != st.calls
+                    or ps.total_ns != st.total_ns
+                    or ps.min_ns != st.min_ns
+                    or ps.max_ns != st.max_ns
+                ):
+                    out.append([key[0], key[1], st.calls, st.total_ns, st.min_ns, st.max_ns])
+            return out
+
+        for cur_set, old_set, label in (
+            (self.hostnames, prev.hostnames, "hostnames"),
+            (self.processes, prev.processes, "processes"),
+            (self.threads, prev.threads, "threads"),
+        ):
+            if old_set - cur_set:
+                raise ValueError(f"delta cannot express removed {label}")
+        return {
+            "apis": enc_changed(self.apis, prev.apis, "apis"),
+            "device_apis": enc_changed(self.device_apis, prev.device_apis, "device_apis"),
+            "hostnames": sorted(self.hostnames - prev.hostnames),
+            "processes": sorted(self.processes - prev.processes),
+            "threads": sorted(list(t) for t in self.threads - prev.threads),
+            "discarded": self.discarded,
+        }
+
+    def apply_delta(self, d: dict) -> "Tally":
+        """Apply a delta produced by :meth:`delta_to` against this tally.
+
+        Listed API entries carry cumulative values, so application replaces
+        them key-by-key; set members and the discarded count are merged in.
+        Only valid when this tally is exactly the base state the delta was
+        computed against (the streaming layer enforces that with seq /
+        base_seq numbering). Returns ``self``.
+        """
+        for p, a, c, t, mn, mx in d["apis"]:
+            self.apis[(p, a)] = ApiStat(calls=c, total_ns=t, min_ns=mn, max_ns=mx)
+        for p, a, c, t, mn, mx in d["device_apis"]:
+            self.device_apis[(p, a)] = ApiStat(calls=c, total_ns=t, min_ns=mn, max_ns=mx)
+        self.hostnames |= set(d["hostnames"])
+        self.processes |= set(d["processes"])
+        self.threads |= {tuple(t) for t in d["threads"]}
+        self.discarded = int(d["discarded"])
+        return self
+
 
 def tally_intervals(intervals: Iterable[Interval], hostname: str = "") -> Tally:
     t = Tally()

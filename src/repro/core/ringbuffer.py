@@ -140,6 +140,20 @@ class RingRegistry:
             return list(self._rings)
 
     @property
+    def capacity(self) -> int:
+        """Ring capacity (bytes) handed to newly-registered threads."""
+        return self._capacity
+
+    def set_capacity(self, nbytes: int) -> None:
+        """Resize the capacity used for *future* rings (§6 adaptive knob).
+
+        Existing rings keep their size — they are lock-free SPSC structures
+        whose producer may be mid-write; only threads that first touch the
+        registry after this call get the new capacity.
+        """
+        self._capacity = max(1 << 12, int(nbytes))
+
+    @property
     def total_dropped(self) -> int:
         return sum(r.dropped for r in self.rings())
 

@@ -5,54 +5,78 @@ files; the online path (online.py) is a *single-process* live tally.  This
 module joins them into a streaming service — the network-transported,
 always-current version of ``aggregate_tree``:
 
-    rank (OnlineAnalyzer) ──snapshot──▶ local master ──composite──▶ global master
-                                             ▲                          ▲
-                                        iprof top                  iprof top
+    rank (OnlineAnalyzer) ──snapshot/delta──▶ local master ──composite──▶ global master
+                                                   ▲                          ▲
+                                              iprof top                  iprof top
 
-  * Each traced rank periodically pushes a serialized tally snapshot (the
-    same msgpack encoding ``aggregate.save_tally`` uses) over TCP to a
+  * Each traced rank periodically pushes its cumulative tally over TCP to a
     master (:class:`SnapshotStreamer`, driven by the tracer's consumer
-    thread).
-  * A :class:`MasterServer` keeps the **latest** snapshot per source and
-    merges them with the tally monoid on demand.  Snapshots are cumulative,
-    so latest-wins merging is idempotent and converges to exactly the
-    offline ``combine_aggregates`` result once every rank has pushed its
-    final snapshot (tracer stop pushes one unconditionally).
+    thread).  Protocol **v2** ships *delta frames* in steady state: only the
+    ApiStats entries that changed since the last delivered state (each with
+    its full cumulative value), with periodic full-snapshot resync frames
+    bounding drift.  On very wide tallies this is the difference between
+    shipping the whole table every interval and shipping a few hot rows.
+  * A :class:`MasterServer` keeps the latest cumulative tally per source —
+    rebuilt incrementally from deltas — and merges them with the tally
+    monoid on demand.  Snapshots are cumulative, so latest-wins merging is
+    idempotent and converges to exactly the offline ``combine_aggregates``
+    result once every rank has pushed its final state (tracer stop pushes a
+    final frame unconditionally).
   * Masters compose into a configurable-fanout tree: a master constructed
-    with ``forward_to=`` periodically pushes its own composite upstream as a
-    single snapshot, exactly the paper's "each local master sends its
-    aggregate to the global master" — but live, while the ranks still run.
+    with ``forward_to=`` periodically pushes its own composite upstream,
+    exactly the paper's "each local master sends its aggregate to the global
+    master" — but live, while the ranks still run.  Composites forward as
+    deltas too.
   * ``iprof serve`` runs a master; ``iprof top`` attaches to any master and
-    renders the refreshing composite; :func:`query_composite` is the
-    programmatic client.
+    renders the refreshing composite (``--live`` subscribes for pushed
+    updates instead of polling); :func:`query_composite` /
+    :func:`subscribe_composites` are the programmatic clients.
 
 Transport is deliberately tiny: length-prefixed msgpack frames (4-byte
 big-endian length + body), one dict message per frame, ``type`` key selects
 the handler.  Snapshots are kilobytes (§3.7), so a 64 MiB frame cap is
 generous headroom, not a tuning knob.
 
+Delta correctness contract (see docs/streaming.md for the full spec):
+
+  * every frame carries ``seq``; delta frames also carry ``base_seq`` — the
+    seq of the state they were computed against.  A master applies a delta
+    only when its stored seq for the source equals ``base_seq``; otherwise
+    it drops the frame and answers ``resync`` on the same connection, and
+    the streamer's next push is a full snapshot.
+  * a streamer only sends deltas after the master's ``hello_ack`` proves the
+    peer speaks v2 — unknown or v1 masters receive full snapshots forever,
+    so the wire stays backward compatible.
+  * any reconnect starts with a full snapshot (the delta base is
+    connection-local state).
+
 Failure model: the traced application must never block or crash because a
 master is slow, absent, or restarting.  The streamer connects lazily,
-retries with backoff, and *drops* snapshots it cannot deliver (counted in
-``dropped``) — the next successful push carries the full cumulative state,
-so nothing is lost but latency.
+retries with backoff, and *drops* frames it cannot deliver (counted in
+``dropped``) — the next successful full push carries the entire cumulative
+state, so nothing is lost but latency.
 """
 
 from __future__ import annotations
 
 import os
+import select
 import socket
 import struct
 import threading
 import time
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, Iterator, List, Optional, Tuple, Union
 
 import msgpack
 
 from .aggregate import merge_tallies
 from .plugins.tally import Tally
 
-PROTOCOL_VERSION = 1
+#: v2 adds delta frames, ``hello_ack`` and ``resync`` control frames, and
+#: ``subscribe`` push mode. v1 peers are still understood (full snapshots).
+PROTOCOL_VERSION = 2
+#: oldest peer version that accepts ``delta`` frames
+DELTA_MIN_VERSION = 2
 MAX_FRAME = 64 << 20  # frames are tally snapshots: KBs in practice (§3.7)
 _HDR = struct.Struct("!I")
 
@@ -107,6 +131,7 @@ def parse_addr(addr: Union[str, Tuple[str, int]]) -> Tuple[str, int]:
 
 
 def default_source(rank: int = 0) -> str:
+    """Canonical source id for a traced rank: ``host:pid:rankN``."""
     return f"{socket.gethostname()}:{os.getpid()}:rank{rank}"
 
 
@@ -116,11 +141,20 @@ def default_source(rank: int = 0) -> str:
 
 
 class SnapshotStreamer:
-    """Pushes cumulative tally snapshots to a master; never blocks tracing.
+    """Pushes cumulative tally state to a master; never blocks tracing.
 
     Push cadence belongs to the caller (the tracer's consumer thread, a
     master's forwarder loop); ``push(tally)`` always sends — the tracer's
-    stop path relies on that for the final, authoritative snapshot.
+    stop path relies on that for the final, authoritative state.
+
+    With ``delta=True`` (the default) the streamer tracks the last state
+    delivered on the current connection and ships only changed entries once
+    the master's ``hello_ack`` confirms a v2 peer.  Every ``resync_every``-th
+    push — and the first push of every connection — is a full snapshot, so a
+    master can always rebuild from the wire alone.  Counters: ``pushed`` /
+    ``dropped`` (frames), ``full_frames`` / ``delta_frames`` (mix),
+    ``bytes_sent`` (on-wire payload), ``resyncs`` (master-requested
+    fallbacks to full).
     """
 
     def __init__(
@@ -129,41 +163,144 @@ class SnapshotStreamer:
         source: str,
         retry_s: float = 0.5,
         timeout_s: float = 2.0,
+        delta: bool = True,
+        resync_every: int = 32,
     ):
         self.addr = parse_addr(addr)
         self.source = source
         self.retry_s = retry_s
         self.timeout_s = timeout_s
+        self.delta = delta
+        self.resync_every = max(1, int(resync_every))
         self.pushed = 0
         self.dropped = 0
+        self.full_frames = 0
+        self.delta_frames = 0
+        self.bytes_sent = 0
+        self.resyncs = 0
         self._seq = 0
         self._sock: Optional[socket.socket] = None
         self._next_retry = 0.0
         self._lock = threading.Lock()
+        #: state as of the last successful send on the *current* connection
+        self._last_sent: Optional[Tally] = None
+        self._sends_since_full = 0
+        self._peer_version: Optional[int] = None  # learned from hello_ack
+        self._force_full = False
+
+    @property
+    def peer_version(self) -> Optional[int]:
+        """Master's protocol version once its ``hello_ack`` arrived, else None."""
+        return self._peer_version
+
+    def poll_control(self) -> None:
+        """Drain pending control frames (``hello_ack`` / ``resync``) now.
+
+        ``push`` does this automatically before every send; callers that
+        want deterministic delta engagement (benchmarks, tests) may call it
+        after the first push instead of waiting for the next cadence tick.
+        """
+        with self._lock:
+            if self._sock is not None:
+                self._drain_control(self._sock)
 
     def push(self, tally: Union[Tally, dict]) -> bool:
-        msg = {
-            "type": "snapshot",
-            "v": PROTOCOL_VERSION,
-            "source": self.source,
-            "seq": self._seq,
-            "ts": time.time(),
-            "tally": tally.to_obj() if isinstance(tally, Tally) else tally,
-        }
+        """Deliver the current cumulative ``tally``; returns delivery success.
+
+        Chooses delta vs full per the protocol contract, never blocks beyond
+        ``timeout_s``, and on any failure drops the connection (the next
+        successful push is a full snapshot again).
+        """
+        cur = tally if isinstance(tally, Tally) else Tally.from_obj(tally)
         with self._lock:
             sock = self._ensure_conn()
             if sock is None:
                 self.dropped += 1
                 return False
+            if not self._drain_control(sock):
+                self.dropped += 1
+                return False
+            msg = self._encode(cur)
+            frame = pack_frame(msg)
             try:
-                sock.sendall(pack_frame(msg))
+                sock.sendall(frame)
             except OSError:
                 self._drop_conn()
                 self.dropped += 1
                 return False
             self._seq += 1
             self.pushed += 1
+            self.bytes_sent += len(frame)
+            # keep a private copy: the caller may keep mutating its tally
+            self._last_sent = Tally().merge(cur)
+            if msg["type"] == "delta":
+                self.delta_frames += 1
+                self._sends_since_full += 1
+            else:
+                self.full_frames += 1
+                self._sends_since_full = 0
+                self._force_full = False
             return True
+
+    def _encode(self, cur: Tally) -> dict:
+        """Build the frame for ``cur``: delta when the contract allows it."""
+        use_delta = (
+            self.delta
+            and self._last_sent is not None
+            and not self._force_full
+            and self._peer_version is not None
+            and self._peer_version >= DELTA_MIN_VERSION
+            and self._sends_since_full < self.resync_every
+        )
+        if use_delta:
+            try:
+                d = cur.delta_to(self._last_sent)
+            except ValueError:
+                use_delta = False  # non-monotone state: full resync
+        if use_delta:
+            return {
+                "type": "delta",
+                "v": PROTOCOL_VERSION,
+                "source": self.source,
+                "seq": self._seq,
+                "base_seq": self._seq - 1,
+                "ts": time.time(),
+                "delta": d,
+            }
+        return {
+            "type": "snapshot",
+            "v": PROTOCOL_VERSION,
+            "source": self.source,
+            "seq": self._seq,
+            "ts": time.time(),
+            "tally": cur.to_obj(),
+        }
+
+    def _drain_control(self, sock: socket.socket) -> bool:
+        """Consume buffered master→streamer frames; False if the conn died."""
+        while True:
+            try:
+                r, _, _ = select.select([sock], [], [], 0)
+            except (OSError, ValueError):
+                self._drop_conn()
+                return False
+            if not r:
+                return True
+            try:
+                msg = recv_frame(sock)
+            except (ProtocolError, OSError):
+                self._drop_conn()
+                return False
+            if msg is None:  # EOF: master went away
+                self._drop_conn()
+                return False
+            kind = msg.get("type")
+            if kind == "hello_ack":
+                self._peer_version = int(msg.get("v", 1))
+            elif kind == "resync":
+                self._force_full = True
+                self.resyncs += 1
+            # anything else from the master is ignorable here
 
     def _ensure_conn(self) -> Optional[socket.socket]:
         if self._sock is not None:
@@ -182,6 +319,11 @@ class SnapshotStreamer:
             self._next_retry = time.monotonic() + self.retry_s
             return None
         self._sock = s
+        # connection-local delta state starts fresh: first push is full
+        self._last_sent = None
+        self._sends_since_full = 0
+        self._peer_version = None
+        self._force_full = False
         return s
 
     def _drop_conn(self) -> None:
@@ -191,8 +333,13 @@ class SnapshotStreamer:
             except OSError:
                 pass
             self._sock = None
+        self._last_sent = None
+        self._peer_version = None
+        self._force_full = False
+        self._sends_since_full = 0
 
     def close(self) -> None:
+        """Send ``bye`` (best-effort) and drop the connection."""
         with self._lock:
             if self._sock is not None:
                 try:
@@ -208,13 +355,21 @@ class SnapshotStreamer:
 
 
 class MasterServer:
-    """Streaming master: latest-snapshot-per-source store + monoid merge.
+    """Streaming master: latest-state-per-source store + monoid merge.
 
-    * leaf ranks (or child masters) connect and push ``snapshot`` frames;
-    * any client may send ``query`` and gets the current composite back;
+    * leaf ranks (or child masters) connect and push ``snapshot`` / ``delta``
+      frames; deltas are merged into the stored cumulative state
+      incrementally (a per-key replace — applying frame *k* to state *k-1*
+      reproduces the sender's cumulative tally exactly);
+    * a delta whose ``base_seq`` doesn't match the stored state is dropped
+      and answered with ``resync`` so the sender falls back to a full
+      snapshot — the composite is never built from a mis-based delta;
+    * any client may send ``query`` and gets the current composite back, or
+      ``subscribe`` to have composites pushed periodically;
     * with ``forward_to=`` set this is a *local* master: a forwarder thread
-      periodically pushes the composite upstream as one snapshot, making the
-      whole arrangement the live fanout tree of §3.7.
+      periodically pushes the composite upstream (delta-encoded like any
+      other stream), making the whole arrangement the live fanout tree of
+      §3.7.
     """
 
     def __init__(
@@ -225,19 +380,27 @@ class MasterServer:
         forward_period_s: float = 0.5,
         fanout: int = 32,
         source: Optional[str] = None,
+        forward_delta: bool = True,
+        forward_resync_every: int = 32,
     ):
         self.host = host
         self.port = port  # rebound to the real port at start()
         self.fanout = fanout
         self.forward_to = forward_to
         self.forward_period_s = forward_period_s
+        self.forward_delta = forward_delta
+        self.forward_resync_every = forward_resync_every
         self.source = source or f"master:{socket.gethostname()}:{os.getpid()}"
         #: source → (seq, cumulative tally, wall-clock receipt time)
         self._latest: Dict[str, Tuple[int, Tally, float]] = {}
         self._lock = threading.Lock()
         self._dirty = False
+        self._version = 0  # bumped per state update; gates subscription pushes
         self.frames = 0
-        self.snapshots = 0
+        self.snapshots = 0  # state updates ingested (full + delta)
+        self.full_snapshots = 0
+        self.deltas = 0
+        self.resyncs_sent = 0
         self.queries = 0
         self._lsock: Optional[socket.socket] = None
         self._stop_evt = threading.Event()
@@ -247,6 +410,7 @@ class MasterServer:
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "MasterServer":
+        """Bind, start the acceptor (and forwarder, for local masters)."""
         ls = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         ls.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         ls.bind((self.host, self.port))
@@ -260,7 +424,12 @@ class MasterServer:
         acceptor.start()
         self._threads.append(acceptor)
         if self.forward_to is not None:
-            self._forwarder = SnapshotStreamer(self.forward_to, source=self.source)
+            self._forwarder = SnapshotStreamer(
+                self.forward_to,
+                source=self.source,
+                delta=self.forward_delta,
+                resync_every=self.forward_resync_every,
+            )
             fwd = threading.Thread(
                 target=self._forward_loop, name="thapi-master-forward", daemon=True
             )
@@ -269,6 +438,7 @@ class MasterServer:
         return self
 
     def stop(self) -> None:
+        """Flush upstream (local masters), close every connection, join threads."""
         self._stop_evt.set()
         if self._lsock is not None:
             try:
@@ -298,6 +468,7 @@ class MasterServer:
 
     @property
     def addr(self) -> str:
+        """``host:port`` once started (``port=0`` is rebound at start)."""
         return f"{self.host}:{self.port}"
 
     @property
@@ -309,9 +480,10 @@ class MasterServer:
     def submit(
         self, source: str, tally: Union[Tally, dict], seq: Optional[int] = None
     ) -> None:
-        """Ingest a cumulative snapshot (socket handlers and the in-process
-        tracer both land here). Out-of-order frames (seq < stored) are stale
-        duplicates of state we already supersede — dropped."""
+        """Ingest a full cumulative snapshot (socket handlers and the
+        in-process tracer both land here). Out-of-order frames
+        (seq < stored) are stale duplicates of state we already supersede —
+        dropped."""
         if not isinstance(tally, Tally):
             tally = Tally.from_obj(tally)
         with self._lock:
@@ -321,7 +493,31 @@ class MasterServer:
             nseq = seq if seq is not None else (prev[0] + 1 if prev else 0)
             self._latest[source] = (nseq, tally, time.time())
             self.snapshots += 1
+            self.full_snapshots += 1
             self._dirty = True
+            self._version += 1
+
+    def submit_delta(self, source: str, delta: dict, seq: int, base_seq: int) -> bool:
+        """Ingest a delta frame; True if applied.
+
+        Applies only when the stored state for ``source`` is exactly
+        ``base_seq`` — anything else (unknown source after a master restart,
+        a duplicate, an out-of-order frame, a reset seq) is rejected so the
+        stored cumulative state is never corrupted; the socket handler then
+        answers ``resync``.
+        """
+        with self._lock:
+            prev = self._latest.get(source)
+            if prev is None or prev[0] != base_seq:
+                return False
+            _, base, _ = prev
+            base.apply_delta(delta)
+            self._latest[source] = (seq, base, time.time())
+            self.snapshots += 1
+            self.deltas += 1
+            self._dirty = True
+            self._version += 1
+            return True
 
     def _reset_seq(self, source: str) -> None:
         with self._lock:
@@ -331,8 +527,8 @@ class MasterServer:
                 self._latest[source] = (-1, prev[1], prev[2])
 
     def composite(self) -> Tally:
-        """Tree-merge the latest snapshot of every source (fanout-ary, like
-        the offline ``aggregate_tree``). Sources' stored tallies are never
+        """Tree-merge the latest state of every source (fanout-ary, like the
+        offline ``aggregate_tree``). Sources' stored tallies are never
         mutated — merging runs on defensive copies."""
         with self._lock:
             copies = [Tally().merge(t) for (_, t, _) in self._latest.values()]
@@ -342,6 +538,8 @@ class MasterServer:
         return comp
 
     def stats(self) -> dict:
+        """Counters for monitoring: sources, frame/snapshot/delta/query
+        totals, resyncs sent, last-update wall clock, forwarding role."""
         with self._lock:
             sources = len(self._latest)
             updated = max((ts for (_, _, ts) in self._latest.values()), default=0.0)
@@ -349,6 +547,9 @@ class MasterServer:
             "sources": sources,
             "frames": self.frames,
             "snapshots": self.snapshots,
+            "full_snapshots": self.full_snapshots,
+            "deltas": self.deltas,
+            "resyncs": self.resyncs_sent,
             "queries": self.queries,
             "updated": updated,
             "forwarding": self.forward_to is not None,
@@ -402,17 +603,53 @@ class MasterServer:
                     self.submit(
                         str(msg.get("source", "?")), msg["tally"], msg.get("seq")
                     )
+                elif kind == "delta":
+                    ok = self.submit_delta(
+                        str(msg.get("source", "?")),
+                        msg["delta"],
+                        int(msg.get("seq", -1)),
+                        int(msg.get("base_seq", -2)),
+                    )
+                    if not ok:
+                        # mis-based delta: ask the sender for a full snapshot
+                        self.resyncs_sent += 1
+                        try:
+                            conn.sendall(
+                                pack_frame({"type": "resync", "v": PROTOCOL_VERSION})
+                            )
+                        except OSError:
+                            break
                 elif kind == "hello":
                     # a fresh connection restarts the peer's seq counter (e.g.
                     # a new Tracer session in the same process): forget the
-                    # stored seq so its snapshots aren't dropped as stale
+                    # stored seq so its snapshots aren't dropped as stale.
+                    # The ack tells v2 senders they may switch to deltas.
                     self._reset_seq(str(msg.get("source", "?")))
+                    try:
+                        conn.sendall(
+                            pack_frame({"type": "hello_ack", "v": PROTOCOL_VERSION})
+                        )
+                    except OSError:
+                        break
                 elif kind == "query":
                     self.queries += 1
                     try:
                         conn.sendall(pack_frame(self._composite_msg()))
                     except OSError:
                         break
+                elif kind == "subscribe":
+                    # push composites on this connection until it dies; the
+                    # pusher owns the socket's send side from here on
+                    period = float(msg.get("period_s", 1.0))
+                    t = threading.Thread(
+                        target=self._subscription_loop,
+                        args=(conn, period),
+                        name="thapi-master-subpush",
+                        daemon=True,
+                    )
+                    with self._lock:
+                        self._threads.append(t)
+                    t.start()
                 elif kind == "ping":
                     try:
                         conn.sendall(pack_frame({"type": "pong", "v": PROTOCOL_VERSION}))
@@ -435,6 +672,46 @@ class MasterServer:
                 if cur in self._threads:
                     self._threads.remove(cur)
 
+    def _subscription_loop(self, conn: socket.socket, period_s: float) -> None:
+        """Push ``composite`` frames to a subscribed client every period.
+
+        Change-gated: the full composite is serialized only when state
+        actually updated since the last push; idle periods send a tiny
+        tally-less heartbeat (``unchanged: true``) instead — a 2000-row
+        composite is not re-shipped twice a second to a viewer of an idle
+        master.  The first push is always full.
+        """
+        last_version = None
+        try:
+            while not self._stop_evt.is_set():
+                with self._lock:
+                    version = self._version
+                if version != last_version:
+                    msg = self._composite_msg()
+                    last_version = version
+                else:
+                    st = self.stats()
+                    msg = {
+                        "type": "composite",
+                        "v": PROTOCOL_VERSION,
+                        "unchanged": True,
+                        "sources": st["sources"],
+                        "snapshots": st["snapshots"],
+                        "deltas": st["deltas"],
+                        "updated": st["updated"],
+                    }
+                try:
+                    conn.sendall(pack_frame(msg))
+                except OSError:
+                    break
+                if self._stop_evt.wait(period_s):
+                    break
+        finally:
+            with self._lock:
+                cur = threading.current_thread()
+                if cur in self._threads:
+                    self._threads.remove(cur)
+
     def _forward_loop(self) -> None:
         while not self._stop_evt.wait(self.forward_period_s):
             self.flush()
@@ -448,13 +725,23 @@ class MasterServer:
             "tally": comp.to_obj(),
             "sources": st["sources"],
             "snapshots": st["snapshots"],
+            "deltas": st["deltas"],
             "updated": st["updated"],
         }
 
 
 # ---------------------------------------------------------------------------
-# Query client (iprof top, serve layer, tests)
+# Query clients (iprof top, serve layer, tests)
 # ---------------------------------------------------------------------------
+
+_COMPOSITE_META_KEYS = ("sources", "snapshots", "deltas", "updated")
+
+
+def _composite_reply(msg: Optional[dict]) -> Tuple[Tally, dict]:
+    if not msg or msg.get("type") != "composite":
+        raise ProtocolError(f"expected composite reply, got {msg!r}")
+    meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
+    return Tally.from_obj(msg["tally"]), meta
 
 
 def query_composite(
@@ -466,10 +753,49 @@ def query_composite(
         s.settimeout(timeout_s)
         s.sendall(pack_frame({"type": "query", "v": PROTOCOL_VERSION}))
         msg = recv_frame(s)
-    if not msg or msg.get("type") != "composite":
-        raise ProtocolError(f"expected composite reply, got {msg!r}")
-    meta = {k: msg[k] for k in ("sources", "snapshots", "updated") if k in msg}
-    return Tally.from_obj(msg["tally"]), meta
+    return _composite_reply(msg)
+
+
+def subscribe_composites(
+    addr: Union[str, Tuple[str, int]],
+    period_s: float = 1.0,
+    timeout_s: float = 10.0,
+) -> Iterator[Tuple[Tally, dict]]:
+    """Subscribe to a master: yields (composite, meta) as the master pushes.
+
+    The generator owns the connection; it ends on master shutdown (clean
+    EOF) and raises ``OSError`` / ``ProtocolError`` on transport trouble —
+    exactly the errors ``query_composite`` raises, so callers can share
+    handling.  Close the generator to disconnect.
+
+    Idle periods arrive as tally-less heartbeats (the master only
+    re-serializes the composite when state changed); the generator then
+    re-yields the previous tally with ``meta["unchanged"] = True``, so
+    consumers always see a renderable composite per period.
+    """
+    host, port = parse_addr(addr)
+    with socket.create_connection((host, port), timeout=timeout_s) as s:
+        s.settimeout(max(timeout_s, 2 * period_s))
+        s.sendall(
+            pack_frame(
+                {"type": "subscribe", "v": PROTOCOL_VERSION, "period_s": period_s}
+            )
+        )
+        last_tally: Optional[Tally] = None
+        while True:
+            msg = recv_frame(s)
+            if msg is None:  # master stopped: end of stream
+                return
+            if not msg or msg.get("type") != "composite":
+                raise ProtocolError(f"expected composite frame, got {msg!r}")
+            meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
+            if "tally" in msg:
+                last_tally = Tally.from_obj(msg["tally"])
+            elif last_tally is None:
+                raise ProtocolError("unchanged heartbeat before any composite")
+            else:
+                meta["unchanged"] = True
+            yield last_tally, meta
 
 
 def live_snapshot() -> Optional[Tally]:

@@ -65,6 +65,12 @@ class TraceConfig:
     stream_to: Optional[str] = None
     #: snapshot push period; the final snapshot at stop() is always pushed
     stream_period_s: float = 0.25
+    #: protocol-v2 delta streaming: ship only changed ApiStats entries in
+    #: steady state (full-snapshot resync frames bound drift). Off = every
+    #: push is a full snapshot (v1-compatible wire behavior).
+    stream_delta: bool = True
+    #: force a full-snapshot resync frame every N delta pushes
+    stream_resync_every: int = 32
     #: run an in-process master on this port (0 = ephemeral) serving this
     #: rank's live tally — and, via ``stream_to`` on other ranks, theirs too;
     #: ``iprof top`` attaches here. Implies ``online``.
@@ -74,11 +80,21 @@ class TraceConfig:
     #: extra per-event overrides applied after the mode preset, e.g.
     #: {"ust_jaxrt:alloc_entry": False}
     event_overrides: Optional[Dict[str, bool]] = None
+    #: §6 adaptive consumer: policies (or a ready AdaptiveController) ticked
+    #: from the consumer thread; they may turn session knobs mid-run from
+    #: live windowed metrics (see core/adaptive.py). Implies ``online``.
+    adaptive: Optional[Sequence] = None
+    #: adaptation window: how often the controller diffs live snapshots
+    adaptive_period_s: float = 0.5
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
-        if self.stream_to is not None or self.serve_port is not None:
+        if (
+            self.stream_to is not None
+            or self.serve_port is not None
+            or self.adaptive is not None
+        ):
             self.online = True
 
 
@@ -162,6 +178,7 @@ class Tracer:
         self.online = None  # OnlineAnalyzer when cfg.online
         self.streamer = None  # SnapshotStreamer when cfg.stream_to
         self.server = None  # MasterServer when cfg.serve_port
+        self.adaptive = None  # AdaptiveController when cfg.adaptive
         self._stream_source = ""
         self._stream_next = 0.0
         #: rank selected for tracing? (§3.2 selective rank tracing)
@@ -214,11 +231,23 @@ class Tracer:
                     forward_to=self.cfg.stream_to,
                     forward_period_s=self.cfg.stream_period_s,
                     fanout=self.cfg.stream_fanout,
+                    forward_delta=self.cfg.stream_delta,
+                    forward_resync_every=self.cfg.stream_resync_every,
                 ).start()
             else:
                 self.streamer = SnapshotStreamer(
-                    self.cfg.stream_to, source=self._stream_source
+                    self.cfg.stream_to,
+                    source=self._stream_source,
+                    delta=self.cfg.stream_delta,
+                    resync_every=self.cfg.stream_resync_every,
                 )
+        if self.cfg.adaptive is not None:
+            from .adaptive import build_controller
+
+            self.adaptive = build_controller(
+                self.cfg.adaptive, period_s=self.cfg.adaptive_period_s
+            )
+            self.adaptive.attach(self)
         self._stop_evt.clear()
         self._consumer = threading.Thread(
             target=self._consumer_loop, name="thapi-consumer", daemon=True
@@ -325,6 +354,8 @@ class Tracer:
         while not self._stop_evt.wait(self.cfg.flush_period_s):
             self._drain_once()
             self._stream_tick()
+            if self.adaptive is not None:
+                self.adaptive.tick()
 
     def _stream_tick(self, final: bool = False) -> None:
         """Push the live tally to the streaming service (§3.7+§6).

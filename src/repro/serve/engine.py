@@ -53,11 +53,23 @@ class ServeEngine:
         params,
         cfg: ServeConfig,
         partitioner: Optional[Partitioner] = None,
+        adaptive=None,
     ):
         self.model = model
         self.cfg = cfg
         self.params = params
         self.partitioner = partitioner
+        # §6 adaptive consumer: a list of AdaptivePolicy (or a ready
+        # AdaptiveController) ticked between decode steps with ctx.engine
+        # bound, so policies can reach serving knobs (cfg.max_new_tokens,
+        # queue depth) next to the tracing ones. Shares the machinery the
+        # tracer's consumer thread uses; requires an online tracing session
+        # to observe anything — the controller attaches itself to the active
+        # session on first tick, so the Tracer may start before or after
+        # engine construction.
+        from repro.core.adaptive import build_controller
+
+        self.adaptive = build_controller(adaptive)
         self._rid = itertools.count()
         B = cfg.batch_slots
         shape = ShapeSpec("serve", "decode", cfg.cache_len, B)
@@ -156,6 +168,8 @@ class ServeEngine:
             ).astype(jnp.int32)
             sp.outs["tokens_out"] = len(active)
         self._tok = nxt
+        if self.adaptive is not None:
+            self.adaptive.tick(engine=self)
         host = np.asarray(nxt)
         for i in active:
             r = self.slots[i]

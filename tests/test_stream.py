@@ -1,5 +1,7 @@
-"""Streaming aggregation service (§3.7+§6): framing, master merge vs the
-offline batch combine, the forwarding tree, and tracer-driven end-to-end."""
+"""Streaming aggregation service (§3.7+§6): framing, the v2 delta protocol
+(encode/decode, mis-based frames, resync-after-reconnect), master merge vs
+the offline batch combine, the forwarding tree, and tracer-driven
+end-to-end."""
 
 import os
 import socket
@@ -110,6 +112,243 @@ def test_parse_addr():
     assert parse_addr("10.0.0.1:9000") == ("10.0.0.1", 9000)
     assert parse_addr(":9000") == ("127.0.0.1", 9000)
     assert parse_addr(("h", 1)) == ("h", 1)
+
+
+# ---------------------------------------------------------------------------
+# Delta encoding (protocol v2)
+# ---------------------------------------------------------------------------
+
+
+def grow(t: Tally, calls: int, extra_api: str = None) -> Tally:
+    """Cumulatively grow a tally the way a live rank does."""
+    for _ in range(calls):
+        t.apis[("ust_repro", "train_step")].add(2000)
+    if extra_api is not None:
+        st = ApiStat()
+        st.add(123)
+        t.apis[("ust_repro", extra_api)] = st
+    return t
+
+
+def test_delta_roundtrip_through_msgpack():
+    """delta_to → msgpack → apply_delta reproduces the newer cumulative
+    state exactly, and the delta only carries the changed entries."""
+    import msgpack
+
+    base = mk_tally(0, calls=5)
+    # a wide stable region the delta must NOT carry
+    for i in range(50):
+        st = ApiStat()
+        st.add(10 + i)
+        base.apis[("ust_jaxrt", f"cold_{i}")] = st
+    older = Tally().merge(base)
+    grow(base, calls=3, extra_api="optimizer_update")
+    base.hostnames.add("node999")
+
+    d = base.delta_to(older)
+    assert len(d["apis"]) == 2  # only train_step + the new API changed
+    assert d["hostnames"] == ["node999"]
+    d = msgpack.unpackb(msgpack.packb(d, use_bin_type=True), raw=False)
+    rebuilt = Tally().merge(older).apply_delta(d)
+    assert rebuilt.to_obj() == base.to_obj()
+
+
+def test_delta_refuses_removed_entries():
+    """Cumulative tallies never shrink; a shrunk 'current' state must raise
+    so the streamer falls back to a full snapshot."""
+    prev = mk_tally(0)
+    cur = Tally().merge(prev)
+    del cur.apis[("ust_repro", "train_step")]
+    with pytest.raises(ValueError):
+        cur.delta_to(prev)
+    cur2 = Tally().merge(prev)
+    cur2.hostnames = set()
+    with pytest.raises(ValueError):
+        cur2.delta_to(prev)
+    # removal masked by an equal-size addition must still be caught
+    cur3 = Tally().merge(prev)
+    del cur3.apis[("ust_repro", "train_step")]
+    st = ApiStat()
+    st.add(1)
+    cur3.apis[("ust_repro", "replacement")] = st
+    with pytest.raises(ValueError):
+        cur3.delta_to(prev)
+
+
+def test_master_delta_out_of_order_and_duplicate_rejected():
+    """A delta applies only on exact base_seq match: duplicates (already
+    superseded base) and out-of-order frames (future base) are rejected
+    without corrupting the stored cumulative state."""
+    m = MasterServer(port=0)
+    t = mk_tally(0, calls=5)
+    m.submit("r0", Tally().merge(t), seq=0)
+
+    older = Tally().merge(t)
+    grow(t, calls=4)
+    d1 = t.delta_to(older)
+    assert m.submit_delta("r0", d1, seq=1, base_seq=0)
+    assert m.composite().apis[("ust_repro", "train_step")].calls == 9
+
+    # duplicate redelivery of the same delta: stored seq is 1, base is 0
+    assert not m.submit_delta("r0", d1, seq=1, base_seq=0)
+    # out-of-order / gapped delta: base_seq 5 never existed
+    assert not m.submit_delta("r0", d1, seq=6, base_seq=5)
+    # unknown source (e.g. master restarted and lost state)
+    assert not m.submit_delta("rX", d1, seq=1, base_seq=0)
+    assert m.composite().apis[("ust_repro", "train_step")].calls == 9
+    assert m.stats()["deltas"] == 1
+
+
+def test_streamer_switches_to_deltas_after_hello_ack():
+    """Steady state on one connection: first push is a full snapshot, later
+    pushes are deltas (once hello_ack lands), and the master state tracks
+    the sender's cumulative tally exactly."""
+    with MasterServer(port=0) as m:
+        s = SnapshotStreamer(m.addr, source="r0")
+        t = mk_tally(0, calls=5)
+        assert s.push(t)
+        assert s.full_frames == 1
+        assert wait_until(lambda: (s.poll_control() or True) and s.peer_version is not None)
+        for i in range(4):
+            grow(t, calls=1)
+            assert s.push(t)
+        assert s.delta_frames >= 3  # at most one more full before the ack
+        assert wait_until(
+            lambda: query_composite(m.addr)[0].apis[("ust_repro", "train_step")].calls == 9
+        )
+        assert m.deltas >= 3
+        s.close()
+
+
+def test_streamer_resync_every_forces_full_frames():
+    with MasterServer(port=0) as m:
+        s = SnapshotStreamer(m.addr, source="r0", resync_every=2)
+        t = mk_tally(0, calls=1)
+        assert s.push(t)
+        assert wait_until(lambda: (s.poll_control() or True) and s.peer_version == 2)
+        for _ in range(6):
+            grow(t, calls=1)
+            assert s.push(t)
+        # pattern after the ack: delta, delta, full, delta, delta, full…
+        assert s.full_frames >= 3
+        assert s.delta_frames >= 4
+        assert wait_until(
+            lambda: query_composite(m.addr)[0].apis[("ust_repro", "train_step")].calls == 7
+        )
+        s.close()
+
+
+def test_resync_after_master_restart():
+    """Master restarts (losing all state) while the streamer holds delta
+    state: the dead connection is detected, the reconnect re-hellos, and
+    the first frame on the new connection is a full snapshot that rebuilds
+    the master."""
+    m1 = MasterServer(port=0).start()
+    s = SnapshotStreamer(m1.addr, source="r0", retry_s=0.01)
+    t = mk_tally(0, calls=3)
+    assert s.push(t)
+    assert wait_until(lambda: (s.poll_control() or True) and s.peer_version == 2)
+    grow(t, calls=2)
+    assert s.push(t)
+    assert s.delta_frames >= 1  # delta base state exists on this connection
+    m1.stop()
+
+    grow(t, calls=1)
+    # the EOF left by the dead master is seen before the next send: the push
+    # fails, the connection (and its delta base state) is dropped
+    assert not s.push(t)
+    # "restarted" master: same role, empty state (fresh port sidesteps the
+    # kernel's FIN_WAIT hold on the old one; the streamer state machine
+    # can't tell the difference)
+    with MasterServer(port=0) as m2:
+        s.addr = parse_addr(m2.addr)
+        assert wait_until(
+            lambda: s.push(t)
+            and m2.stats()["sources"] == 1
+            and m2.composite().apis[("ust_repro", "train_step")].calls == 6,
+            timeout_s=8.0,
+        )
+        assert m2.full_snapshots >= 1  # reconnect resynced with a full frame
+    s.close()
+
+
+def test_master_requests_resync_on_unknown_base():
+    """A mis-based delta makes the master answer `resync`; the streamer's
+    next push is then a full snapshot that heals the state."""
+    with MasterServer(port=0) as m:
+        s = SnapshotStreamer(m.addr, source="r0")
+        t = mk_tally(0, calls=2)
+        assert s.push(t)
+        assert wait_until(lambda: (s.poll_control() or True) and s.peer_version == 2)
+        grow(t, calls=1)
+        assert s.push(t)
+        assert s.delta_frames >= 1
+        # simulate master-side state loss with the connection still up
+        assert wait_until(lambda: m.stats()["sources"] == 1)
+        m._latest.clear()
+        grow(t, calls=1)
+        assert s.push(t)  # delta lands on empty state → rejected → resync
+        assert wait_until(lambda: (s.poll_control() or True) and s.resyncs >= 1)
+        grow(t, calls=1)
+        assert s.push(t)  # forced full
+        assert wait_until(
+            lambda: m.stats()["sources"] == 1
+            and m.composite().apis[("ust_repro", "train_step")].calls == 5
+        )
+        assert m.resyncs_sent >= 1
+        s.close()
+
+
+def test_no_delta_mode_always_full():
+    with MasterServer(port=0) as m:
+        s = SnapshotStreamer(m.addr, source="r0", delta=False)
+        t = mk_tally(0, calls=1)
+        for _ in range(3):
+            grow(t, calls=1)
+            assert s.push(t)
+        assert s.full_frames == 3 and s.delta_frames == 0
+        s.close()
+
+
+def test_subscribe_composites_pushes_updates():
+    from repro.core.stream import subscribe_composites
+
+    with MasterServer(port=0) as m:
+        m.submit("r0", mk_tally(0))
+        got = []
+        for t, meta in subscribe_composites(m.addr, period_s=0.05):
+            got.append((t, meta))
+            if len(got) >= 3:
+                break
+        assert all(
+            t.apis[("ust_repro", "train_step")].calls == 10 for t, _ in got
+        )
+        assert got[0][1]["sources"] == 1
+        # idle master: only the first push serializes the composite, later
+        # periods are tally-less heartbeats re-yielding the cached tally
+        assert "unchanged" not in got[0][1]
+        assert got[1][1].get("unchanged") and got[2][1].get("unchanged")
+
+
+def test_forward_delta_disabled_sends_full_frames_upstream():
+    """MasterServer(forward_delta=False) must honor the full-snapshot wire
+    behavior on its upstream hop (TraceConfig.stream_delta plumbs here)."""
+    with MasterServer(port=0) as g:
+        with MasterServer(
+            port=0, forward_to=g.addr, forward_period_s=0.02, forward_delta=False
+        ) as l:
+            for calls in (3, 5, 8):
+                l.submit("r0", mk_tally(0, calls=calls))
+                l.flush(force=True)
+            fwd = l.forwarder
+            assert fwd.delta is False
+            assert fwd.full_frames >= 3 and fwd.delta_frames == 0
+            assert wait_until(
+                lambda: query_composite(g.addr)[0]
+                .apis[("ust_repro", "train_step")]
+                .calls
+                == 8
+            )
 
 
 # ---------------------------------------------------------------------------
@@ -261,6 +500,19 @@ def test_iprof_top_renders_composite(capsys):
     assert rc == 0
     assert "train_step" in out and "1 sources" in out
     assert "-- device --" in out  # mk_tally has device rows
+
+
+def test_iprof_top_live_subscribe_mode(capsys):
+    from repro.core.iprof import main as iprof
+
+    with MasterServer(port=0) as m:
+        m.submit("r0", mk_tally(0))
+        rc = iprof(
+            ["top", m.addr, "--live", "--interval", "0.05", "--iterations", "2", "--no-clear"]
+        )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert out.count("[iprof top]") == 2 and "train_step" in out
 
 
 def test_iprof_top_unreachable_master(capsys):

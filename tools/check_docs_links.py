@@ -1,10 +1,22 @@
 #!/usr/bin/env python
-"""Docs link check: every relative markdown link must resolve to a file.
+"""Docs consistency check: links, file paths, and code references.
 
-Scans *.md at the repo root and under docs/ for [text](target) links, skips
-absolute URLs and mailto:, strips #anchors, and fails (exit 1) listing any
-target that does not exist on disk.  No network access — external links are
-out of scope by design so CI stays hermetic.
+Three passes over *.md at the repo root and under docs/, all hermetic (no
+network, no imports of the package):
+
+1. **Relative links** — every [text](target) markdown link must resolve to a
+   file on disk (absolute URLs / mailto: / #anchors skipped).
+2. **Path references** — inline-code / fenced-code mentions of repo paths
+   (`src/...`, `docs/...`, `examples/...`, ...) must exist, so docs can't
+   point at renamed or deleted files.
+3. **Module & class references** — dotted module mentions (`repro.core.stream`,
+   `repro.core.stream.MasterServer`) must resolve to real modules/packages
+   under src/ (trailing attribute names must appear in the module source),
+   and CamelCase identifiers mentioned in code spans (`MasterServer`,
+   `TraceConfig`) must occur somewhere in the source tree — so renaming a
+   class without updating the docs fails CI.
+
+Exit 1 listing every broken reference. Runs in the docs CI job.
 """
 
 from __future__ import annotations
@@ -15,8 +27,23 @@ import sys
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 FENCE_RE = re.compile(r"```.*?```", re.S)
-INLINE_CODE_RE = re.compile(r"`[^`]*`")
+INLINE_CODE_RE = re.compile(r"`([^`]*)`")
 SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+# repo paths mentioned in code spans, e.g. `src/repro/core/stream.py`
+PATH_RE = re.compile(r"\b(?:src|docs|tools|tests|examples|benchmarks)/[\w./-]+\b")
+# dotted module (optionally .Class/.attr) references, e.g. repro.core.stream
+DOTTED_RE = re.compile(r"\brepro(?:\.\w+)+")
+# CamelCase identifiers (must mix cases: skips ALLCAPS consts and lowercase)
+CAMEL_RE = re.compile(r"\b[A-Z][A-Za-z0-9]*[a-z][A-Za-z0-9]*\b")
+
+#: CamelCase words legitimately used in code spans without being identifiers
+CAMEL_ALLOWLIST = {
+    "Name", "Time", "Calls", "Average", "Min", "Max",  # tally table headers
+    "Hostnames", "Processes", "Threads",  # tally banner fields
+}
+
+SOURCE_DIRS = ("src", "tools", "tests", "examples", "benchmarks")
 
 
 def md_files(root: str):
@@ -30,32 +57,125 @@ def md_files(root: str):
                 yield os.path.join(docs, name)
 
 
+def source_blob(root: str) -> str:
+    """Every .py under the source dirs, concatenated, for identifier lookup."""
+    parts = []
+    for d in SOURCE_DIRS:
+        top = os.path.join(root, d)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, dirnames, files in os.walk(top):
+            dirnames[:] = [n for n in dirnames if n != "__pycache__"]
+            for name in files:
+                if name.endswith(".py"):
+                    with open(os.path.join(dirpath, name), encoding="utf-8") as f:
+                        parts.append(f.read())
+    return "\n".join(parts)
+
+
+def code_spans(text: str):
+    """Every inline-code span and fenced-code block body in a document."""
+    for m in FENCE_RE.finditer(text):
+        yield m.group(0).strip("`")
+    for m in INLINE_CODE_RE.finditer(FENCE_RE.sub("", text)):
+        yield m.group(1)
+
+
+def resolve_dotted(root: str, ref: str) -> bool:
+    """`repro.a.b[.Attr…]` → does the module exist (and mention the attr)?"""
+    parts = ref.split(".")
+    cur = os.path.join(root, "src")
+    for i, part in enumerate(parts):
+        pkg = os.path.join(cur, part)
+        mod = pkg + ".py"
+        if os.path.isdir(pkg):
+            cur = pkg
+            continue
+        if os.path.isfile(mod):
+            attrs = parts[i + 1 :]
+            if not attrs:
+                return True
+            with open(mod, encoding="utf-8") as f:
+                src = f.read()
+            return re.search(rf"\b{re.escape(attrs[0])}\b", src) is not None
+        return False
+    # pure package reference (repro, repro.core, ...)
+    return os.path.isfile(os.path.join(cur, "__init__.py"))
+
+
+def check_links(root: str, path: str, text: str, broken: list) -> int:
+    checked = 0
+    base = os.path.dirname(path)
+    # code spans/blocks legitimately contain []()-shaped text, not links
+    stripped = INLINE_CODE_RE.sub("", FENCE_RE.sub("", text))
+    for m in LINK_RE.finditer(stripped):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        checked += 1
+        resolved = os.path.normpath(os.path.join(base, target))
+        if not os.path.exists(resolved):
+            broken.append(f"{os.path.relpath(path, root)}: link {m.group(1)}")
+    return checked
+
+
+def check_code_refs(root: str, path: str, text: str, blob: str, broken: list) -> int:
+    checked = 0
+    rel = os.path.relpath(path, root)
+    seen = set()
+    for span in code_spans(text):
+        for m in PATH_RE.finditer(span):
+            ref = m.group(0).rstrip(".")
+            if ref in seen:
+                continue
+            seen.add(ref)
+            checked += 1
+            if not os.path.exists(os.path.join(root, ref)):
+                broken.append(f"{rel}: path `{ref}`")
+        for m in DOTTED_RE.finditer(span):
+            ref = m.group(0)
+            if ref in seen:
+                continue
+            seen.add(ref)
+            checked += 1
+            if not resolve_dotted(root, ref):
+                broken.append(f"{rel}: module `{ref}`")
+        for m in CAMEL_RE.finditer(span):
+            name = m.group(0)
+            if name in seen or name in CAMEL_ALLOWLIST:
+                continue
+            seen.add(name)
+            checked += 1
+            if not re.search(rf"\b{re.escape(name)}\b", blob):
+                broken.append(f"{rel}: identifier `{name}`")
+    return checked
+
+
 def main() -> int:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    broken = []
-    checked = 0
+    blob = source_blob(root)
+    broken: list = []
+    links = refs = 0
     for path in md_files(root):
-        base = os.path.dirname(path)
         text = open(path, encoding="utf-8").read()
-        # code spans/blocks legitimately contain []()-shaped text, not links
-        text = INLINE_CODE_RE.sub("", FENCE_RE.sub("", text))
-        for m in LINK_RE.finditer(text):
-            target = m.group(1)
-            if target.startswith(SKIP_PREFIXES):
-                continue
-            target = target.split("#", 1)[0]
-            if not target:
-                continue
-            checked += 1
-            resolved = os.path.normpath(os.path.join(base, target))
-            if not os.path.exists(resolved):
-                broken.append(f"{os.path.relpath(path, root)}: {m.group(1)}")
+        links += check_links(root, path, text, broken)
+        # code-reference pass covers the docs we author about *this* tree;
+        # exhibit files (SNIPPETS.md quotes other repos' code verbatim,
+        # PAPERS.md quotes abstracts) legitimately mention foreign names
+        name = os.path.basename(path)
+        if name == "README.md" or os.path.basename(os.path.dirname(path)) == "docs":
+            refs += check_code_refs(root, path, text, blob, broken)
     if broken:
-        print("broken relative links:")
+        print("broken documentation references:")
         for b in broken:
             print(f"  {b}")
         return 1
-    print(f"docs link check OK ({checked} relative links resolve)")
+    print(
+        f"docs check OK ({links} relative links, {refs} code references resolve)"
+    )
     return 0
 
 

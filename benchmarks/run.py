@@ -1,21 +1,78 @@
 """Benchmark driver — one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run --smoke [--json BENCH_smoke.json]
 
-Emits a ``name,us_per_call,derived`` CSV summary at the end.
+``--smoke`` is the CI configuration: the jax-light sections only
+(tracepoint cost, aggregation tree, streaming bytes-on-wire) at small
+sizes, with the results written as JSON so every PR leaves a
+``BENCH_*.json`` artifact and the perf trajectory accumulates.  The full
+run emits a ``name,us_per_call,derived`` CSV summary at the end.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
+
+
+def run_smoke(json_path: str) -> None:
+    """CI smoke: fast sections, crash on regression-shaped breakage, JSON out."""
+    from . import aggregate_scale, stream_bw, tracepoint_cost
+
+    results = {
+        "mode": "smoke",
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
+    print("== smoke: §3.1 tracepoint hot-path cost ==")
+    tc = tracepoint_cost.run()
+    for k, v in sorted(tc.items()):
+        print(f"  {k:26s} {v:12.1f}")
+    results["tracepoint_cost"] = tc
+
+    print("== smoke: §3.7 aggregation tree (64 ranks) ==")
+    ag = aggregate_scale.run(ranks=64, fanout=8)
+    print(
+        f"  ranks={ag['ranks']} fanout={ag['fanout']} depth={ag['depth']} "
+        f"wall={ag['merge_wall_s'] * 1000:.1f}ms"
+    )
+    results["aggregate_scale"] = ag
+
+    print("== smoke: §3.7+§6 streaming full vs delta bytes-on-wire ==")
+    bw = stream_bw.run(width=200, rounds=10)
+    print(
+        f"  full={bw['full_bytes']}B delta={bw['delta_bytes']}B "
+        f"reduction={bw['ratio']:.1f}x"
+    )
+    results["stream_bw"] = bw
+
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"wrote {json_path}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="fewer steps / smaller suite")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI smoke subset (jax-light, small sizes), results as JSON",
+    )
+    ap.add_argument(
+        "--json",
+        default="BENCH_smoke.json",
+        help="JSON output path for --smoke results",
+    )
     args = ap.parse_args()
+
+    if args.smoke:
+        run_smoke(args.json)
+        return
 
     from . import (
         aggregate_scale,

@@ -114,5 +114,14 @@ if __name__ == "__main__":
     ap.add_argument("--width", type=int, default=2000)
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--hot", type=int, default=16)
+    ap.add_argument(
+        "--json", default=None, help="write the result dict to this JSON file"
+    )
     a = ap.parse_args()
-    main(width=a.width, rounds=a.rounds, hot=a.hot)
+    result = main(width=a.width, rounds=a.rounds, hot=a.hot)
+    if a.json:
+        import json
+
+        with open(a.json, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+        print(f"  wrote {a.json}")

@@ -9,14 +9,25 @@ tally + validation report.
 ``--live`` instead demonstrates the §3.7+§6 streaming aggregation service on
 localhost: N worker processes each run a small traced workload, streaming
 live tally state (protocol-v2 delta frames) to a *local master* which
-forwards composites to a *global master* (the full fanout tree, live).  Each
-worker also runs an adaptive policy that retunes its snapshot cadence from
-the live ``busy_fraction`` of ``train_step`` mid-run.  The driver renders
-the global composite while the ranks run — what ``iprof top`` shows — then
-proves the final live composite matches the offline ``iprof combine`` of the
-very same run's per-rank aggregates, API for API.
+forwards the per-rank breakdown to a *global master* (the full fanout tree,
+live, rank identities intact).  Each worker also runs an adaptive policy
+that retunes its snapshot cadence from the live ``busy_fraction`` of
+``train_step`` mid-run.  The driver renders the global composite while the
+ranks run — what ``iprof top`` shows — then proves the final live composite
+matches the offline ``iprof combine`` of the very same run's per-rank
+aggregates, API for API, and that the ``query_ranks`` per-rank sums equal
+the merged composite.
 
-    PYTHONPATH=src python examples/distributed_train.py --live
+With ``--live-slow-rank R`` one rank is deliberately slowed inside its
+``train_step`` spans; a **cluster-scope adaptive controller**
+(``StragglerRankPolicy`` over the global master's per-rank composites) runs
+in the driver, flags the lagging rank from API-level evidence — which rank,
+which API, how far behind the cluster median — records the flag as an
+``ust_repro:advisory`` event in the driver's own trace, and feeds the
+trainer-layer straggler watchdog (``StragglerWatchdog.note_api_evidence``),
+the same callback a real ``Trainer`` exposes as ``straggler_callback``.
+
+    PYTHONPATH=src python examples/distributed_train.py --live --live-slow-rank 1
 """
 
 import argparse
@@ -61,7 +72,14 @@ def config_100m():
 # ---------------------------------------------------------------------------
 
 
-def live_worker(rank: int, out_dir: str, addr: str, steps: int) -> None:
+def live_worker(
+    rank: int,
+    out_dir: str,
+    addr: str,
+    steps: int,
+    slow_s: float = 0.0,
+    seconds: float = 0.0,
+) -> None:
     """One traced rank: tiny jit workload, tally state streamed to ``addr``
     (v2 delta frames in steady state), final aggregate also written to disk
     (aggregate_only) so the driver can cross-check the live composite
@@ -72,6 +90,13 @@ def live_worker(rank: int, out_dir: str, addr: str, steps: int) -> None:
     snapshot push period mid-run — snapshots arrive fast while the rank is
     compiling/computing, slow while it idles.  Every knob turn is printed
     and recorded as an ``ust_repro:advisory`` event in the trace.
+
+    ``slow_s`` injects extra latency *inside* every ``train_step`` span —
+    the synthetic straggler the driver's cluster-scope controller must
+    catch from the per-rank composites alone.  With ``seconds`` set the
+    worker keeps stepping until that much wall time has passed (at least
+    ``steps`` steps), so fast and slow ranks stay *concurrently* active —
+    cross-rank windows only exist while ranks overlap.
     """
     import jax.numpy as jnp
 
@@ -104,13 +129,18 @@ def live_worker(rank: int, out_dir: str, addr: str, steps: int) -> None:
         adaptive=ctrl,
     )
     with Tracer(cfg) as tr:
-        for s in range(steps):
+        deadline = time.monotonic() + seconds
+        s = 0
+        while s < steps or (seconds > 0 and time.monotonic() < deadline):
             with train_step_span(s, 2, 64) as sp:
                 sp.outs["loss"] = float(f(x))
                 sp.outs["grad_norm"] = 1.0
+                if slow_s > 0:
+                    time.sleep(slow_s)  # the injected straggler latency
             with collective_span("all_reduce", 128, "data", 2):
                 pass
             time.sleep(0.05)  # spread steps so mid-run snapshots differ
+            s += 1
     st = tr.streamer
     print(
         f"[rank {rank}] streamed {st.pushed} frames "
@@ -130,12 +160,24 @@ def _api_totals(t):
 
 
 def run_live(args) -> int:
-    from repro.core import MasterServer, query_composite
-    from repro.core.aggregate import combine_aggregates, find_aggregates
+    from repro.core import (
+        ClusterAdaptiveController,
+        MasterServer,
+        StragglerRankPolicy,
+        query_composite,
+        query_ranks,
+    )
+    from repro.core.aggregate import combine_aggregates, find_aggregates, merge_tallies
+    from repro.core.babeltrace import CTFSource
+    from repro.core.plugins.tally import Tally, render_by_rank
+    from repro.train import StragglerWatchdog
 
     root = tempfile.mkdtemp(prefix="thapi_live_")
     # Global master at the tree root, one local master forwarding into it —
-    # the paper's rank → local master → global master chain, live.
+    # the paper's rank → local master → global master chain, live.  The
+    # local master forwards the per-rank breakdown (forward_ranks default),
+    # so rank identities survive to the root where the cluster controller
+    # reads them.
     global_m = MasterServer(port=0).start()
     local_m = MasterServer(
         port=0, forward_to=global_m.addr, forward_period_s=0.1
@@ -146,30 +188,64 @@ def run_live(args) -> int:
     procs = []
     for r in range(args.live_ranks):
         out = os.path.join(root, f"r{r}")
-        procs.append(
-            subprocess.Popen(
-                [
-                    sys.executable,
-                    os.path.abspath(__file__),
-                    "--live-worker",
-                    str(r),
-                    "--live-out",
-                    out,
-                    "--live-addr",
-                    local_m.addr,
-                    "--live-steps",
-                    str(args.live_steps),
-                ],
-                env=env,
-            )
+        cmd = [
+            sys.executable,
+            os.path.abspath(__file__),
+            "--live-worker",
+            str(r),
+            "--live-out",
+            out,
+            "--live-addr",
+            local_m.addr,
+            "--live-steps",
+            str(args.live_steps),
+        ]
+        if args.live_seconds:
+            cmd += ["--live-worker-seconds", str(args.live_seconds)]
+        if args.live_slow_rank is not None and r == args.live_slow_rank:
+            cmd += ["--live-slow", str(args.live_slow_s)]
+        procs.append(subprocess.Popen(cmd, env=env))
+    if args.live_slow_rank is not None:
+        print(
+            f"[live] rank {args.live_slow_rank} deliberately slowed by "
+            f"{args.live_slow_s * 1000:.0f}ms per train_step"
         )
+
+    # Cluster-scope adaptive control in the driver: a StragglerRankPolicy
+    # polls the global master's per-rank composites over TCP (query_ranks),
+    # flags ranks lagging the cluster median on train_step latency, and
+    # feeds the trainer-layer watchdog — the same callback a real Trainer
+    # exposes as `trainer.straggler_callback`.
+    watchdog = StragglerWatchdog()
+    monitor = ClusterAdaptiveController(
+        [
+            StragglerRankPolicy(
+                "ust_repro", "train_step", ratio=1.75, metric="latency", patience=1
+            )
+        ],
+        addr=global_m.addr,
+        period_s=0.4,
+        on_straggler=watchdog.note_api_evidence,
+        on_action=lambda a: print(f"[cluster] {a}", flush=True),
+    )
+
+    # The driver runs its own tiny tracing session so every cluster flag is
+    # also recorded as a ust_repro:advisory event — the "adaptation is
+    # observable" invariant holds at cluster scope too.
+    driver_dir = os.path.join(root, "driver")
     print(f"[live] {len(procs)} ranks streaming; composite while they run:")
-    while any(p.poll() is None for p in procs):
-        time.sleep(0.5)
-        t, meta = query_composite(global_m.addr)
-        if t.apis or t.device_apis:
-            print(f"\n[live] -- {meta['sources']} sources, {meta['snapshots']} snapshots --")
-            print(render(t, top=5))
+    with Tracer(TraceConfig(out_dir=driver_dir, mode="default", online=True)) as drv:
+        monitor.attach(drv)
+        while any(p.poll() is None for p in procs):
+            monitor.tick()
+            time.sleep(0.2)
+            t, meta = query_composite(global_m.addr)
+            if t.apis or t.device_apis:
+                print(
+                    f"\n[live] -- {meta['sources']} sources, "
+                    f"{meta['snapshots']} snapshots --"
+                )
+                print(render(t, top=5))
     rc = max(p.wait() for p in procs)
     if rc != 0:
         print(f"[live] a worker failed (exit {rc})", file=sys.stderr)
@@ -187,6 +263,7 @@ def run_live(args) -> int:
         if _api_totals(live) == want:
             break
         time.sleep(0.2)
+    ranks, _ = query_ranks(global_m.addr)
     local_m.stop()
     global_m.stop()
 
@@ -198,14 +275,55 @@ def run_live(args) -> int:
     )
     print("\n[live] final composite (streaming, via global master):")
     print(render(live))
+    print("\n[live] per-rank breakdown at the global master (iprof top --by-rank):")
+    print(render_by_rank(ranks))
     print("\n[live] offline combine of the same run's rank aggregates:")
     print(render(offline))
+
+    ok = True
     if _api_totals(live) == want:
-        print(f"\n[live] OK: live composite matches offline combine "
-              f"({len(want)} API rows, {args.live_ranks} ranks)")
-        return 0
-    print("\n[live] MISMATCH between live composite and offline combine", file=sys.stderr)
-    return 1
+        print(
+            f"\n[live] OK: live composite matches offline combine "
+            f"({len(want)} API rows, {args.live_ranks} ranks)"
+        )
+    else:
+        print("\n[live] MISMATCH between live composite and offline combine", file=sys.stderr)
+        ok = False
+
+    # per-rank sums must reproduce the merged composite, API for API
+    rank_merge, _ = merge_tallies([Tally().merge(t) for t in ranks.values()])
+    if _api_totals(rank_merge) == _api_totals(live):
+        print(
+            f"[live] OK: query_ranks per-rank sums equal the merged composite "
+            f"({len(ranks)} ranks)"
+        )
+    else:
+        print("[live] MISMATCH between per-rank sums and composite", file=sys.stderr)
+        ok = False
+
+    if args.live_slow_rank is not None:
+        reports = watchdog.api_reports()
+        advisories = [
+            ev for ev in CTFSource(driver_dir) if ev.name == "ust_repro:advisory"
+        ]
+        wanted = f"rank{args.live_slow_rank}"
+        hit = [r for r in reports if r.source.endswith(wanted)]
+        if hit and advisories:
+            r = hit[0]
+            print(
+                f"[live] OK: straggler {r.source} flagged on {r.provider}:{r.api} "
+                f"at {r.ratio:.1f}x the cluster median; trainer watchdog got "
+                f"{len(reports)} report(s), {len(advisories)} advisory event(s) "
+                f"in the driver trace"
+            )
+        else:
+            print(
+                f"[live] FAIL: slow rank {wanted} not flagged "
+                f"(reports={len(reports)}, advisories={len(advisories)})",
+                file=sys.stderr,
+            )
+            ok = False
+    return 0 if ok else 1
 
 
 def main():
@@ -216,14 +334,47 @@ def main():
     ap.add_argument("--live", action="store_true", help="streaming aggregation demo")
     ap.add_argument("--live-ranks", type=int, default=2)
     ap.add_argument("--live-steps", type=int, default=20)
+    ap.add_argument(
+        "--live-slow-rank",
+        type=int,
+        default=None,
+        help="slow this rank inside train_step; the cluster controller must flag it",
+    )
+    ap.add_argument(
+        "--live-slow-s",
+        type=float,
+        default=0.25,
+        help="injected per-step latency for --live-slow-rank (seconds)",
+    )
+    ap.add_argument(
+        "--live-seconds",
+        type=float,
+        default=None,
+        help="run every rank for this much wall time (keeps fast and slow "
+        "ranks concurrently active; defaults to 6s in slow-rank mode)",
+    )
     ap.add_argument("--live-worker", type=int, default=None, help=argparse.SUPPRESS)
     ap.add_argument("--live-out", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--live-addr", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--live-slow", type=float, default=0.0, help=argparse.SUPPRESS)
+    ap.add_argument(
+        "--live-worker-seconds", type=float, default=0.0, help=argparse.SUPPRESS
+    )
     args = ap.parse_args()
 
     if args.live_worker is not None:
-        live_worker(args.live_worker, args.live_out, args.live_addr, args.live_steps)
+        live_worker(
+            args.live_worker,
+            args.live_out,
+            args.live_addr,
+            args.live_steps,
+            slow_s=args.live_slow,
+            seconds=args.live_worker_seconds,
+        )
         return
+    if args.live and args.live_slow_rank is not None and args.live_seconds is None:
+        # straggler detection needs cross-rank windows: ranks must overlap
+        args.live_seconds = 6.0
     if args.live:
         sys.exit(run_live(args))
 

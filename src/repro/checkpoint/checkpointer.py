@@ -26,7 +26,7 @@ import re
 import shutil
 import threading
 import zlib
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -168,7 +168,7 @@ class Checkpointer:
         with checkpoint_restore_span(path) as span:
             with open(os.path.join(path, "manifest.json")) as f:
                 man = CheckpointManifest.from_json(json.load(f))
-            by_key = {l["key"]: l for l in man.leaves}
+            by_key = {leaf["key"]: leaf for leaf in man.leaves}
             keys = [k for k, _ in _flatten_with_keys(target_tree)]
             missing = [k for k in keys if k not in by_key]
             if missing:

@@ -10,8 +10,9 @@ Public API:
 
     from repro.core import TraceConfig, Tracer, trace_session       # collection
     from repro.core import traced_jit, kernel_span, collective_span # interception
-    from repro.core import MasterServer, query_composite            # streaming
+    from repro.core import MasterServer, query_composite, query_ranks  # streaming
     from repro.core import AdaptiveController, WidenSamplingPolicy  # §6 adaptive
+    from repro.core import ClusterAdaptiveController, StragglerRankPolicy  # cluster scope
     from repro.core.plugins.tally import tally_trace, render        # analysis
 """
 
@@ -38,7 +39,11 @@ from .adaptive import (  # noqa: F401
     AdaptiveAction,
     AdaptiveController,
     AdaptivePolicy,
+    ClusterAdaptiveController,
+    ClusterPolicy,
+    RankImbalanceAdvisoryPolicy,
     RingPressurePolicy,
+    StragglerRankPolicy,
     StreamCadencePolicy,
     ThresholdAdvisoryPolicy,
     WidenSamplingPolicy,
@@ -48,6 +53,7 @@ from .stream import (  # noqa: F401
     SnapshotStreamer,
     live_snapshot,
     query_composite,
+    query_ranks,
     subscribe_composites,
 )
 from .tracer import (  # noqa: F401

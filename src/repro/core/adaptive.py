@@ -5,36 +5,54 @@
      application runtime."
 
 ``online.py`` gives a rank a *live tally*; ``stream.py`` gives the cluster a
-*live composite*.  This module closes the loop: an :class:`AdaptiveController`
-rides the tracer's consumer thread, computes **windowed** rates from
-successive live snapshots (busy fraction, per-call latency, ring-buffer
-drops), and hands them to pluggable :class:`AdaptivePolicy` objects that may
-turn session knobs *mid-run* — widen event sampling, resize ring buffers for
-new threads, retune snapshot cadence — or emit ``ust_repro:advisory`` events
-into the trace so the reconfiguration itself is visible post-mortem.
+*live composite* — and, since protocol v2.1, a live **per-rank breakdown**.
+This module closes the loop at both scopes:
+
+  * an :class:`AdaptiveController` rides the tracer's consumer thread,
+    computes **windowed** rates from successive live snapshots of *this
+    rank* (busy fraction, per-call latency, ring-buffer drops), and hands
+    them to pluggable :class:`AdaptivePolicy` objects that may turn session
+    knobs *mid-run* — widen event sampling, resize ring buffers for new
+    threads, retune snapshot cadence;
+  * a :class:`ClusterAdaptiveController` reads the per-rank tally map of a
+    streaming master (in-process via ``MasterServer.ranks()`` or remote via
+    ``query_ranks``), diffs consecutive per-rank snapshots into cross-rank
+    windowed metrics (per-rank busy fraction / latency, rank-vs-median skew
+    ratios), and hands them to :class:`ClusterPolicy` objects —
+    :class:`StragglerRankPolicy` flags lagging ranks and feeds API-level
+    evidence (which rank, which API, how far behind) into the trainer's
+    straggler watchdog; :class:`RankImbalanceAdvisoryPolicy` narrates load
+    skew.  The signals these policies act on only exist *across* ranks: a
+    straggler looks healthy in its own tally and only lags relative to the
+    cluster median.
 
 Wiring:
 
   * ``TraceConfig(adaptive=[...policies...])`` — the tracer builds a
     controller and ticks it from the consumer loop every
     ``adaptive_period_s`` (collection hot paths never see it);
-  * ``ServeEngine(..., adaptive=controller_or_policies)`` — the serving loop
+  * ``TraceConfig(cluster_adaptive=[...], serve_port=...)`` — the tracer
+    binds a cluster controller to its in-process master and ticks it from
+    the same consumer loop every ``cluster_period_s``;
+  * ``ServeEngine(..., adaptive=…, cluster_adaptive=…)`` — the serving loop
     ticks the same machinery between decode steps, with ``ctx.engine`` set
     so policies can reach serving knobs;
   * every knob change is recorded as an :class:`AdaptiveAction` (see
-    ``controller.actions``) *and* traced as an advisory event.
+    ``controller.actions``) *and* traced as an advisory event, so the
+    reconfiguration itself is visible post-mortem.
 
 Windowed metrics, not cumulative ones: ``OnlineAnalyzer.busy_fraction`` is
 share-of-total since session start; a policy reacting mid-run needs the
-share over the *last* window, so the controller diffs consecutive snapshots.
+share over the *last* window, so the controllers diff consecutive snapshots.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import statistics
 import threading
 import time
-from typing import Callable, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .plugins.tally import Tally
 
@@ -337,7 +355,48 @@ class ThresholdAdvisoryPolicy(AdaptivePolicy):
             self.react(ctx, False, busy)
 
 
-class AdaptiveController:
+class _ControllerCore:
+    """Shared machinery of the per-rank and cluster-scope controllers:
+    the append-only action log, the ``on_action`` observer, and the
+    ``ust_repro:advisory`` trace-event plumbing."""
+
+    def __init__(
+        self,
+        period_s: float,
+        on_action: Optional[Callable[[AdaptiveAction], None]] = None,
+    ):
+        self.period_s = period_s
+        self.on_action = on_action
+        self.actions: List[AdaptiveAction] = []
+        self.ticks = 0
+        self._tracer = None
+        self._advise_record = None  # ust_repro:advisory recorder, when traced
+        self._lock = threading.Lock()
+
+    def attach(self, tracer) -> "_ControllerCore":
+        """Bind to a live tracing session: advisories land in its trace."""
+        self._tracer = tracer
+        rec = getattr(tracer, "tp", None)
+        self._advise_record = rec.record.get("ust_repro:advisory") if rec else None
+        return self
+
+    def _record(self, policy: str, knob: str, value: str, reason: str) -> None:
+        act = AdaptiveAction(time.time(), policy, knob, value, reason)
+        self.actions.append(act)
+        if self._advise_record is not None:
+            try:
+                self._advise_record(policy, knob, f"{value} ({reason})")
+            except Exception:
+                pass  # advisory must never break adaptation
+        if self.on_action is not None:
+            self.on_action(act)
+
+    def render_log(self) -> str:
+        """Human-readable action log (one line per action)."""
+        return "\n".join(str(a) for a in self.actions)
+
+
+class AdaptiveController(_ControllerCore):
     """Owns the policies; diffs live snapshots; rate-limits ticks.
 
     Built by the tracer from ``TraceConfig.adaptive`` (or handed to a
@@ -356,14 +415,8 @@ class AdaptiveController:
         period_s: float = 0.5,
         on_action: Optional[Callable[[AdaptiveAction], None]] = None,
     ):
+        super().__init__(period_s, on_action)
         self.policies = list(policies)
-        self.period_s = period_s
-        self.on_action = on_action
-        self.actions: List[AdaptiveAction] = []
-        self.ticks = 0
-        self._tracer = None
-        self._advise_record = None  # ust_repro:advisory recorder, when traced
-        self._lock = threading.Lock()
         self._prev_snap: Optional[Tally] = None
         self._prev_t = 0.0
         self._prev_dropped = 0
@@ -371,9 +424,7 @@ class AdaptiveController:
 
     def attach(self, tracer) -> "AdaptiveController":
         """Bind to a live tracing session (the tracer calls this at start)."""
-        self._tracer = tracer
-        rec = getattr(tracer, "tp", None)
-        self._advise_record = rec.record.get("ust_repro:advisory") if rec else None
+        super().attach(tracer)
         with self._lock:
             self._prev_snap = None
             self._prev_t = 0.0
@@ -425,20 +476,434 @@ class AdaptiveController:
                     pass  # a policy must never kill the consumer thread
             return True
 
-    def _record(self, policy: str, knob: str, value: str, reason: str) -> None:
-        act = AdaptiveAction(time.time(), policy, knob, value, reason)
-        self.actions.append(act)
-        if self._advise_record is not None:
-            try:
-                self._advise_record(policy, knob, f"{value} ({reason})")
-            except Exception:
-                pass  # advisory must never break adaptation
-        if self.on_action is not None:
-            self.on_action(act)
 
-    def render_log(self) -> str:
-        """Human-readable action log (one line per action)."""
-        return "\n".join(str(a) for a in self.actions)
+# ---------------------------------------------------------------------------
+# Cluster scope: per-rank composites → cross-rank policies
+# ---------------------------------------------------------------------------
+
+
+class ClusterContext:
+    """What a cluster policy sees on one tick: per-rank windowed metrics.
+
+    Built from two consecutive per-rank tally maps (source id → cumulative
+    tally, the ``query_ranks`` / ``MasterServer.ranks`` shape) ``window_s``
+    apart, so every metric describes *recent, per-rank* behavior.  The
+    cross-rank views (``latency_by_rank``, ``busy_by_rank``,
+    ``skew_by_rank``) are where cluster-only signals appear: a straggling
+    rank looks normal in its own window and only stands out against the
+    cluster median.
+    """
+
+    def __init__(
+        self,
+        controller: "ClusterAdaptiveController",
+        prev: Dict[str, Tally],
+        cur: Dict[str, Tally],
+        window_s: float,
+    ):
+        self._controller = controller
+        self._prev = prev
+        self._cur = cur
+        self.window_s = window_s
+        self._policy = "?"  # set by the controller per policy
+
+    # -- per-rank windowed metrics -------------------------------------------
+    def rank_ids(self) -> List[str]:
+        """Sorted source ids present in the current per-rank map."""
+        return sorted(self._cur)
+
+    def window(
+        self, source: str, provider: str, api: str, device: bool = False
+    ) -> Tuple[int, int]:
+        """(calls, total_ns) ``source`` accumulated inside the last window.
+
+        A source absent from the *previous* map is newly joined (elastic
+        scale-up, late rank): its whole cumulative history — jit compiles
+        included — is not a window, so it baselines as (0, 0) and starts
+        contributing from the next observation, exactly like the
+        controller's own first tick.  An API absent from the previous map
+        of a *known* source genuinely appeared this window and counts in
+        full.
+        """
+        cur_tally = self._cur.get(source)
+        prev_tally = self._prev.get(source)
+        if cur_tally is None or prev_tally is None:
+            return 0, 0
+        cur_t = cur_tally.device_apis if device else cur_tally.apis
+        c = cur_t.get((provider, api))
+        if c is None:
+            return 0, 0
+        prev_t = prev_tally.device_apis if device else prev_tally.apis
+        p = prev_t.get((provider, api))
+        if p is None:
+            return c.calls, c.total_ns
+        return c.calls - p.calls, c.total_ns - p.total_ns
+
+    def busy_fraction(
+        self, source: str, provider: str, api: str, device: bool = False
+    ) -> float:
+        """Share of the last window's wall time ``source`` spent in ``api``."""
+        if self.window_s <= 0:
+            return 0.0
+        _, total_ns = self.window(source, provider, api, device)
+        return total_ns / (self.window_s * 1e9)
+
+    def latency_ns(
+        self, source: str, provider: str, api: str, device: bool = False
+    ) -> float:
+        """``source``'s mean per-call latency of ``api`` over the window."""
+        calls, total_ns = self.window(source, provider, api, device)
+        return total_ns / calls if calls > 0 else 0.0
+
+    def snapshot(self, source: str) -> Optional[Tally]:
+        """``source``'s current cumulative tally (None if unknown)."""
+        return self._cur.get(source)
+
+    # -- cross-rank views ----------------------------------------------------
+    def busy_by_rank(
+        self, provider: str, api: str, device: bool = False
+    ) -> Dict[str, float]:
+        """source → windowed busy fraction, ranks active this window only."""
+        out = {}
+        for src in self._cur:
+            calls, _ = self.window(src, provider, api, device)
+            if calls > 0:
+                out[src] = self.busy_fraction(src, provider, api, device)
+        return out
+
+    def latency_by_rank(
+        self, provider: str, api: str, device: bool = False, min_calls: int = 1
+    ) -> Dict[str, float]:
+        """source → windowed mean latency, ranks with ≥ ``min_calls`` only."""
+        out = {}
+        for src in self._cur:
+            calls, total_ns = self.window(src, provider, api, device)
+            if calls >= max(1, min_calls):
+                out[src] = total_ns / calls
+        return out
+
+    def skew_by_rank(
+        self, provider: str, api: str, metric: str = "latency", device: bool = False
+    ) -> Dict[str, float]:
+        """source → ratio of its windowed metric to the cluster median.
+
+        A healthy, balanced cluster sits near 1.0 everywhere; a straggler
+        shows a ratio ≫ 1.  Empty when fewer than two ranks were active (a
+        median of one rank compares it to itself).
+        """
+        vals = (
+            self.latency_by_rank(provider, api, device)
+            if metric == "latency"
+            else self.busy_by_rank(provider, api, device)
+        )
+        if len(vals) < 2:
+            return {}
+        med = statistics.median(vals.values())
+        if med <= 0:
+            return {}
+        return {src: v / med for src, v in vals.items()}
+
+    # -- actions -------------------------------------------------------------
+    def advise(self, knob: str, value: str, reason: str = "") -> None:
+        """Record an advisory action: controller log + trace event (when a
+        session is attached)."""
+        self._controller._record(self._policy, knob, value, reason)
+
+    def flag_straggler(
+        self, source: str, provider: str, api: str, ratio: float, reason: str = ""
+    ) -> None:
+        """Report ``source`` as a straggler: advisory + workload callback.
+
+        This is the API-level evidence channel into the trainer — the
+        controller's ``on_straggler`` callback (e.g.
+        ``StragglerWatchdog.note_api_evidence``) receives *which rank*,
+        *which API*, and *how far behind the median*.
+        """
+        self.advise(f"straggler:{source}", f"{provider}:{api}={ratio:.2f}x", reason)
+        self._controller._notify_straggler(source, provider, api, ratio, reason)
+
+
+class ClusterPolicy:
+    """Base class for cluster-scope policies: look at a
+    :class:`ClusterContext`, optionally advise or flag ranks.
+
+    Same contract as :class:`AdaptivePolicy`: stateful, invoked once per
+    controller tick, must be fast, exceptions are isolated per policy.
+    """
+
+    name = "cluster-policy"
+
+    def tick(self, ctx: ClusterContext) -> None:
+        raise NotImplementedError
+
+
+class StragglerRankPolicy(ClusterPolicy):
+    """Flag ranks whose windowed metric lags the cluster median.
+
+    The cluster-scope answer to the trainer's wall-clock EWMA watchdog: the
+    EWMA knows *this* rank had slow steps; this policy knows *which* rank is
+    slow relative to the others, on *which* API, and by *how much* — the
+    evidence exascale diagnostics actually need for rank replacement.
+
+    Per tick: compute the per-rank windowed metric (``latency`` — mean ns
+    per call of the watched API — or ``busy`` fraction), take the cluster
+    median, and strike every rank at ≥ ``ratio`` × median.  A rank flagged
+    ``patience`` consecutive windows is reported once via
+    ``ctx.flag_straggler`` (advisory + ``on_straggler`` callback) and
+    re-armed when it drops back below the threshold (a ``recovered``
+    advisory marks the transition).
+    """
+
+    name = "straggler-rank"
+
+    def __init__(
+        self,
+        provider: str,
+        api: str,
+        ratio: float = 1.75,
+        metric: str = "latency",
+        patience: int = 2,
+        min_ranks: int = 2,
+        min_calls: int = 1,
+        device: bool = False,
+    ):
+        if metric not in ("latency", "busy"):
+            raise ValueError(f"metric must be 'latency' or 'busy', got {metric!r}")
+        self.provider = provider
+        self.api = api
+        self.ratio = ratio
+        self.metric = metric
+        self.patience = max(1, int(patience))
+        self.min_ranks = max(2, int(min_ranks))
+        self.min_calls = max(1, int(min_calls))
+        self.device = device
+        self._strikes: Dict[str, int] = {}
+        #: currently-flagged ranks → last observed ratio
+        self.flagged: Dict[str, float] = {}
+
+    def tick(self, ctx: ClusterContext) -> None:
+        vals = (
+            ctx.latency_by_rank(
+                self.provider, self.api, self.device, min_calls=self.min_calls
+            )
+            if self.metric == "latency"
+            else ctx.busy_by_rank(self.provider, self.api, self.device)
+        )
+        if len(vals) < self.min_ranks:
+            # no comparative window: nothing can be struck, so nothing may
+            # stay struck — "patience consecutive windows" means consecutive.
+            # Flags drop too: an idle/quorumless stretch ends the excursion,
+            # and fresh evidence must be able to re-report the rank.
+            self._strikes.clear()
+            self.flagged.clear()
+            return
+        med = statistics.median(vals.values())
+        if med <= 0:
+            self._strikes.clear()
+            self.flagged.clear()
+            return
+        for src in list(self._strikes):
+            if src not in vals:  # idle this window: the streak is broken
+                del self._strikes[src]
+        for src in list(self.flagged):
+            if src not in vals:  # idle flagged rank: excursion over, re-arm
+                del self.flagged[src]
+        for src, v in vals.items():
+            r = v / med
+            if r >= self.ratio:
+                self._strikes[src] = self._strikes.get(src, 0) + 1
+                if self._strikes[src] >= self.patience and src not in self.flagged:
+                    self.flagged[src] = r
+                    ctx.flag_straggler(
+                        src,
+                        self.provider,
+                        self.api,
+                        r,
+                        f"window {self.metric} {r:.2f}x cluster median "
+                        f"({self._strikes[src]} consecutive windows, "
+                        f"{len(vals)} ranks)",
+                    )
+            else:
+                self._strikes[src] = 0
+                if src in self.flagged:
+                    del self.flagged[src]
+                    ctx.advise(
+                        f"straggler:{src}",
+                        "recovered",
+                        f"window {self.metric} back to {r:.2f}x median",
+                    )
+
+
+class RankImbalanceAdvisoryPolicy(ClusterPolicy):
+    """Narrate cluster-wide load imbalance on a watched API.
+
+    Emits a ``high`` advisory when the max-rank-to-median spread of the
+    windowed busy fraction crosses ``high``, and a ``low`` advisory once it
+    falls back under ``low`` (hysteresis, like
+    :class:`ThresholdAdvisoryPolicy` but across ranks).  No knobs turned —
+    the trace simply gains "the cluster ran imbalanced from t₁ to t₂".
+    """
+
+    name = "rank-imbalance"
+
+    def __init__(
+        self, provider: str, api: str, high: float = 2.0, low: float = 1.25
+    ):
+        self.provider = provider
+        self.api = api
+        self.high = high
+        self.low = low
+        self.above = False
+
+    def tick(self, ctx: ClusterContext) -> None:
+        vals = ctx.busy_by_rank(self.provider, self.api)
+        if len(vals) < 2:
+            return
+        med = statistics.median(vals.values())
+        if med <= 0:
+            return
+        spread = max(vals.values()) / med
+        knob = f"imbalance:{self.provider}:{self.api}"
+        if not self.above and spread >= self.high:
+            self.above = True
+            ctx.advise(knob, "high", f"max/median busy={spread:.2f} over {len(vals)} ranks")
+        elif self.above and spread <= self.low:
+            self.above = False
+            ctx.advise(knob, "low", f"max/median busy={spread:.2f}")
+
+
+class ClusterAdaptiveController(_ControllerCore):
+    """Owns cluster policies; diffs per-rank maps; rate-limits ticks.
+
+    Reads the per-rank breakdown from a streaming master — in-process
+    (``master=MasterServer``, zero-copy via :meth:`MasterServer.ranks`) or
+    remote (``addr="host:port"`` via ``query_ranks``) — or from explicit
+    :meth:`observe` calls (tests drive synthetic rank maps with an explicit
+    clock, no sockets, no sleeps).
+
+    ``on_straggler(source, provider, api, ratio, reason)`` is the workload
+    feedback channel: wire ``trainer.straggler_callback`` here and the
+    training loop's watchdog receives API-level straggler evidence.
+    An unbound controller (no master, no addr) binds itself to the active
+    tracing session's in-process master on first tick, mirroring
+    :class:`AdaptiveController`'s construction-order independence.
+    """
+
+    def __init__(
+        self,
+        policies: Sequence[ClusterPolicy],
+        master=None,
+        addr: Optional[str] = None,
+        period_s: float = 1.0,
+        on_action: Optional[Callable[[AdaptiveAction], None]] = None,
+        on_straggler: Optional[Callable[[str, str, str, float, str], None]] = None,
+        clock: Callable[[], float] = time.monotonic,
+        timeout_s: float = 2.0,
+    ):
+        super().__init__(period_s, on_action)
+        self.policies = list(policies)
+        self.master = master
+        self.addr = addr
+        self.on_straggler = on_straggler
+        self.clock = clock
+        self.timeout_s = timeout_s
+        self._prev: Optional[Dict[str, Tally]] = None
+        self._prev_t = 0.0
+        self._attempt_t: Optional[float] = None  # last fetch attempt (any outcome)
+
+    def bind(self, master=None, addr: Optional[str] = None) -> "ClusterAdaptiveController":
+        """Point the controller at a master after construction."""
+        if master is not None:
+            self.master = master
+        if addr is not None:
+            self.addr = addr
+        return self
+
+    def _fetch(self) -> Optional[Dict[str, Tally]]:
+        if self.master is not None:
+            return self.master.ranks()
+        if self.addr is not None:
+            from .stream import ProtocolError, query_ranks
+
+            try:
+                ranks, _ = query_ranks(self.addr, timeout_s=self.timeout_s)
+                return ranks
+            except (OSError, ProtocolError, ValueError):
+                return None  # master absent: adaptation pauses, never raises
+        return None
+
+    def tick(self, force: bool = False) -> bool:
+        """Fetch the per-rank map and run one adaptation window if due.
+
+        The rate limit gates *attempts*, not successes: an unreachable
+        master (a blocking connect of up to ``timeout_s``) is retried once
+        per ``period_s``, never once per caller iteration — a consumer loop
+        or decode loop must not stall every pass on a master that is down.
+        """
+        if self.master is None and self.addr is None:
+            from .tracer import active_tracer
+
+            tr = active_tracer()
+            if tr is not None and getattr(tr, "server", None) is not None:
+                self.master = tr.server
+                if self._tracer is None:
+                    self.attach(tr)
+            else:
+                return False
+        now = self.clock()
+        with self._lock:
+            if not force and self._attempt_t is not None and (
+                now - self._attempt_t < self.period_s
+            ):
+                return False
+            self._attempt_t = now
+        ranks = self._fetch()
+        if ranks is None:
+            return False
+        return self.observe(ranks, now)
+
+    def observe(self, ranks: Dict[str, Tally], now: float) -> bool:
+        """Ingest one per-rank map observed at ``now``; True when policies
+        ran.  The first observation only baselines.  Public so tests (and
+        alternative transports) can drive the controller with explicit
+        clocks and synthetic maps."""
+        with self._lock:
+            prev, prev_t = self._prev, self._prev_t
+            self._prev, self._prev_t = ranks, now
+            if prev is None:
+                return False  # baseline window
+            self.ticks += 1
+            ctx = ClusterContext(self, prev, ranks, max(1e-9, now - prev_t))
+            for pol in self.policies:
+                ctx._policy = pol.name
+                try:
+                    pol.tick(ctx)
+                except Exception:
+                    pass  # a policy must never kill the consumer thread
+            return True
+
+    def _notify_straggler(
+        self, source: str, provider: str, api: str, ratio: float, reason: str
+    ) -> None:
+        if self.on_straggler is not None:
+            try:
+                self.on_straggler(source, provider, api, ratio, reason)
+            except Exception:
+                pass  # workload callback must never break adaptation
+
+
+def build_cluster_controller(
+    policies: Union["ClusterAdaptiveController", Sequence[ClusterPolicy], None],
+    period_s: float = 1.0,
+    **kw,
+) -> Optional[ClusterAdaptiveController]:
+    """Normalize ``TraceConfig.cluster_adaptive`` / ``ServeEngine`` input:
+    pass through a ready controller, wrap a policy list, map None to None."""
+    if policies is None:
+        return None
+    if isinstance(policies, ClusterAdaptiveController):
+        return policies
+    return ClusterAdaptiveController(list(policies), period_s=period_s, **kw)
 
 
 def build_controller(

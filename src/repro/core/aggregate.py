@@ -20,9 +20,8 @@ are the file-based transports used between processes (each rank writes
 from __future__ import annotations
 
 import dataclasses
-import math
 import os
-from typing import Callable, Iterable, List, Optional, Sequence, TypeVar
+from typing import Callable, Iterable, List, Sequence, TypeVar
 
 import msgpack
 

@@ -17,9 +17,9 @@ events", §3.3).
 from __future__ import annotations
 
 import heapq
-from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+from typing import Dict, Iterable, Iterator, List, Tuple
 
-from .api_model import DISCARD_EVENT_ID, EventType, TraceModel
+from .api_model import DISCARD_EVENT_ID, EventType
 from .ctf import StreamReader, TraceMeta, stream_files
 from .tracepoints import Tracepoints
 

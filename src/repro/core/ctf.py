@@ -23,7 +23,7 @@ from __future__ import annotations
 import json
 import os
 import struct
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 from .api_model import DISCARD_EVENT_ID, TraceModel
 from .clock import ClockInfo

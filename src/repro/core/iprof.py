@@ -13,7 +13,7 @@ Usage:
     python -m repro.core.iprof validate /tmp/t
     python -m repro.core.iprof combine  /tmp/agg_root   # §3.7 batch global master
     python -m repro.core.iprof serve --port 9000        # streaming master (§3.7+§6)
-    python -m repro.core.iprof top   127.0.0.1:9000 [--live]  # live composite view
+    python -m repro.core.iprof top   127.0.0.1:9000 [--live] [--by-rank]  # live composite view
 """
 
 from __future__ import annotations
@@ -107,6 +107,7 @@ def _serve(args) -> int:
             forward_to=args.forward_to,
             forward_period_s=args.forward_period,
             fanout=args.fanout,
+            forward_ranks=not args.no_forward_ranks,
         ).start()
     except OSError as e:
         print(f"[iprof] cannot bind {args.bind}:{args.port}: {e}", file=sys.stderr)
@@ -132,7 +133,7 @@ def _serve(args) -> int:
     return 0
 
 
-def _render_composite(args, t, meta) -> None:
+def _render_composite(args, t, meta, ranks=None) -> None:
     """One `iprof top` refresh: header line + tally table(s)."""
     if not args.no_clear:
         print("\x1b[2J\x1b[H", end="")
@@ -145,6 +146,9 @@ def _render_composite(args, t, meta) -> None:
     if args.device or t.device_apis:
         print("\n-- device --")
         print(tally_plugin.render(t, top=args.top, device=True))
+    if ranks is not None:
+        print("\n-- ranks --")
+        print(tally_plugin.render_by_rank(ranks, top=args.top, device=args.device))
 
 
 def _top(args) -> int:
@@ -152,17 +156,22 @@ def _top(args) -> int:
 
     Default mode polls with one query connection per refresh; ``--live``
     holds a single connection open and renders composites as the master
-    pushes them (the v2 ``subscribe`` frame).
+    pushes them (the v2 ``subscribe`` frame).  ``--by-rank`` appends the
+    per-rank breakdown table — the straggler/skew view.
     """
-    from .stream import ProtocolError, query_composite, subscribe_composites
+    from .aggregate import merge_tallies
+    from .stream import ProtocolError, query_composite, query_ranks, subscribe_composites
 
     try:
         if args.live:
             i = 0
             for t, meta in subscribe_composites(
-                args.addr, period_s=args.interval, timeout_s=args.timeout
+                args.addr,
+                period_s=args.interval,
+                timeout_s=args.timeout,
+                by_rank=args.by_rank,
             ):
-                _render_composite(args, t, meta)
+                _render_composite(args, t, meta, ranks=meta.get("ranks"))
                 i += 1
                 if args.iterations is not None and i >= args.iterations:
                     break
@@ -172,8 +181,15 @@ def _top(args) -> int:
             if i:
                 time.sleep(args.interval)
             i += 1
-            t, meta = query_composite(args.addr, timeout_s=args.timeout)
-            _render_composite(args, t, meta)
+            if args.by_rank:
+                ranks, meta = query_ranks(args.addr, timeout_s=args.timeout)
+                # merge_tallies folds in place: merge copies, keep ranks intact
+                copies = [tally_plugin.Tally().merge(t) for t in ranks.values()]
+                t = merge_tallies(copies)[0] if copies else tally_plugin.Tally()
+                _render_composite(args, t, meta, ranks=ranks)
+            else:
+                t, meta = query_composite(args.addr, timeout_s=args.timeout)
+                _render_composite(args, t, meta)
         return 0
     except ValueError:
         print(f"[iprof] bad master address {args.addr!r} (want host:port)", file=sys.stderr)
@@ -268,6 +284,11 @@ def build_parser() -> argparse.ArgumentParser:
     s.add_argument(
         "--duration", type=float, default=None, help="serve for N seconds then exit (default: forever)"
     )
+    s.add_argument(
+        "--no-forward-ranks",
+        action="store_true",
+        help="forward one merged composite upstream instead of the per-rank breakdown",
+    )
     s.set_defaults(fn=_serve)
 
     tp = sub.add_parser("top", help="attach to a master and render the live composite")
@@ -276,6 +297,11 @@ def build_parser() -> argparse.ArgumentParser:
         "--live",
         action="store_true",
         help="subscribe for pushed composite updates instead of polling queries",
+    )
+    tp.add_argument(
+        "--by-rank",
+        action="store_true",
+        help="append the per-rank breakdown table (straggler/skew view)",
     )
     tp.add_argument("--interval", type=float, default=1.0)
     tp.add_argument(

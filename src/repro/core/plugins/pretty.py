@@ -11,7 +11,7 @@ metadata (timestamp, pid, tid, name):
 from __future__ import annotations
 
 import io
-from typing import Iterable, Optional, TextIO
+from typing import Optional, TextIO
 
 from ..babeltrace import CTFSource, Event
 from ..clock import ClockInfo

@@ -228,6 +228,67 @@ _BACKEND_LABEL = {
 }
 
 
+def _table(header: Tuple[str, ...], body: List[Tuple[str, ...]]) -> List[str]:
+    """Aligned rows: first column left-justified, the rest right-justified."""
+    widths = [
+        max(len(h), *(len(r[i]) for r in body)) if body else len(h)
+        for i, h in enumerate(header)
+    ]
+
+    def line(cells):
+        return " | ".join(
+            c.ljust(w) if i == 0 else c.rjust(w)
+            for i, (c, w) in enumerate(zip(cells, widths))
+        )
+
+    out = [line(header), "-+-".join("-" * w for w in widths)]
+    out.extend(line(r) for r in body)
+    return out
+
+
+def render_by_rank(
+    ranks: Dict[str, Tally], top: Optional[int] = None, device: bool = False
+) -> str:
+    """Per-rank summary table (`iprof top --by-rank`, §3.7 + §6).
+
+    One row per source (rank identity): busy time, cluster share, calls,
+    mean call latency, and the API that dominates the rank's time — the
+    view where stragglers and rank skew are visible.  The merged composite
+    (:func:`render`) hides exactly this: a rank 3× slower than its peers
+    disappears into the cluster-wide sums.
+    """
+    per_rank = []
+    for src, t in ranks.items():
+        table = t.device_apis if device else t.apis
+        calls = sum(s.calls for s in table.values())
+        total = sum(s.total_ns for s in table.values())
+        if table:
+            (_, top_api), top_st = max(table.items(), key=lambda kv: kv[1].total_ns)
+        else:
+            top_api, top_st = "-", None
+        per_rank.append((src, calls, total, top_api, top_st))
+    per_rank.sort(key=lambda r: -r[2])
+    cluster_total = sum(r[2] for r in per_rank) or 1
+    if top is not None:
+        per_rank = per_rank[:top]
+    body = [
+        (
+            src,
+            fmt_ns(total),
+            f"{100.0 * total / cluster_total:.2f}%",
+            str(calls),
+            fmt_ns(total / calls if calls else 0),
+            top_api,
+            fmt_ns(top_st.avg_ns) if top_st is not None else "-",
+        )
+        for src, calls, total, top_api, top_st in per_rank
+    ]
+    header = ("Rank", "Time", "Time(%)", "Calls", "Average", "Top API", "Top API Avg")
+    out = [f"{len(ranks)} ranks"]
+    out.extend(_table(header, body))
+    return "\n".join(out)
+
+
 def render(t: Tally, top: Optional[int] = None, device: bool = False) -> str:
     table = t.device_apis if device else t.apis
     backends = sorted({_BACKEND_LABEL.get(p, p.upper()) for p, _ in table})
@@ -256,11 +317,8 @@ def render(t: Tally, top: Optional[int] = None, device: bool = False) -> str:
         )
         for (prov, api), s in rows
     ]
-    widths = [max(len(h), *(len(r[i]) for r in body)) if body else len(h) for i, h in enumerate(header)]
-    def line(cells):
-        return " | ".join(c.ljust(w) if i == 0 else c.rjust(w) for i, (c, w) in enumerate(zip(cells, widths)))
-    out = [banner, line(header), "-+-".join("-" * w for w in widths)]
-    out.extend(line(r) for r in body)
+    out = [banner]
+    out.extend(_table(header, body))
     if t.discarded:
         out.append(f"[warning] {t.discarded} events discarded (ring-buffer pressure)")
     return "\n".join(out)

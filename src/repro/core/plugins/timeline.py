@@ -16,9 +16,9 @@ rich context is preserved all the way into the visualization.
 from __future__ import annotations
 
 import json
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, List
 
-from ..babeltrace import CTFSource, Event, Interval, IntervalFilter
+from ..babeltrace import CTFSource, IntervalFilter
 
 _DEVICE_TID_BASE = 1 << 20  # pseudo-tids for device rows
 

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Set
+from typing import Dict, List
 
 from ..babeltrace import CTFSource, IntervalFilter
 from ..metababel import Dispatcher

@@ -100,7 +100,6 @@ class RingBuffer:
         if end <= self.capacity:
             out = bytes(self._buf[lo:end])
         else:
-            k = self.capacity - lo
             out = bytes(self._buf[lo:]) + bytes(self._buf[: end - self.capacity])
         self.tail = h  # release
         return out

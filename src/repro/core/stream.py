@@ -23,14 +23,19 @@ always-current version of ``aggregate_tree``:
     result once every rank has pushed its final state (tracer stop pushes a
     final frame unconditionally).
   * Masters compose into a configurable-fanout tree: a master constructed
-    with ``forward_to=`` periodically pushes its own composite upstream,
-    exactly the paper's "each local master sends its aggregate to the global
-    master" — but live, while the ranks still run.  Composites forward as
-    deltas too.
+    with ``forward_to=`` periodically pushes its state upstream, exactly the
+    paper's "each local master sends its aggregate to the global master" —
+    but live, while the ranks still run.  Forwarded state is delta-encoded
+    too, and (by default) **per rank**: every origin source rides its own
+    multiplexed frame chain, so the per-rank breakdown survives each hop of
+    the tree instead of collapsing into an anonymous composite.
   * ``iprof serve`` runs a master; ``iprof top`` attaches to any master and
     renders the refreshing composite (``--live`` subscribes for pushed
-    updates instead of polling); :func:`query_composite` /
-    :func:`subscribe_composites` are the programmatic clients.
+    updates instead of polling, ``--by-rank`` adds the per-rank table);
+    :func:`query_composite` / :func:`query_ranks` /
+    :func:`subscribe_composites` are the programmatic clients.  Cluster-
+    scope adaptive policies (``core/adaptive.py``) read the per-rank map to
+    detect stragglers and rank skew the merged composite hides.
 
 Transport is deliberately tiny: length-prefixed msgpack frames (4-byte
 big-endian length + body), one dict message per frame, ``type`` key selects
@@ -140,6 +145,18 @@ def default_source(rank: int = 0) -> str:
 # ---------------------------------------------------------------------------
 
 
+class _SourceState:
+    """Per-source seq/delta bookkeeping on the *current* connection."""
+
+    __slots__ = ("seq", "last_sent", "sends_since_full", "force_full")
+
+    def __init__(self):
+        self.seq = 0
+        self.last_sent: Optional[Tally] = None
+        self.sends_since_full = 0
+        self.force_full = False
+
+
 class SnapshotStreamer:
     """Pushes cumulative tally state to a master; never blocks tracing.
 
@@ -147,14 +164,20 @@ class SnapshotStreamer:
     master's forwarder loop); ``push(tally)`` always sends — the tracer's
     stop path relies on that for the final, authoritative state.
 
+    One streamer, one connection, **many sources**: every frame names its
+    ``source``, so a local master can forward its whole per-rank breakdown
+    over a single upstream connection (``push(tally, source=rank_id)`` per
+    rank) — each source keeps an independent seq chain and delta base.
+    Plain leaf ranks never pass ``source`` and behave exactly as before.
+
     With ``delta=True`` (the default) the streamer tracks the last state
-    delivered on the current connection and ships only changed entries once
-    the master's ``hello_ack`` confirms a v2 peer.  Every ``resync_every``-th
-    push — and the first push of every connection — is a full snapshot, so a
-    master can always rebuild from the wire alone.  Counters: ``pushed`` /
-    ``dropped`` (frames), ``full_frames`` / ``delta_frames`` (mix),
-    ``bytes_sent`` (on-wire payload), ``resyncs`` (master-requested
-    fallbacks to full).
+    delivered per source on the current connection and ships only changed
+    entries once the master's ``hello_ack`` confirms a v2 peer.  Every
+    ``resync_every``-th push — and the first push of every connection — is a
+    full snapshot, so a master can always rebuild from the wire alone.
+    Counters: ``pushed`` / ``dropped`` / ``skipped`` (frames),
+    ``full_frames`` / ``delta_frames`` (mix), ``bytes_sent`` (on-wire
+    payload), ``resyncs`` (master-requested fallbacks to full).
     """
 
     def __init__(
@@ -174,19 +197,17 @@ class SnapshotStreamer:
         self.resync_every = max(1, int(resync_every))
         self.pushed = 0
         self.dropped = 0
+        self.skipped = 0
         self.full_frames = 0
         self.delta_frames = 0
         self.bytes_sent = 0
         self.resyncs = 0
-        self._seq = 0
         self._sock: Optional[socket.socket] = None
         self._next_retry = 0.0
         self._lock = threading.Lock()
-        #: state as of the last successful send on the *current* connection
-        self._last_sent: Optional[Tally] = None
-        self._sends_since_full = 0
+        #: per-source state on the *current* connection (reset on reconnect)
+        self._src: Dict[str, _SourceState] = {}
         self._peer_version: Optional[int] = None  # learned from hello_ack
-        self._force_full = False
 
     @property
     def peer_version(self) -> Optional[int]:
@@ -204,14 +225,25 @@ class SnapshotStreamer:
             if self._sock is not None:
                 self._drain_control(self._sock)
 
-    def push(self, tally: Union[Tally, dict]) -> bool:
+    def push(
+        self,
+        tally: Union[Tally, dict],
+        source: Optional[str] = None,
+        skip_unchanged: bool = False,
+    ) -> bool:
         """Deliver the current cumulative ``tally``; returns delivery success.
 
         Chooses delta vs full per the protocol contract, never blocks beyond
         ``timeout_s``, and on any failure drops the connection (the next
-        successful push is a full snapshot again).
+        successful push is a full snapshot again).  ``source`` defaults to
+        this streamer's own identity; forwarders pass each origin rank's id
+        to carry the per-rank breakdown upstream.  With ``skip_unchanged``
+        a delta-eligible push whose state did not change since the last
+        delivery is elided (counted in ``skipped``) — used by per-rank
+        forwarding so idle ranks cost no wire traffic.
         """
         cur = tally if isinstance(tally, Tally) else Tally.from_obj(tally)
+        src = source if source is not None else self.source
         with self._lock:
             sock = self._ensure_conn()
             if sock is None:
@@ -220,7 +252,11 @@ class SnapshotStreamer:
             if not self._drain_control(sock):
                 self.dropped += 1
                 return False
-            msg = self._encode(cur)
+            st = self._src.setdefault(src, _SourceState())
+            msg = self._encode(st, src, cur, skip_unchanged)
+            if msg is None:  # delta-eligible and nothing changed: elide
+                self.skipped += 1
+                return True
             frame = pack_frame(msg)
             try:
                 sock.sendall(frame)
@@ -228,50 +264,65 @@ class SnapshotStreamer:
                 self._drop_conn()
                 self.dropped += 1
                 return False
-            self._seq += 1
+            st.seq += 1
             self.pushed += 1
             self.bytes_sent += len(frame)
             # keep a private copy: the caller may keep mutating its tally
-            self._last_sent = Tally().merge(cur)
+            st.last_sent = Tally().merge(cur)
             if msg["type"] == "delta":
                 self.delta_frames += 1
-                self._sends_since_full += 1
+                st.sends_since_full += 1
             else:
                 self.full_frames += 1
-                self._sends_since_full = 0
-                self._force_full = False
+                st.sends_since_full = 0
+                st.force_full = False
             return True
 
-    def _encode(self, cur: Tally) -> dict:
-        """Build the frame for ``cur``: delta when the contract allows it."""
+    def _encode(
+        self, st: _SourceState, source: str, cur: Tally, skip_unchanged: bool = False
+    ) -> Optional[dict]:
+        """Build the frame for ``cur``: delta when the contract allows it.
+
+        Returns None when ``skip_unchanged`` is set and a delta-eligible
+        state shows no change since the last delivery.
+        """
         use_delta = (
             self.delta
-            and self._last_sent is not None
-            and not self._force_full
+            and st.last_sent is not None
+            and not st.force_full
             and self._peer_version is not None
             and self._peer_version >= DELTA_MIN_VERSION
-            and self._sends_since_full < self.resync_every
+            and st.sends_since_full < self.resync_every
         )
         if use_delta:
             try:
-                d = cur.delta_to(self._last_sent)
+                d = cur.delta_to(st.last_sent)
             except ValueError:
                 use_delta = False  # non-monotone state: full resync
         if use_delta:
+            if skip_unchanged and not (
+                d["apis"]
+                or d["device_apis"]
+                or d["hostnames"]
+                or d["processes"]
+                or d["threads"]
+                or d["discarded"] != st.last_sent.discarded
+            ):
+                return None
             return {
                 "type": "delta",
                 "v": PROTOCOL_VERSION,
-                "source": self.source,
-                "seq": self._seq,
-                "base_seq": self._seq - 1,
+                "source": source,
+                "seq": st.seq,
+                "base_seq": st.seq - 1,
                 "ts": time.time(),
                 "delta": d,
             }
         return {
             "type": "snapshot",
             "v": PROTOCOL_VERSION,
-            "source": self.source,
-            "seq": self._seq,
+            "source": source,
+            "seq": st.seq,
             "ts": time.time(),
             "tally": cur.to_obj(),
         }
@@ -298,7 +349,14 @@ class SnapshotStreamer:
             if kind == "hello_ack":
                 self._peer_version = int(msg.get("v", 1))
             elif kind == "resync":
-                self._force_full = True
+                # scoped to one source when the master names it; a v2.0
+                # master (no source field) resyncs every chain
+                src = msg.get("source")
+                if src is None:
+                    for st in self._src.values():
+                        st.force_full = True
+                else:
+                    self._src.setdefault(str(src), _SourceState()).force_full = True
                 self.resyncs += 1
             # anything else from the master is ignorable here
 
@@ -320,10 +378,8 @@ class SnapshotStreamer:
             return None
         self._sock = s
         # connection-local delta state starts fresh: first push is full
-        self._last_sent = None
-        self._sends_since_full = 0
+        self._src = {}
         self._peer_version = None
-        self._force_full = False
         return s
 
     def _drop_conn(self) -> None:
@@ -333,10 +389,8 @@ class SnapshotStreamer:
             except OSError:
                 pass
             self._sock = None
-        self._last_sent = None
+        self._src = {}
         self._peer_version = None
-        self._force_full = False
-        self._sends_since_full = 0
 
     def close(self) -> None:
         """Send ``bye`` (best-effort) and drop the connection."""
@@ -354,6 +408,21 @@ class SnapshotStreamer:
 # ---------------------------------------------------------------------------
 
 
+class _SourceEntry:
+    """One source's stored state: connection generation, seq, tally, receipt
+    time.  ``gen`` scopes the seq chain to the connection that produced it —
+    a reconnecting sender restarts seq at 0 on a new gen, and its full
+    snapshot must not be dropped as stale against the old chain."""
+
+    __slots__ = ("gen", "seq", "tally", "ts")
+
+    def __init__(self, gen: Optional[int], seq: int, tally: Tally, ts: float):
+        self.gen = gen
+        self.seq = seq
+        self.tally = tally
+        self.ts = ts
+
+
 class MasterServer:
     """Streaming master: latest-state-per-source store + monoid merge.
 
@@ -364,12 +433,17 @@ class MasterServer:
     * a delta whose ``base_seq`` doesn't match the stored state is dropped
       and answered with ``resync`` so the sender falls back to a full
       snapshot — the composite is never built from a mis-based delta;
-    * any client may send ``query`` and gets the current composite back, or
-      ``subscribe`` to have composites pushed periodically;
+    * any client may send ``query`` and gets the current composite back,
+      ``query_ranks`` for the per-source breakdown, or ``subscribe``
+      (optionally ``by_rank``) to have composites pushed periodically;
     * with ``forward_to=`` set this is a *local* master: a forwarder thread
-      periodically pushes the composite upstream (delta-encoded like any
-      other stream), making the whole arrangement the live fanout tree of
-      §3.7.
+      periodically pushes state upstream (delta-encoded like any other
+      stream), making the whole arrangement the live fanout tree of §3.7.
+      With ``forward_ranks`` (the default) it forwards each origin source's
+      tally on its own multiplexed frame chain, so the per-rank breakdown —
+      the signal cluster-scope policies need — survives every hop of the
+      tree; with ``forward_ranks=False`` it collapses to one composite
+      source upstream (the v2.0 behavior: cheaper at the root, anonymous).
     """
 
     def __init__(
@@ -382,6 +456,7 @@ class MasterServer:
         source: Optional[str] = None,
         forward_delta: bool = True,
         forward_resync_every: int = 32,
+        forward_ranks: bool = True,
     ):
         self.host = host
         self.port = port  # rebound to the real port at start()
@@ -390,9 +465,15 @@ class MasterServer:
         self.forward_period_s = forward_period_s
         self.forward_delta = forward_delta
         self.forward_resync_every = forward_resync_every
+        self.forward_ranks = forward_ranks
         self.source = source or f"master:{socket.gethostname()}:{os.getpid()}"
-        #: source → (seq, cumulative tally, wall-clock receipt time)
-        self._latest: Dict[str, Tuple[int, Tally, float]] = {}
+        #: source → stored state (gen, seq, cumulative tally, receipt time)
+        self._latest: Dict[str, _SourceEntry] = {}
+        #: sources updated since the last successful flush — per-rank
+        #: forwarding copies and delta-encodes only these, so an idle rank
+        #: costs nothing per forward period, not O(tally width)
+        self._dirty_srcs: set = set()
+        self._conn_gen = 0  # connection-generation counter (gen scope)
         self._lock = threading.Lock()
         self._dirty = False
         self._version = 0  # bumped per state update; gates subscription pushes
@@ -478,44 +559,60 @@ class MasterServer:
 
     # -- state ---------------------------------------------------------------
     def submit(
-        self, source: str, tally: Union[Tally, dict], seq: Optional[int] = None
+        self,
+        source: str,
+        tally: Union[Tally, dict],
+        seq: Optional[int] = None,
+        gen: Optional[int] = None,
     ) -> None:
         """Ingest a full cumulative snapshot (socket handlers and the
         in-process tracer both land here). Out-of-order frames
-        (seq < stored) are stale duplicates of state we already supersede —
-        dropped."""
+        (seq < stored, same connection generation) are stale duplicates of
+        state we already supersede — dropped.  A frame from a *different*
+        generation (reconnect, new session) always replaces: its snapshot is
+        cumulative truth and its seq chain starts over."""
         if not isinstance(tally, Tally):
             tally = Tally.from_obj(tally)
         with self._lock:
             prev = self._latest.get(source)
-            if prev is not None and seq is not None and seq < prev[0]:
+            if prev is not None and seq is not None and gen == prev.gen and seq < prev.seq:
                 return
-            nseq = seq if seq is not None else (prev[0] + 1 if prev else 0)
-            self._latest[source] = (nseq, tally, time.time())
+            nseq = seq if seq is not None else (prev.seq + 1 if prev is not None else 0)
+            self._latest[source] = _SourceEntry(gen, nseq, tally, time.time())
             self.snapshots += 1
             self.full_snapshots += 1
             self._dirty = True
+            self._dirty_srcs.add(source)
             self._version += 1
 
-    def submit_delta(self, source: str, delta: dict, seq: int, base_seq: int) -> bool:
+    def submit_delta(
+        self,
+        source: str,
+        delta: dict,
+        seq: int,
+        base_seq: int,
+        gen: Optional[int] = None,
+    ) -> bool:
         """Ingest a delta frame; True if applied.
 
         Applies only when the stored state for ``source`` is exactly
-        ``base_seq`` — anything else (unknown source after a master restart,
-        a duplicate, an out-of-order frame, a reset seq) is rejected so the
-        stored cumulative state is never corrupted; the socket handler then
-        answers ``resync``.
+        ``base_seq`` on the same connection generation — anything else
+        (unknown source after a master restart, a duplicate, an out-of-order
+        frame, a reset seq, a different connection's chain) is rejected so
+        the stored cumulative state is never corrupted; the socket handler
+        then answers ``resync``.
         """
         with self._lock:
             prev = self._latest.get(source)
-            if prev is None or prev[0] != base_seq:
+            if prev is None or prev.gen != gen or prev.seq != base_seq:
                 return False
-            _, base, _ = prev
-            base.apply_delta(delta)
-            self._latest[source] = (seq, base, time.time())
+            prev.tally.apply_delta(delta)
+            prev.seq = seq
+            prev.ts = time.time()
             self.snapshots += 1
             self.deltas += 1
             self._dirty = True
+            self._dirty_srcs.add(source)
             self._version += 1
             return True
 
@@ -524,25 +621,32 @@ class MasterServer:
             prev = self._latest.get(source)
             if prev is not None:
                 # keep the last tally but accept any future seq from it
-                self._latest[source] = (-1, prev[1], prev[2])
+                prev.seq = -1
 
     def composite(self) -> Tally:
         """Tree-merge the latest state of every source (fanout-ary, like the
         offline ``aggregate_tree``). Sources' stored tallies are never
         mutated — merging runs on defensive copies."""
         with self._lock:
-            copies = [Tally().merge(t) for (_, t, _) in self._latest.values()]
+            copies = [Tally().merge(e.tally) for e in self._latest.values()]
         if not copies:
             return Tally()
         comp, _ = merge_tallies(copies, fanout=self.fanout)
         return comp
+
+    def ranks(self) -> Dict[str, Tally]:
+        """Per-source breakdown: source id → defensive copy of its latest
+        cumulative tally.  The data ``query_ranks`` serves and cluster-scope
+        policies consume; merging all values reproduces :meth:`composite`."""
+        with self._lock:
+            return {src: Tally().merge(e.tally) for src, e in self._latest.items()}
 
     def stats(self) -> dict:
         """Counters for monitoring: sources, frame/snapshot/delta/query
         totals, resyncs sent, last-update wall clock, forwarding role."""
         with self._lock:
             sources = len(self._latest)
-            updated = max((ts for (_, _, ts) in self._latest.values()), default=0.0)
+            updated = max((e.ts for e in self._latest.values()), default=0.0)
         return {
             "sources": sources,
             "frames": self.frames,
@@ -556,19 +660,41 @@ class MasterServer:
         }
 
     def flush(self, force: bool = False) -> bool:
-        """Push the composite upstream now (local masters only)."""
+        """Push state upstream now (local masters only): the per-rank
+        breakdown when ``forward_ranks``, else the merged composite."""
         if self._forwarder is None:
             return False
         with self._lock:
             if not self._latest or (not self._dirty and not force):
                 return False
             self._dirty = False
-        ok = self._forwarder.push(self.composite())
-        if not ok:
-            # parent unreachable: keep the trigger armed so the composite is
-            # re-forwarded once the parent comes back, not lost forever
+        if self.forward_ranks:
             with self._lock:
-                self._dirty = True
+                # only updated sources are copied and delta-encoded; a
+                # forced (stop-path) flush re-sends every source in full
+                srcs = list(self._latest) if force else list(self._dirty_srcs)
+                self._dirty_srcs.clear()
+                copies = {
+                    src: Tally().merge(self._latest[src].tally)
+                    for src in srcs
+                    if src in self._latest
+                }
+            ok = True
+            for src, tally in copies.items():
+                ok = self._forwarder.push(
+                    tally, source=src, skip_unchanged=not force
+                ) and ok
+            if not ok:
+                with self._lock:
+                    # parent unreachable: re-arm the failed sources so their
+                    # state is re-forwarded once the parent comes back
+                    self._dirty = True
+                    self._dirty_srcs.update(copies)
+        else:
+            ok = self._forwarder.push(self.composite())
+            if not ok:
+                with self._lock:
+                    self._dirty = True
         return ok
 
     # -- threads -------------------------------------------------------------
@@ -589,6 +715,9 @@ class MasterServer:
             t.start()
 
     def _client_loop(self, conn: socket.socket) -> None:
+        with self._lock:
+            self._conn_gen += 1
+            gen = self._conn_gen  # scopes this connection's seq chains
         try:
             while not self._stop_evt.is_set():
                 try:
@@ -601,21 +730,30 @@ class MasterServer:
                 kind = msg.get("type")
                 if kind == "snapshot":
                     self.submit(
-                        str(msg.get("source", "?")), msg["tally"], msg.get("seq")
+                        str(msg.get("source", "?")), msg["tally"], msg.get("seq"), gen
                     )
                 elif kind == "delta":
+                    source = str(msg.get("source", "?"))
                     ok = self.submit_delta(
-                        str(msg.get("source", "?")),
+                        source,
                         msg["delta"],
                         int(msg.get("seq", -1)),
                         int(msg.get("base_seq", -2)),
+                        gen,
                     )
                     if not ok:
                         # mis-based delta: ask the sender for a full snapshot
+                        # (scoped to the one source whose chain diverged)
                         self.resyncs_sent += 1
                         try:
                             conn.sendall(
-                                pack_frame({"type": "resync", "v": PROTOCOL_VERSION})
+                                pack_frame(
+                                    {
+                                        "type": "resync",
+                                        "v": PROTOCOL_VERSION,
+                                        "source": source,
+                                    }
+                                )
                             )
                         except OSError:
                             break
@@ -637,13 +775,20 @@ class MasterServer:
                         conn.sendall(pack_frame(self._composite_msg()))
                     except OSError:
                         break
+                elif kind == "query_ranks":
+                    self.queries += 1
+                    try:
+                        conn.sendall(pack_frame(self._ranks_msg()))
+                    except OSError:
+                        break
                 elif kind == "subscribe":
                     # push composites on this connection until it dies; the
                     # pusher owns the socket's send side from here on
                     period = float(msg.get("period_s", 1.0))
+                    by_rank = bool(msg.get("by_rank", False))
                     t = threading.Thread(
                         target=self._subscription_loop,
-                        args=(conn, period),
+                        args=(conn, period, by_rank),
                         name="thapi-master-subpush",
                         daemon=True,
                     )
@@ -672,14 +817,17 @@ class MasterServer:
                 if cur in self._threads:
                     self._threads.remove(cur)
 
-    def _subscription_loop(self, conn: socket.socket, period_s: float) -> None:
+    def _subscription_loop(
+        self, conn: socket.socket, period_s: float, by_rank: bool = False
+    ) -> None:
         """Push ``composite`` frames to a subscribed client every period.
 
         Change-gated: the full composite is serialized only when state
         actually updated since the last push; idle periods send a tiny
         tally-less heartbeat (``unchanged: true``) instead — a 2000-row
         composite is not re-shipped twice a second to a viewer of an idle
-        master.  The first push is always full.
+        master.  The first push is always full.  With ``by_rank`` every
+        full push also carries the per-source breakdown.
         """
         last_version = None
         try:
@@ -687,7 +835,7 @@ class MasterServer:
                 with self._lock:
                     version = self._version
                 if version != last_version:
-                    msg = self._composite_msg()
+                    msg = self._composite_msg(by_rank=by_rank)
                     last_version = version
                 else:
                     st = self.stats()
@@ -716,13 +864,49 @@ class MasterServer:
         while not self._stop_evt.wait(self.forward_period_s):
             self.flush()
 
-    def _composite_msg(self) -> dict:
-        comp = self.composite()
+    def _composite_msg(self, by_rank: bool = False) -> dict:
+        # one snapshot under one lock: a frame's composite and per-rank map
+        # must describe the same instant, or a subscriber cross-checking
+        # invariant 7 (per-rank sums == composite) sees spurious mismatches
+        # whenever a submit races the push
+        with self._lock:
+            snap = {src: Tally().merge(e.tally) for src, e in self._latest.items()}
+        if snap:
+            # merge_tallies folds in place: feed it copies when the per-rank
+            # map must survive intact for the by_rank payload
+            mergeable = (
+                [Tally().merge(t) for t in snap.values()]
+                if by_rank
+                else list(snap.values())
+            )
+            comp, _ = merge_tallies(mergeable, fanout=self.fanout)
+        else:
+            comp = Tally()
         st = self.stats()
-        return {
+        msg = {
             "type": "composite",
             "v": PROTOCOL_VERSION,
             "tally": comp.to_obj(),
+            "sources": st["sources"],
+            "snapshots": st["snapshots"],
+            "deltas": st["deltas"],
+            "updated": st["updated"],
+        }
+        if by_rank:
+            msg["ranks"] = {src: t.to_obj() for src, t in snap.items()}
+        return msg
+
+    def _ranks_msg(self) -> dict:
+        """``query_ranks`` reply: the per-source tally map + receipt times."""
+        with self._lock:
+            ranks = {src: e.tally.to_obj() for src, e in self._latest.items()}
+            stamps = {src: e.ts for src, e in self._latest.items()}
+        st = self.stats()
+        return {
+            "type": "ranks",
+            "v": PROTOCOL_VERSION,
+            "ranks": ranks,
+            "ts": stamps,
             "sources": st["sources"],
             "snapshots": st["snapshots"],
             "deltas": st["deltas"],
@@ -756,10 +940,35 @@ def query_composite(
     return _composite_reply(msg)
 
 
+def query_ranks(
+    addr: Union[str, Tuple[str, int]], timeout_s: float = 3.0
+) -> Tuple[Dict[str, Tally], dict]:
+    """One-shot request: fetch a master's per-rank breakdown.
+
+    Returns ``(ranks, meta)`` where ``ranks`` maps source id (the rank
+    identity, ``host:pid:rankN``) → its latest cumulative tally, and
+    ``meta`` carries the composite meta keys plus ``ts`` (source → receipt
+    wall clock).  Merging every value of ``ranks`` reproduces the
+    ``query_composite`` tally exactly — per-rank sums equal the composite,
+    API for API.
+    """
+    host, port = parse_addr(addr)
+    with socket.create_connection((host, port), timeout=timeout_s) as s:
+        s.settimeout(timeout_s)
+        s.sendall(pack_frame({"type": "query_ranks", "v": PROTOCOL_VERSION}))
+        msg = recv_frame(s)
+    if not msg or msg.get("type") != "ranks":
+        raise ProtocolError(f"expected ranks reply, got {msg!r}")
+    meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
+    meta["ts"] = msg.get("ts", {})
+    return {src: Tally.from_obj(o) for src, o in msg["ranks"].items()}, meta
+
+
 def subscribe_composites(
     addr: Union[str, Tuple[str, int]],
     period_s: float = 1.0,
     timeout_s: float = 10.0,
+    by_rank: bool = False,
 ) -> Iterator[Tuple[Tally, dict]]:
     """Subscribe to a master: yields (composite, meta) as the master pushes.
 
@@ -772,16 +981,26 @@ def subscribe_composites(
     re-serializes the composite when state changed); the generator then
     re-yields the previous tally with ``meta["unchanged"] = True``, so
     consumers always see a renderable composite per period.
+
+    With ``by_rank`` every full push also carries the per-source breakdown,
+    surfaced as ``meta["ranks"]`` (source → Tally); heartbeats re-yield the
+    cached breakdown like the cached composite.
     """
     host, port = parse_addr(addr)
     with socket.create_connection((host, port), timeout=timeout_s) as s:
         s.settimeout(max(timeout_s, 2 * period_s))
         s.sendall(
             pack_frame(
-                {"type": "subscribe", "v": PROTOCOL_VERSION, "period_s": period_s}
+                {
+                    "type": "subscribe",
+                    "v": PROTOCOL_VERSION,
+                    "period_s": period_s,
+                    "by_rank": by_rank,
+                }
             )
         )
         last_tally: Optional[Tally] = None
+        last_ranks: Optional[Dict[str, Tally]] = None
         while True:
             msg = recv_frame(s)
             if msg is None:  # master stopped: end of stream
@@ -791,10 +1010,16 @@ def subscribe_composites(
             meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
             if "tally" in msg:
                 last_tally = Tally.from_obj(msg["tally"])
+                if "ranks" in msg:
+                    last_ranks = {
+                        src: Tally.from_obj(o) for src, o in msg["ranks"].items()
+                    }
             elif last_tally is None:
                 raise ProtocolError("unchanged heartbeat before any composite")
             else:
                 meta["unchanged"] = True
+            if by_rank and last_ranks is not None:
+                meta["ranks"] = last_ranks
             yield last_tally, meta
 
 

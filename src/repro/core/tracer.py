@@ -30,7 +30,7 @@ import socket
 import sys
 import threading
 import time
-from typing import Dict, Iterable, Optional, Sequence, Set, Tuple
+from typing import Dict, Optional, Sequence, Set, Tuple
 
 from . import telemetry as _telemetry
 from .api_model import TraceModel, builtin_trace_model
@@ -86,10 +86,26 @@ class TraceConfig:
     adaptive: Optional[Sequence] = None
     #: adaptation window: how often the controller diffs live snapshots
     adaptive_period_s: float = 0.5
+    #: cluster-scope adaptive control: ClusterPolicy list (or a ready
+    #: ClusterAdaptiveController) fed from the in-process master's per-rank
+    #: map and ticked from the consumer thread; requires ``serve_port``
+    #: (the master IS the per-rank data source). See core/adaptive.py.
+    cluster_adaptive: Optional[Sequence] = None
+    #: cluster adaptation window: how often per-rank maps are diffed
+    cluster_period_s: float = 1.0
+    #: forward per-rank breakdowns (not collapsed composites) when this
+    #: process's in-process master forwards upstream — keeps rank identity
+    #: visible at every level of the aggregation tree
+    stream_ranks: bool = True
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.cluster_adaptive is not None and self.serve_port is None:
+            raise ValueError(
+                "cluster_adaptive requires serve_port: the in-process master "
+                "is the per-rank data source cluster policies read"
+            )
         if (
             self.stream_to is not None
             or self.serve_port is not None
@@ -179,6 +195,7 @@ class Tracer:
         self.streamer = None  # SnapshotStreamer when cfg.stream_to
         self.server = None  # MasterServer when cfg.serve_port
         self.adaptive = None  # AdaptiveController when cfg.adaptive
+        self.cluster = None  # ClusterAdaptiveController when cfg.cluster_adaptive
         self._stream_source = ""
         self._stream_next = 0.0
         #: rank selected for tracing? (§3.2 selective rank tracing)
@@ -233,6 +250,7 @@ class Tracer:
                     fanout=self.cfg.stream_fanout,
                     forward_delta=self.cfg.stream_delta,
                     forward_resync_every=self.cfg.stream_resync_every,
+                    forward_ranks=self.cfg.stream_ranks,
                 ).start()
             else:
                 self.streamer = SnapshotStreamer(
@@ -248,6 +266,14 @@ class Tracer:
                 self.cfg.adaptive, period_s=self.cfg.adaptive_period_s
             )
             self.adaptive.attach(self)
+        if self.cfg.cluster_adaptive is not None:
+            from .adaptive import build_cluster_controller
+
+            self.cluster = build_cluster_controller(
+                self.cfg.cluster_adaptive, period_s=self.cfg.cluster_period_s
+            )
+            self.cluster.bind(master=self.server)
+            self.cluster.attach(self)  # advisories land in this rank's trace
         self._stop_evt.clear()
         self._consumer = threading.Thread(
             target=self._consumer_loop, name="thapi-consumer", daemon=True
@@ -356,6 +382,8 @@ class Tracer:
             self._stream_tick()
             if self.adaptive is not None:
                 self.adaptive.tick()
+            if self.cluster is not None:
+                self.cluster.tick()
 
     def _stream_tick(self, final: bool = False) -> None:
         """Push the live tally to the streaming service (§3.7+§6).

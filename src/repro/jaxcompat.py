@@ -9,7 +9,7 @@ helpers so the rest of the code can write the modern form once.
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 from jax.sharding import AbstractMesh, Mesh

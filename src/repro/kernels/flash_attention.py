@@ -76,9 +76,9 @@ def _kernel(
 
     @pl.when(ki == nk - 1)
     def _finish():
-        l = l_scr[...]
+        lsum = l_scr[...]
         # fully-masked rows (can't happen for causal q_offset>=0, but keep safe)
-        denom = jnp.where(l == 0.0, 1.0, l)
+        denom = jnp.where(lsum == 0.0, 1.0, lsum)
         o_ref[0, :, 0, :] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
 
 

@@ -13,7 +13,6 @@ bytes so traced runs attribute device time to the hot spots.
 from __future__ import annotations
 
 import os
-from functools import partial
 from typing import Optional
 
 import jax

@@ -15,7 +15,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, r_ref, i_ref, lam_ref, h0_ref, y_ref, hN_ref, *, seq: int, c: float):

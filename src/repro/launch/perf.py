@@ -22,7 +22,7 @@ import argparse
 import dataclasses
 import json
 import sys
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 from repro.configs import get_config
 from repro.launch.dryrun import run_cell

@@ -10,7 +10,6 @@ runs the reduced config on the local mesh end-to-end.
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 
 import jax

@@ -8,7 +8,6 @@ builds one of these with the exact published numbers; smoke tests build
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 DTYPES = ("float32", "bfloat16")

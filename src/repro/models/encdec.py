@@ -15,8 +15,6 @@ largest assigned shape (DESIGN.md §4).
 
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -16,7 +16,7 @@ long_500k.
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +33,6 @@ from .layers import (
     cache_update,
     embed,
     embed_specs,
-    kv_cache_specs,
     mlp_specs,
     norm_spec,
     qkv,

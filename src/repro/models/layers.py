@@ -8,7 +8,7 @@ decode-with-cache masking in one code path — the mask offset handles the
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -194,7 +194,7 @@ def attend_chunked(
     qpos = jnp.arange(S)[:, None] + (T - S)
 
     def body(carry, blk):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kc, vc, j0 = blk
         s = jnp.einsum("bskgd,btkd->bkgst", qg, kc).astype(jnp.float32) * scale
         kpos = j0 + jnp.arange(chunk)[None, :]
@@ -207,18 +207,18 @@ def attend_chunked(
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
-        l = l * alpha + jnp.sum(p, axis=-1)
+        lsum = lsum * alpha + jnp.sum(p, axis=-1)
         acc = acc * alpha[..., None] + jnp.einsum(
             "bkgst,btkd->bkgsd", p.astype(q.dtype), vc
         ).astype(jnp.float32)
-        return (m_new, l, acc), None
+        return (m_new, lsum, acc), None
 
     m0 = jnp.full((B, Kv, G, S), -1e30, jnp.float32)
     l0 = jnp.zeros((B, Kv, G, S), jnp.float32)
     a0 = jnp.zeros((B, Kv, G, S, hd), jnp.float32)
     offs = jnp.arange(nb) * chunk
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, offs))
-    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    (m, lsum, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, offs))
+    out = (acc / jnp.maximum(lsum, 1e-30)[..., None]).astype(q.dtype)
     return jnp.moveaxis(out, 3, 1).reshape(B, S, H, hd)
 
 

@@ -14,7 +14,6 @@ dry-run and benchmarks all share:
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -84,7 +83,6 @@ class Model:
 
     # -- input/cache declarations (drive smoke tests AND the dry-run) -------------
     def batch_specs(self, shape: ShapeSpec) -> dict:
-        cfg = self.cfg
         B, S = shape.global_batch, shape.seq_len
         if shape.kind == "train":
             out = {

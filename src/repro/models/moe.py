@@ -165,7 +165,6 @@ def _moe_ep_replicated(cfg: ModelConfig, p: dict, x, mesh: Mesh, dp_axes):
     """Decode path: x replicated over 'model'; local experts + psum combine."""
     B, S, d = x.shape
     ep = mesh.shape["model"]
-    E = cfg.moe.num_experts
     cf = cfg.moe.capacity_factor
 
     def inner(pr, pg, pu, pd, xl):
@@ -206,7 +205,6 @@ def _moe_ep_2d(cfg: ModelConfig, p: dict, x, mesh: Mesh, dp_axes):
     ep = mesh.shape["model"]
     E_loc = cfg.moe.num_experts // ep
     cf = cfg.moe.capacity_factor
-    dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
 
     def inner(pr, pg, pu, pd, xl):
         # gather the (tiny) decode activations over the data axes

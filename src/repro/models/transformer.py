@@ -8,9 +8,6 @@ applied to the scanned block body.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -29,10 +26,8 @@ from .layers import (
     mlp_specs,
     norm_spec,
     qkv,
-    rope,
     unembed,
 )
-from .param import Spec
 
 
 def model_scan(cfg: ModelConfig, body, init, xs):
@@ -138,7 +133,6 @@ def prefill(cfg: ModelConfig, params: dict, batch: dict, cache_len: int):
 def decode_step(cfg: ModelConfig, params: dict, cache: dict, batch: dict):
     """One new token against the cache; returns (logits, new cache)."""
     token = batch["token"]  # [B]
-    B = token.shape[0]
     lengths = cache["len"]  # absolute #tokens generated so far
     x = embed(params["embed"], token[:, None])  # [B, 1, d]
     positions = lengths[:, None]

@@ -10,7 +10,7 @@ the default elsewhere.  Optimizer state shards exactly like its parameter
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +37,10 @@ def global_norm(tree) -> jnp.ndarray:
 
 def adamw_init(params, cfg: AdamWConfig):
     dt = jnp.dtype(cfg.state_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {
         "mu": jax.tree_util.tree_map(zeros, params),
         "nu": jax.tree_util.tree_map(zeros, params),

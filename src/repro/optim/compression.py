@@ -18,7 +18,7 @@ in f32 locally (no int overflow).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

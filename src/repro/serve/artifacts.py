@@ -3,10 +3,8 @@ scale and lowered verbatim by the multi-pod dry-run for the inference shapes."""
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import Model, ShapeSpec

@@ -54,6 +54,7 @@ class ServeEngine:
         cfg: ServeConfig,
         partitioner: Optional[Partitioner] = None,
         adaptive=None,
+        cluster_adaptive=None,
     ):
         self.model = model
         self.cfg = cfg
@@ -67,9 +68,14 @@ class ServeEngine:
         # to observe anything — the controller attaches itself to the active
         # session on first tick, so the Tracer may start before or after
         # engine construction.
-        from repro.core.adaptive import build_controller
+        # cluster_adaptive: ClusterPolicy list (or ready controller) ticked
+        # the same way; reads the per-rank map of the session's in-process
+        # master (TraceConfig.serve_port), so a serving frontend can watch
+        # for straggling backends streaming into it.
+        from repro.core.adaptive import build_cluster_controller, build_controller
 
         self.adaptive = build_controller(adaptive)
+        self.cluster_adaptive = build_cluster_controller(cluster_adaptive)
         self._rid = itertools.count()
         B = cfg.batch_slots
         shape = ShapeSpec("serve", "decode", cfg.cache_len, B)
@@ -170,6 +176,8 @@ class ServeEngine:
         self._tok = nxt
         if self.adaptive is not None:
             self.adaptive.tick(engine=self)
+        if self.cluster_adaptive is not None:
+            self.cluster_adaptive.tick()
         host = np.asarray(nxt)
         for i in active:
             r = self.slots[i]

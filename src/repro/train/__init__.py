@@ -1,2 +1,7 @@
 from .train_step import TrainConfig, build_train_artifacts  # noqa: F401
-from .trainer import Trainer, TrainerConfig  # noqa: F401
+from .trainer import (  # noqa: F401
+    StragglerReport,
+    StragglerWatchdog,
+    Trainer,
+    TrainerConfig,
+)

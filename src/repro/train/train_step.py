@@ -16,7 +16,7 @@ update in-place in HBM.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -101,9 +101,12 @@ def build_train_artifacts(
     mesh = partitioner.mesh
     state_shapes, state_pspecs = state_specs(model, partitioner, tcfg)
     batch_shapes, batch_pspecs = batch_specs_sharded(model, partitioner, shape)
-    to_shard = lambda tree: jax.tree_util.tree_map(
-        lambda ps: NamedSharding(mesh, ps), tree, is_leaf=lambda x: isinstance(x, P)
-    )
+
+    def to_shard(tree):
+        return jax.tree_util.tree_map(
+            lambda ps: NamedSharding(mesh, ps), tree, is_leaf=lambda x: isinstance(x, P)
+        )
+
     state_shardings = to_shard(state_pspecs)
     batch_shardings = to_shard(batch_pspecs)
     k = tcfg.microbatches

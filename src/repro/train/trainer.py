@@ -10,9 +10,13 @@ Fault tolerance (1000-node posture, exercised in tests):
   * on startup, auto-restore from the newest valid checkpoint;
   * step execution wrapped in a retry loop: a transient failure restores the
     last checkpoint and replays (``max_failures`` budget);
-  * straggler watchdog: EWMA of step time; steps slower than
-    ``straggler_factor``× the EWMA are counted and surfaced as warnings (on a
-    real cluster this triggers rank replacement — here it feeds the trace);
+  * straggler watchdog (:class:`StragglerWatchdog`): EWMA of step wall time
+    flags locally-slow steps, and cluster-scope adaptive control
+    (``ClusterAdaptiveController`` + ``StragglerRankPolicy`` over the live
+    per-rank composites) feeds **API-level evidence** — which rank, which
+    API, how far behind the cluster median — into the same watchdog via
+    ``trainer.straggler_callback`` (on a real cluster this triggers rank
+    replacement — here it feeds the trace and the run report);
   * elastic: the mesh is derived from the live device count at construction,
     and restore reshards onto it (checkpointer stores full arrays).
 """
@@ -20,8 +24,9 @@ Fault tolerance (1000-node posture, exercised in tests):
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -44,6 +49,79 @@ class TrainerConfig:
     straggler_factor: float = 3.0
     log_every: int = 10
     data: DataConfig = dataclasses.field(default_factory=DataConfig)
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    """API-level straggler evidence from cluster-scope adaptive control:
+    which rank lagged, on which traced API, how far behind the cluster
+    median, and the policy's reasoning."""
+
+    source: str  # rank identity (host:pid:rankN)
+    provider: str
+    api: str
+    ratio: float  # rank metric / cluster median
+    reason: str = ""
+
+
+class StragglerWatchdog:
+    """The trainer's straggler state, fed by two evidence channels.
+
+    * **Wall clock** (local): :meth:`observe_step` keeps an EWMA of step
+      time; a step slower than ``factor`` × EWMA counts as a slow step.
+      This knows *that* this rank had a slow step — never *why*, and never
+      whether the slowness is this rank's fault or a collective stalled on
+      someone else.
+    * **API level** (cluster): :meth:`note_api_evidence` matches the
+      ``on_straggler`` callback signature of ``ClusterAdaptiveController``
+      — cluster-scope policies watching the live per-rank composites report
+      the lagging rank, the API it lags on, and the skew ratio.  Reports
+      accumulate in :attr:`reports` (thread-safe: the cluster controller
+      ticks on the tracer's consumer thread while the step loop runs).
+
+    On a real cluster the combination drives rank replacement; here it
+    feeds the trace and the run report, which is exactly the paper's
+    "comprehensive tracing lets you *act* on performance problems" loop.
+    """
+
+    def __init__(self, factor: float = 3.0, decay: float = 0.9):
+        self.factor = factor
+        self.decay = decay
+        self.slow_steps = 0
+        self.reports: List[StragglerReport] = []
+        self._ewma: Optional[float] = None
+        self._lock = threading.Lock()
+
+    @property
+    def ewma_s(self) -> Optional[float]:
+        """Current step-time EWMA in seconds (None before the first step)."""
+        return self._ewma
+
+    def observe_step(self, dt_s: float) -> bool:
+        """Feed one step's wall time; True when it counted as a slow step."""
+        slow = self._ewma is not None and dt_s > self.factor * self._ewma
+        if slow:
+            self.slow_steps += 1
+        self._ewma = (
+            dt_s
+            if self._ewma is None
+            else self.decay * self._ewma + (1.0 - self.decay) * dt_s
+        )
+        return slow
+
+    def note_api_evidence(
+        self, source: str, provider: str, api: str, ratio: float, reason: str = ""
+    ) -> None:
+        """Ingest one cluster-scope straggler report (``on_straggler`` hook)."""
+        with self._lock:
+            self.reports.append(
+                StragglerReport(source, provider, api, float(ratio), reason)
+            )
+
+    def api_reports(self) -> List[StragglerReport]:
+        """Snapshot of the API-level evidence received so far."""
+        with self._lock:
+            return list(self.reports)
 
 
 class Trainer:
@@ -74,9 +152,19 @@ class Trainer:
         self.ckpt = Checkpointer(cfg.ckpt_dir) if cfg.ckpt_dir else None
         self.step = 0
         self.history: List[Dict[str, float]] = []
-        self.straggler_steps = 0
-        self._ewma: Optional[float] = None
+        self.watchdog = StragglerWatchdog(factor=cfg.straggler_factor)
         self.failures = 0
+
+    @property
+    def straggler_steps(self) -> int:
+        """Wall-clock-slow steps counted by the watchdog's EWMA channel."""
+        return self.watchdog.slow_steps
+
+    @property
+    def straggler_callback(self) -> Callable[[str, str, str, float, str], None]:
+        """The ``on_straggler`` hook for a ``ClusterAdaptiveController``:
+        API-level straggler evidence lands in this trainer's watchdog."""
+        return self.watchdog.note_api_evidence
 
     # -- checkpoint/restore ------------------------------------------------------
     def _maybe_restore(self) -> None:
@@ -125,6 +213,7 @@ class Trainer:
             "steps_run": self.step - start,
             "final_loss": self.history[-1]["loss"] if self.history else float("nan"),
             "straggler_steps": self.straggler_steps,
+            "straggler_reports": self.watchdog.api_reports(),
             "failures": self.failures,
             "history": self.history,
         }
@@ -150,8 +239,6 @@ class Trainer:
         self.history.append({"step": self.step, "loss": loss, "grad_norm": gnorm})
         if self.ckpt is not None and self.step % self.cfg.ckpt_every == 0:
             self._save()
-        # straggler watchdog (EWMA of step wall time)
-        dt = time.monotonic() - t0
-        if self._ewma is not None and dt > self.cfg.straggler_factor * self._ewma:
-            self.straggler_steps += 1
-        self._ewma = dt if self._ewma is None else 0.9 * self._ewma + 0.1 * dt
+        # straggler watchdog (EWMA of step wall time; API-level evidence
+        # arrives asynchronously via straggler_callback)
+        self.watchdog.observe_step(time.monotonic() - t0)

@@ -410,9 +410,32 @@ def test_master_composite_does_not_mutate_stored_tallies():
 
 
 def test_forward_tree_local_to_global():
-    """rank → local master → global master: totals survive the hop."""
+    """rank → local master → global master: totals survive the hop, and (the
+    forward_ranks default) every origin rank stays visible at the root."""
     with MasterServer(port=0) as g:
         with MasterServer(port=0, forward_to=g.addr, forward_period_s=0.05) as l:
+            for r in range(4):
+                s = SnapshotStreamer(l.addr, source=f"rank{r}")
+                assert s.push(mk_tally(r))
+                s.close()
+            assert wait_until(lambda: l.stats()["sources"] == 4)
+            expect = totals(l.composite())
+            assert wait_until(
+                lambda: g.stats()["sources"] == 4
+                and totals(query_composite(g.addr)[0]) == expect
+            )
+            # per-rank identities pass through the hop
+            _, meta = query_composite(g.addr)
+            assert meta["sources"] == 4
+
+
+def test_forward_tree_composite_mode_single_source():
+    """forward_ranks=False restores the v2.0 behavior: the local master is
+    one anonymous composite source at its parent."""
+    with MasterServer(port=0) as g:
+        with MasterServer(
+            port=0, forward_to=g.addr, forward_period_s=0.05, forward_ranks=False
+        ) as l:
             for r in range(4):
                 s = SnapshotStreamer(l.addr, source=f"rank{r}")
                 assert s.push(mk_tally(r))
@@ -423,7 +446,6 @@ def test_forward_tree_local_to_global():
                 lambda: g.stats()["sources"] == 1
                 and totals(query_composite(g.addr)[0]) == expect
             )
-            # local master shows up as ONE source at the global master
             _, meta = query_composite(g.addr)
             assert meta["sources"] == 1
 
@@ -586,8 +608,11 @@ def test_tracer_serve_port_mid_run_attach(tmp_path):
 @pytest.mark.slow
 def test_two_rank_live_example_end_to_end():
     """The acceptance scenario: examples/distributed_train.py --live runs two
-    local ranks streaming through a local master to a global master, and the
-    live composite must match `iprof combine` on the same run."""
+    local ranks streaming through a local master to a global master (one
+    rank deliberately slowed); the live composite must match `iprof combine`
+    on the same run, per-rank sums must equal the composite, and the
+    cluster-scope StragglerRankPolicy must flag the slow rank (advisory
+    recorded + trainer-layer watchdog fed)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
@@ -599,6 +624,8 @@ def test_two_rank_live_example_end_to_end():
             "--live",
             "--live-steps",
             "6",
+            "--live-slow-rank",
+            "1",
         ],
         env=env,
         capture_output=True,
@@ -607,3 +634,5 @@ def test_two_rank_live_example_end_to_end():
     )
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "live composite matches offline combine" in proc.stdout
+    assert "per-rank sums equal the merged composite" in proc.stdout
+    assert "OK: straggler" in proc.stdout and "rank1 flagged" in proc.stdout

@@ -78,6 +78,24 @@ def test_trainer_recovers_from_transient_failure(smoke_model, mesh, tmp_path):
     assert t.step == 8  # finished despite the fault
 
 
+def test_trainer_straggler_callback_feeds_run_report(smoke_model, mesh, tmp_path):
+    """The cluster-scope feedback channel: API-level straggler evidence
+    delivered through `trainer.straggler_callback` (the ClusterAdaptive-
+    Controller `on_straggler` hook) surfaces in the run result."""
+    t = mk_trainer(smoke_model, mesh, tmp_path / "s", steps=4)
+    t.straggler_callback(
+        "host:7:rank3", "ust_repro", "train_step", 2.7, "2.70x cluster median"
+    )
+    res = t.run()
+    assert res["steps_run"] == 4
+    reps = res["straggler_reports"]
+    assert len(reps) == 1
+    assert reps[0].source == "host:7:rank3" and reps[0].api == "train_step"
+    assert reps[0].ratio == pytest.approx(2.7)
+    # the wall-clock EWMA channel still reports through the same watchdog
+    assert res["straggler_steps"] == t.watchdog.slow_steps
+
+
 def test_trainer_gives_up_after_max_failures(smoke_model, mesh, tmp_path):
     t = mk_trainer(smoke_model, mesh, tmp_path / "g", steps=8, max_failures=1)
 

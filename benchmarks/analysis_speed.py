@@ -1,0 +1,184 @@
+"""Analysis throughput: single-pass fold engine vs legacy graph, and
+composite read cost at scale (the PR-4 perf targets).
+
+Two sections:
+
+1. **tally_trace throughput** — a synthetic CTF-lite trace (entry/exit
+   pairs + named kernel spans + discards, written through the real
+   ``StreamWriter``) tallied by both paths.  Reports events/s and the
+   fast-vs-legacy speedup; asserts both produce identical tallies so the
+   speed is never bought with wrong numbers.
+2. **composite read cost** — a ``MasterServer`` holding N rank tallies,
+   driven through steady-state rounds (a few ranks grow, then the
+   composite is read, the `iprof top` polling pattern).  Compares ApiStat
+   row-merge operations with the incremental cache vs rebuild-per-read,
+   checking result equality each round.
+
+    PYTHONPATH=src python -m benchmarks.analysis_speed [--events 1000000]
+        [--ranks 256] [--json BENCH_analysis.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+from repro.core.api_model import builtin_trace_model
+from repro.core.clock import ClockInfo
+from repro.core.ctf import StreamWriter, write_metadata
+from repro.core.plugins.tally import ApiStat, Tally, tally_trace
+from repro.core.ringbuffer import RingRegistry
+from repro.core.stream import MasterServer
+from repro.core.tracepoints import Tracepoints
+
+
+def build_trace(trace_dir: str, events: int, streams: int = 2) -> int:
+    """Write a ``events``-record trace through the real recorder → ring →
+    StreamWriter pipeline.  One representative block of records is produced
+    by the generated tracepoints, then replicated to size (entry/exit pairs
+    balance within the block, so replication keeps pairing exact)."""
+    model = builtin_trace_model()
+    tp = Tracepoints(model)
+    reg = RingRegistry(1 << 24, pid=4242)
+    tp.attach(reg, [ev.eid for ev in model.events])
+    rec = tp.record
+    block_events = 0
+    for i in range(120):
+        rec["ust_jaxrt:dispatch_entry"](f"fn_{i % 11}", 4, 1 << 12, 0)
+        rec["ust_kernel:launch_span"](0, 50 + i, f"kern_{i % 7}", 8, 8, 1, 1 << 20, 1 << 16)
+        rec["ust_jaxrt:dispatch_exit"](0)
+        rec["ust_jaxrt:alloc_entry"](1 << 16, 0)
+        rec["ust_jaxrt:alloc_exit"](0xDEAD0000 + i)
+        block_events += 5
+    block = reg.rings()[0].drain()
+    tp.detach()
+    per_stream = max(1, events // (streams * block_events))
+    total = 0
+    for s in range(streams):
+        w = StreamWriter(
+            os.path.join(trace_dir, f"stream_{4242 + s}_{7 + s}.ctf"), 4242 + s, 7 + s
+        )
+        for _ in range(per_stream):
+            w.append(block)
+            total += block_events
+        w.close()
+    write_metadata(
+        trace_dir, model, ClockInfo.capture(), env={"hostname": "bench-node"}
+    )
+    return total
+
+
+def _canon(t: Tally) -> dict:
+    o = t.to_obj()
+    o["apis"] = sorted(o["apis"])
+    o["device_apis"] = sorted(o["device_apis"])
+    return o
+
+
+def run_tally(events: int = 1_000_000) -> dict:
+    with tempfile.TemporaryDirectory() as d:
+        n = build_trace(d, events)
+        t0 = time.perf_counter()
+        fast = tally_trace(d)
+        fast_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        legacy = tally_trace(d, legacy_graph=True)
+        legacy_s = time.perf_counter() - t0
+    assert _canon(fast) == _canon(legacy), "fast path diverged from legacy graph"
+    return {
+        "events": n,
+        "fast_s": fast_s,
+        "legacy_s": legacy_s,
+        "fast_events_per_s": n / fast_s,
+        "legacy_events_per_s": n / legacy_s,
+        "speedup": legacy_s / fast_s,
+    }
+
+
+def _rank_tally(rank: int, width: int) -> Tally:
+    t = Tally()
+    t.hostnames.add(f"node{rank // 8:03d}")
+    t.processes.add(rank)
+    t.threads.add((rank, 0))
+    for a in range(width):
+        s = ApiStat()
+        s.add(500 + 13 * a + rank)
+        t.apis[("ust_jaxrt", f"api_{a:04d}")] = s
+    return t
+
+
+def run_composite(ranks: int = 256, width: int = 100, rounds: int = 32, hot: int = 8) -> dict:
+    cached = MasterServer(port=0, composite_cache=True)  # never started: state only
+    rebuild = MasterServer(port=0, composite_cache=False)
+    for r in range(ranks):
+        t = _rank_tally(r, width)
+        cached.submit(f"r{r}", Tally().merge(t))
+        rebuild.submit(f"r{r}", Tally().merge(t))
+    cached.composite(), rebuild.composite()  # first build paid by both modes
+    c0, b0 = cached.comp_row_ops, rebuild.comp_row_ops
+    t_cached = t_rebuild = 0.0
+    for i in range(rounds):
+        for h in range(hot):
+            src = f"r{(i * hot + h) % ranks}"
+            grown = Tally().merge(cached.ranks()[src])
+            grown.apis[("ust_jaxrt", "api_0000")].add(1_000 + i)
+            cached.submit(src, Tally().merge(grown))
+            rebuild.submit(src, Tally().merge(grown))
+        t0 = time.perf_counter()
+        cc = cached.composite()
+        t_cached += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        rc = rebuild.composite()
+        t_rebuild += time.perf_counter() - t0
+        assert _canon(cc) == _canon(rc), "cached composite diverged from rebuild"
+    c_ops = cached.comp_row_ops - c0
+    b_ops = rebuild.comp_row_ops - b0
+    return {
+        "ranks": ranks,
+        "width": width,
+        "rounds": rounds,
+        "hot_per_round": hot,
+        "cached_row_ops": c_ops,
+        "rebuild_row_ops": b_ops,
+        "row_ops_ratio": b_ops / max(1, c_ops),
+        "cached_read_s": t_cached,
+        "rebuild_read_s": t_rebuild,
+        "read_speedup": t_rebuild / max(1e-9, t_cached),
+    }
+
+
+def run(events: int = 1_000_000, ranks: int = 256) -> dict:
+    return {"tally": run_tally(events), "composite": run_composite(ranks)}
+
+
+def main(events: int = 1_000_000, ranks: int = 256, json_path: str | None = None) -> dict:
+    out = run(events, ranks)
+    ta, co = out["tally"], out["composite"]
+    print(
+        f"  tally_trace {ta['events']} events: fast={ta['fast_s']:.2f}s "
+        f"({ta['fast_events_per_s'] / 1e6:.2f}M ev/s) "
+        f"legacy={ta['legacy_s']:.2f}s ({ta['legacy_events_per_s'] / 1e6:.2f}M ev/s) "
+        f"speedup={ta['speedup']:.1f}x"
+    )
+    print(
+        f"  composite @{co['ranks']} ranks x{co['width']} rows, {co['rounds']} reads: "
+        f"row-ops cached={co['cached_row_ops']} rebuild={co['rebuild_row_ops']} "
+        f"({co['row_ops_ratio']:.0f}x fewer) read-wall {co['read_speedup']:.1f}x faster"
+    )
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"  wrote {json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=1_000_000)
+    ap.add_argument("--ranks", type=int, default=256)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    main(args.events, args.ranks, args.json)

@@ -21,7 +21,7 @@ import time
 
 def run_smoke(json_path: str) -> None:
     """CI smoke: fast sections, crash on regression-shaped breakage, JSON out."""
-    from . import aggregate_scale, stream_bw, tracepoint_cost
+    from . import aggregate_scale, analysis_speed, stream_bw, tracepoint_cost
 
     results = {
         "mode": "smoke",
@@ -33,6 +33,16 @@ def run_smoke(json_path: str) -> None:
     for k, v in sorted(tc.items()):
         print(f"  {k:26s} {v:12.1f}")
     results["tracepoint_cost"] = tc
+
+    print("== smoke: §3.4 analysis throughput (fold vs legacy graph) ==")
+    an = analysis_speed.run(events=200_000, ranks=256)
+    print(
+        f"  tally fast={an['tally']['fast_events_per_s'] / 1e6:.2f}M ev/s "
+        f"legacy={an['tally']['legacy_events_per_s'] / 1e6:.2f}M ev/s "
+        f"speedup={an['tally']['speedup']:.1f}x | composite row-ops "
+        f"{an['composite']['row_ops_ratio']:.0f}x fewer @{an['composite']['ranks']} ranks"
+    )
+    results["analysis_speed"] = an
 
     print("== smoke: §3.7 aggregation tree (64 ranks) ==")
     ag = aggregate_scale.run(ranks=64, fanout=8)
@@ -76,6 +86,7 @@ def main() -> None:
 
     from . import (
         aggregate_scale,
+        analysis_speed,
         overhead,
         roofline,
         space,
@@ -121,6 +132,13 @@ def main() -> None:
     print("\n== §3.7 512-rank aggregation tree ==")
     ag = aggregate_scale.main()
     csv.append(("aggregate_512_ranks", ag["merge_wall_s"] * 1e6, "us total"))
+
+    print("\n== §3.4 analysis throughput: fold engine vs legacy graph ==")
+    an = analysis_speed.main(events=200_000 if args.quick else 1_000_000)
+    csv.append(("tally_fold_speedup", an["tally"]["speedup"], "x faster"))
+    csv.append(
+        ("composite_row_ops_ratio", an["composite"]["row_ops_ratio"], "x fewer ops")
+    )
 
     print("\n== §3.7+§6 wide-tally streaming: full vs delta bytes-on-wire ==")
     bw = stream_bw.main(

@@ -48,11 +48,17 @@ from .adaptive import (  # noqa: F401
     ThresholdAdvisoryPolicy,
     WidenSamplingPolicy,
 )
+from .fold import (  # noqa: F401
+    FoldEngine,
+    FoldState,
+    fold_trace,
+)
 from .stream import (  # noqa: F401
     MasterServer,
     SnapshotStreamer,
     live_snapshot,
     query_composite,
+    query_groups,
     query_ranks,
     subscribe_composites,
 )

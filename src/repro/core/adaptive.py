@@ -821,7 +821,10 @@ class ClusterAdaptiveController(_ControllerCore):
 
     def _fetch(self) -> Optional[Dict[str, Tally]]:
         if self.master is not None:
-            return self.master.ranks()
+            # frozen snapshots (replaced wholesale on change, never mutated):
+            # the windowed diffs only read them, so skip the per-tick deep
+            # copy of every rank's table — O(changed) per adaptation window
+            return self.master.ranks(copy=False)
         if self.addr is not None:
             from .stream import ProtocolError, query_ranks
 

@@ -108,9 +108,15 @@ def combine_aggregates(paths: Iterable[str], fanout: int = 32) -> Tally:
     return composite
 
 
-def combine_trace_dirs(trace_dirs: Iterable[str], fanout: int = 32) -> Tally:
-    """Merge full trace directories (re-tallying each) into a composite."""
-    tallies = [tally_trace(d) for d in trace_dirs]
+def combine_trace_dirs(
+    trace_dirs: Iterable[str], fanout: int = 32, legacy_graph: bool = False
+) -> Tally:
+    """Merge full trace directories (re-tallying each) into a composite.
+
+    Each directory is tallied through the single-pass fold engine by
+    default; ``legacy_graph=True`` routes through the Babeltrace-style
+    graph (identical result, for cross-checking)."""
+    tallies = [tally_trace(d, legacy_graph=legacy_graph) for d in trace_dirs]
     composite, _ = merge_tallies(tallies, fanout)
     return composite
 

@@ -23,7 +23,7 @@ from __future__ import annotations
 import json
 import os
 import struct
-from typing import Iterator, List, Optional, Tuple
+from typing import Callable, Iterator, List, Optional, Tuple
 
 from .api_model import DISCARD_EVENT_ID, TraceModel
 from .clock import ClockInfo
@@ -159,7 +159,15 @@ RawEvent = Tuple[int, int, memoryview]
 
 
 class StreamReader:
-    """Iterates framed records of one stream file."""
+    """Iterates framed records of one stream file.
+
+    Uncompressed streams are mapped (``mmap``) rather than read into a heap
+    buffer — the analysis side of a 10⁷-event trace then walks page-cache
+    memory directly, with one ``memoryview`` over the whole record region
+    (``records_region``) instead of a Python-bytes copy of the file.
+    Compressed streams (zstd/zlib containers) decompress into one buffer and
+    take the same code path.
+    """
 
     def __init__(self, path: str):
         self.path = path
@@ -172,32 +180,73 @@ class StreamReader:
         except (ValueError, IndexError):
             self.pid, self.tid = 0, 0
 
-    def __iter__(self) -> Iterator[RawEvent]:
+    def _load(self) -> Tuple[memoryview, Callable[[], None]]:
+        """(whole-stream buffer, release) — mmap-backed when uncompressed."""
         with open(self.path, "rb") as f:
-            raw = f.read()
-        if raw[:4] == b"\x28\xb5\x2f\xfd":  # zstd frame magic
-            import zstandard as zstd
+            head = f.read(4)
+            if head[:4] == b"\x28\xb5\x2f\xfd":  # zstd frame magic
+                import zstandard as zstd
 
-            raw = zstd.ZstdDecompressor().stream_reader(raw).read()
-        elif raw[:1] == b"\x78":  # zlib header (MAGIC starts with 'T')
-            import zlib
+                f.seek(0)
+                raw = zstd.ZstdDecompressor().stream_reader(f.read()).read()
+                return memoryview(raw), lambda: None
+            if head[:1] == b"\x78":  # zlib header (MAGIC starts with 'T')
+                import zlib
 
-            raw = zlib.decompress(raw)
-        if len(raw) < STREAM_HEADER.size:
-            return
-        magic, version, _ = STREAM_HEADER.unpack_from(raw)
+                f.seek(0)
+                raw = zlib.decompress(f.read())
+                return memoryview(raw), lambda: None
+            import mmap
+
+            try:
+                mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+            except (ValueError, OSError):  # empty file or exotic fs: plain read
+                f.seek(0)
+                raw = f.read()
+                return memoryview(raw), lambda: None
+        # the mapping outlives the (now closed) fd
+        mv = memoryview(mm)
+
+        def release(mv=mv, mm=mm) -> None:
+            mv.release()
+            try:
+                mm.close()
+            except BufferError:  # a sliced view still exported — GC will close
+                pass
+
+        return mv, release
+
+    def records_region(self) -> Tuple[memoryview, Callable[[], None]]:
+        """Validated record region (past the stream header) + release callable.
+
+        The batched-scan entry point used by the fold engine: callers walk
+        ``RECORD_HEADER``-framed records over one buffer with zero per-record
+        allocation.  An empty/too-short stream yields an empty view.
+        """
+        mv, release = self._load()
+        if len(mv) < STREAM_HEADER.size:
+            return mv[0:0], release
+        magic, version, _ = STREAM_HEADER.unpack_from(mv)
         if magic != MAGIC:
+            release()
             raise ValueError(f"{self.path}: not a THAPI ctf-lite stream")
         if version != VERSION:
+            release()
             raise ValueError(f"{self.path}: unsupported version {version}")
-        data = memoryview(raw)[STREAM_HEADER.size :]
-        off, n = 0, len(data)
-        while off + RECORD_HEADER_SIZE <= n:
-            total, eid, ts = RECORD_HEADER.unpack_from(data, off)
-            if total < RECORD_HEADER_SIZE or off + total > n:
-                break  # truncated tail (e.g. crash mid-write) — stop cleanly
-            yield eid, ts, data[off + RECORD_HEADER_SIZE : off + total]
-            off += total
+        return mv[STREAM_HEADER.size :], release
+
+    def __iter__(self) -> Iterator[RawEvent]:
+        data, release = self.records_region()
+        try:
+            off, n = 0, len(data)
+            while off + RECORD_HEADER_SIZE <= n:
+                total, eid, ts = RECORD_HEADER.unpack_from(data, off)
+                if total < RECORD_HEADER_SIZE or off + total > n:
+                    break  # truncated tail (e.g. crash mid-write) — stop cleanly
+                yield eid, ts, data[off + RECORD_HEADER_SIZE : off + total]
+                off += total
+        finally:
+            release()
 
 
 def stream_files(trace_dir: str) -> List[str]:

@@ -51,6 +51,7 @@ def _run(args) -> int:
         stream_delta=not args.no_stream_delta,
         stream_resync_every=args.stream_resync_every,
         serve_port=args.serve_port,
+        legacy_graph=args.legacy_graph,
     )
     old_argv = sys.argv
     sys.argv = [target] + list(args.args)
@@ -71,7 +72,7 @@ def _run(args) -> int:
 
 
 def _tally(args) -> int:
-    t = tally_plugin.tally_trace(args.trace_dir)
+    t = tally_plugin.tally_trace(args.trace_dir, legacy_graph=args.legacy_graph)
     print(tally_plugin.render(t, top=args.top, device=False))
     if args.device or t.device_apis:
         print("\n-- device --")
@@ -100,6 +101,17 @@ def _serve(args) -> int:
     """Run a streaming master (local when --forward-to, else global)."""
     from .stream import MasterServer
 
+    rollup = args.rollup_groups
+    if rollup is not None:
+        if rollup.isdigit() and int(rollup) > 0:
+            rollup = int(rollup)
+        elif rollup != "host":
+            print(
+                f"[iprof] bad --rollup-groups {rollup!r}: want 'host' or a "
+                "positive integer bucket size",
+                file=sys.stderr,
+            )
+            return 2
     try:
         m = MasterServer(
             port=args.port,
@@ -108,6 +120,7 @@ def _serve(args) -> int:
             forward_period_s=args.forward_period,
             fanout=args.fanout,
             forward_ranks=not args.no_forward_ranks,
+            rollup_groups=rollup,
         ).start()
     except OSError as e:
         print(f"[iprof] cannot bind {args.bind}:{args.port}: {e}", file=sys.stderr)
@@ -133,7 +146,7 @@ def _serve(args) -> int:
     return 0
 
 
-def _render_composite(args, t, meta, ranks=None) -> None:
+def _render_composite(args, t, meta, ranks=None, groups=None) -> None:
     """One `iprof top` refresh: header line + tally table(s)."""
     if not args.no_clear:
         print("\x1b[2J\x1b[H", end="")
@@ -149,6 +162,13 @@ def _render_composite(args, t, meta, ranks=None) -> None:
     if ranks is not None:
         print("\n-- ranks --")
         print(tally_plugin.render_by_rank(ranks, top=args.top, device=args.device))
+    if groups is not None:
+        print("\n-- groups --")
+        print(
+            tally_plugin.render_by_rank(
+                groups, top=args.top, device=args.device, label="Group"
+            )
+        )
 
 
 def _top(args) -> int:
@@ -160,10 +180,21 @@ def _top(args) -> int:
     per-rank breakdown table — the straggler/skew view.
     """
     from .aggregate import merge_tallies
-    from .stream import ProtocolError, query_composite, query_ranks, subscribe_composites
+    from .stream import (
+        ProtocolError,
+        query_composite,
+        query_groups,
+        query_ranks,
+        subscribe_composites,
+    )
 
+    if args.live and args.by_group:
+        print(
+            "[iprof] --by-group is poll-only; ignoring --live for this view",
+            file=sys.stderr,
+        )
     try:
-        if args.live:
+        if args.live and not args.by_group:  # group view is poll-only
             i = 0
             for t, meta in subscribe_composites(
                 args.addr,
@@ -181,7 +212,19 @@ def _top(args) -> int:
             if i:
                 time.sleep(args.interval)
             i += 1
-            if args.by_rank:
+            if args.by_group:
+                groups, meta = query_groups(args.addr, timeout_s=args.timeout)
+                if not meta.get("rollup"):
+                    print(
+                        f"[iprof] master at {args.addr} runs without "
+                        "--rollup-groups; no group breakdown to show",
+                        file=sys.stderr,
+                    )
+                    return 1
+                copies = [tally_plugin.Tally().merge(t) for t in groups.values()]
+                t = merge_tallies(copies)[0] if copies else tally_plugin.Tally()
+                _render_composite(args, t, meta, groups=groups)
+            elif args.by_rank:
                 ranks, meta = query_ranks(args.addr, timeout_s=args.timeout)
                 # merge_tallies folds in place: merge copies, keep ranks intact
                 copies = [tally_plugin.Tally().merge(t) for t in ranks.values()]
@@ -243,6 +286,11 @@ def build_parser() -> argparse.ArgumentParser:
         default=None,
         help="serve this process's live tally on a local master port (iprof top attaches)",
     )
+    r.add_argument(
+        "--legacy-graph",
+        action="store_true",
+        help="aggregate-only tallying via the legacy Babeltrace-style graph",
+    )
     r.add_argument("entry", help="pkg.module:function")
     r.add_argument("args", nargs="*")
     r.set_defaults(fn=_run)
@@ -251,6 +299,12 @@ def build_parser() -> argparse.ArgumentParser:
     t.add_argument("trace_dir")
     t.add_argument("--top", type=int, default=None)
     t.add_argument("--device", action="store_true")
+    t.add_argument(
+        "--legacy-graph",
+        action="store_true",
+        help="tally via the full Babeltrace-style graph instead of the "
+        "single-pass fold engine (slow; identical result)",
+    )
     t.set_defaults(fn=_tally)
 
     pr = sub.add_parser("pretty", help="pretty-print events (§3.4)")
@@ -289,6 +343,14 @@ def build_parser() -> argparse.ArgumentParser:
         action="store_true",
         help="forward one merged composite upstream instead of the per-rank breakdown",
     )
+    s.add_argument(
+        "--rollup-groups",
+        default=None,
+        metavar="HOST|N",
+        help="aggregate sources into node-level rollup groups on ingest: "
+        "'host' groups by hostname, an integer N buckets ranks N-at-a-time "
+        "(pre-aggregation for >1k-rank trees; query with iprof top --by-group)",
+    )
     s.set_defaults(fn=_serve)
 
     tp = sub.add_parser("top", help="attach to a master and render the live composite")
@@ -302,6 +364,12 @@ def build_parser() -> argparse.ArgumentParser:
         "--by-rank",
         action="store_true",
         help="append the per-rank breakdown table (straggler/skew view)",
+    )
+    tp.add_argument(
+        "--by-group",
+        action="store_true",
+        help="poll the rollup-group breakdown instead (masters started with "
+        "--rollup-groups); node-granularity view of >1k-rank trees",
     )
     tp.add_argument("--interval", type=float, default=1.0)
     tp.add_argument(

@@ -11,20 +11,23 @@ adaptive policy) can read ``snapshot()`` mid-run — e.g. to detect a dispatch/
 poll imbalance and adjust microbatching, the paper's "adaptive optimization"
 loop.
 
-Implementation: the analyzer consumes the same framed record stream the CTF
-writer receives, using the generated unpackers — write path stays zero-cost,
-analysis rides the consumer thread.
+Implementation: the analyzer folds the same framed record stream the CTF
+writer receives through the shared single-pass fold engine
+(:mod:`repro.core.fold`) — the exact code path behind the offline
+``tally_trace`` fast path, so live snapshots and offline tallies can never
+diverge.  The write path stays zero-cost; analysis rides the consumer
+thread.  Pairing stacks are keyed ``(pid, tid)`` first, so multi-process
+chunk feeds (a master analyzing several ranks' drains) can never cross-match
+an entry from one process with an exit from another.
 """
 
 from __future__ import annotations
 
 import threading
-from typing import Dict, Optional, Tuple
 
-from .api_model import DISCARD_EVENT_ID, TraceModel
-from .plugins.tally import ApiStat, Tally
-from .ringbuffer import RECORD_HEADER, RECORD_HEADER_SIZE
-from .tracepoints import Tracepoints
+from .api_model import TraceModel
+from .fold import FoldEngine
+from .plugins.tally import Tally
 
 
 class OnlineAnalyzer:
@@ -38,78 +41,44 @@ class OnlineAnalyzer:
     ships and the adaptive controller diffs.
     """
 
-    def __init__(
-        self,
-        model: TraceModel,
-        tracepoints: Optional[Tracepoints] = None,
-        hostname: str = "",
-    ):
+    def __init__(self, model: TraceModel, hostname: str = ""):
         self.model = model
-        self._unpack = (tracepoints or Tracepoints(model)).unpack
-        self._etypes = model.events
+        self._engine = FoldEngine(model)
         self._lock = threading.Lock()
-        self._tally = Tally()
+        self._state = self._engine.new_state()
         if hostname:
-            self._tally.hostnames.add(hostname)
-        #: open entry timestamps per (tid, provider:api) — LIFO like intervals
-        self._open: Dict[Tuple[int, str], list] = {}
-        self.events_seen = 0
-        self.discarded = 0
+            self._state.hostnames.add(hostname)
+
+    @property
+    def events_seen(self) -> int:
+        """Records folded so far (all phases, including skipped samples)."""
+        return self._state.events_seen
+
+    @property
+    def discarded(self) -> int:
+        """Cumulative ctf:events_discarded count observed in the feed."""
+        return self._state.discarded
 
     def feed(self, chunk: bytes, pid: int = 0, tid: int = 0) -> None:
         """Fold one drained ring-buffer chunk into the live tally.
 
-        Entry events open per-(tid, api) LIFO stacks; exits pop and
-        accumulate; device spans accumulate directly; discard records bump
-        ``discarded``.  Safe to call concurrently with ``snapshot()``.
+        Entry events open per-``(pid, tid)``, per-API LIFO stacks; exits pop
+        and accumulate; device spans accumulate directly; discard records
+        bump ``discarded``.  One shared fold pass, one memoryview per chunk.
+        Safe to call concurrently with ``snapshot()``.
         """
-        off, n = 0, len(chunk)
-        etypes = self._etypes
         with self._lock:
-            while off + RECORD_HEADER_SIZE <= n:
-                total, eid, ts = RECORD_HEADER.unpack_from(chunk, off)
-                if total < RECORD_HEADER_SIZE or off + total > n:
-                    break
-                self.events_seen += 1
-                if eid < len(etypes):
-                    et = etypes[eid]
-                    if eid == DISCARD_EVENT_ID:
-                        self.discarded += self._unpack[eid](
-                            memoryview(chunk)[off + RECORD_HEADER_SIZE : off + total]
-                        )[0]
-                    elif et.phase == "entry":
-                        self._open.setdefault((tid, et.provider + ":" + et.api), []).append(ts)
-                    elif et.phase == "exit":
-                        stack = self._open.get((tid, et.provider + ":" + et.api))
-                        if stack:
-                            t0 = stack.pop()
-                            self._stat(et.provider, et.api, False).add(max(0, ts - t0))
-                            self._tally.processes.add(pid)
-                            self._tally.threads.add((pid, tid))
-                    elif et.phase == "span":
-                        payload = memoryview(chunk)[off + RECORD_HEADER_SIZE : off + total]
-                        vals = self._unpack[eid](payload)
-                        t0, t1 = vals[0], vals[1]
-                        name = et.api
-                        if et.api == "launch":
-                            # kernel name is the first post-span payload field
-                            name = vals[2] if len(vals) > 2 and isinstance(vals[2], str) else et.api
-                        self._stat(et.provider, name, True).add(max(0, t1 - t0))
-                        self._tally.processes.add(pid)
-                        self._tally.threads.add((pid, tid))
-                off += total
-
-    def _stat(self, provider: str, api: str, device: bool) -> ApiStat:
-        table = self._tally.device_apis if device else self._tally.apis
-        st = table.get((provider, api))
-        if st is None:
-            st = table[(provider, api)] = ApiStat()
-        return st
+            self._engine.fold_chunk(self._state, chunk, pid, tid)
 
     def snapshot(self) -> Tally:
-        """Copy-on-read live tally (safe to render while tracing continues)."""
+        """Copy-on-read live tally (safe to render while tracing continues).
+
+        Open (not yet exited) calls are not part of the snapshot — they join
+        the tally when their exit record arrives, matching the cumulative
+        semantics the streaming deltas rely on.  The discarded counter is
+        stamped in, so streamed snapshots carry ring-pressure evidence."""
         with self._lock:
-            return Tally().merge(self._tally)
+            return self._state.to_tally()
 
     def busy_fraction(self, provider: str, api: str, window_total_ns: int) -> float:
         """Adaptive-optimization helper: share of wall time inside an API.
@@ -120,5 +89,5 @@ class OnlineAnalyzer:
         :class:`repro.core.adaptive.AdaptiveContext` instead.
         """
         with self._lock:
-            st = self._tally.apis.get((provider, api))
-            return (st.total_ns / window_total_ns) if st and window_total_ns else 0.0
+            row = self._state.rows.get((provider, api))
+            return (row[1] / window_total_ns) if row and window_total_ns else 0.0

@@ -13,6 +13,29 @@ from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from ..babeltrace import CTFSource, Interval, IntervalFilter
 
+#: interned (provider, api) key tuples — the row keys of every tally in the
+#: process.  Analysis folds, merges, and delta application all funnel their
+#: keys through :func:`intern_key`, so a 2000-row tally merged across 1000
+#: ranks reuses 2000 tuple objects instead of allocating per row per merge
+#: (and identity-equal keys let dict lookups short-circuit on pointer
+#: comparison before falling back to string equality).  Capped: a long-lived
+#: master fed unbounded key cardinality (e.g. shape-specialized kernel names
+#: across many jobs) must not pin every key it ever saw — past the cap, keys
+#: are returned uninterned (correctness is unaffected; only sharing stops).
+_KEY_INTERN: Dict[Tuple[str, str], Tuple[str, str]] = {}
+_KEY_INTERN_MAX = 1 << 16
+
+
+def intern_key(provider: str, api: str) -> Tuple[str, str]:
+    """Canonical shared (provider, api) tuple for tally row keys."""
+    key = (provider, api)
+    cached = _KEY_INTERN.get(key)
+    if cached is not None:
+        return cached
+    if len(_KEY_INTERN) < _KEY_INTERN_MAX:
+        _KEY_INTERN[key] = key
+    return key
+
 
 @dataclasses.dataclass
 class ApiStat:
@@ -58,9 +81,10 @@ class Tally:
         if iv.device and iv.api == "launch":
             # kernel spans tally per kernel name (the paper's per-API rows)
             api = iv.entry.get("name", iv.api)
-        st = table.get((iv.provider, api))
+        key = intern_key(iv.provider, api)
+        st = table.get(key)
         if st is None:
-            st = table[(iv.provider, api)] = ApiStat()
+            st = table[key] = ApiStat()
         st.add(iv.dur)
         self.processes.add(iv.pid)
         self.threads.add((iv.pid, iv.tid))
@@ -104,7 +128,7 @@ class Tally:
     def from_obj(d: dict) -> "Tally":
         def dec(items):
             return {
-                (p, a): ApiStat(calls=c, total_ns=t, min_ns=mn, max_ns=mx)
+                intern_key(p, a): ApiStat(calls=c, total_ns=t, min_ns=mn, max_ns=mx)
                 for p, a, c, t, mn, mx in items
             }
 
@@ -175,9 +199,13 @@ class Tally:
         base_seq numbering). Returns ``self``.
         """
         for p, a, c, t, mn, mx in d["apis"]:
-            self.apis[(p, a)] = ApiStat(calls=c, total_ns=t, min_ns=mn, max_ns=mx)
+            self.apis[intern_key(p, a)] = ApiStat(
+                calls=c, total_ns=t, min_ns=mn, max_ns=mx
+            )
         for p, a, c, t, mn, mx in d["device_apis"]:
-            self.device_apis[(p, a)] = ApiStat(calls=c, total_ns=t, min_ns=mn, max_ns=mx)
+            self.device_apis[intern_key(p, a)] = ApiStat(
+                calls=c, total_ns=t, min_ns=mn, max_ns=mx
+            )
         self.hostnames |= set(d["hostnames"])
         self.processes |= set(d["processes"])
         self.threads |= {tuple(t) for t in d["threads"]}
@@ -194,7 +222,20 @@ def tally_intervals(intervals: Iterable[Interval], hostname: str = "") -> Tally:
     return t
 
 
-def tally_trace(trace_dir: str) -> Tally:
+def tally_trace(trace_dir: str, legacy_graph: bool = False) -> Tally:
+    """Tally a CTF-lite trace directory.
+
+    Default: the single-pass fold engine (``core/fold.py``) — no Event/
+    Interval materialization, no global time-sort, ~an order of magnitude
+    faster on large traces.  ``legacy_graph=True`` is the escape hatch that
+    routes through the full Babeltrace-style graph (CTFSource →
+    IntervalFilter → tally_intervals); both paths produce identical tallies
+    (property-tested in ``tests/test_fold.py``).
+    """
+    if not legacy_graph:
+        from ..fold import fold_trace  # deferred: fold imports this module
+
+        return fold_trace(trace_dir)
     src = CTFSource(trace_dir)
     filt = IntervalFilter(iter(src))
     t = tally_intervals(filt)
@@ -247,7 +288,10 @@ def _table(header: Tuple[str, ...], body: List[Tuple[str, ...]]) -> List[str]:
 
 
 def render_by_rank(
-    ranks: Dict[str, Tally], top: Optional[int] = None, device: bool = False
+    ranks: Dict[str, Tally],
+    top: Optional[int] = None,
+    device: bool = False,
+    label: str = "Rank",
 ) -> str:
     """Per-rank summary table (`iprof top --by-rank`, §3.7 + §6).
 
@@ -255,7 +299,8 @@ def render_by_rank(
     mean call latency, and the API that dominates the rank's time — the
     view where stragglers and rank skew are visible.  The merged composite
     (:func:`render`) hides exactly this: a rank 3× slower than its peers
-    disappears into the cluster-wide sums.
+    disappears into the cluster-wide sums.  ``label`` renames the first
+    column (``iprof top --by-group`` renders rollup groups with it).
     """
     per_rank = []
     for src, t in ranks.items():
@@ -283,8 +328,8 @@ def render_by_rank(
         )
         for src, calls, total, top_api, top_st in per_rank
     ]
-    header = ("Rank", "Time", "Time(%)", "Calls", "Average", "Top API", "Top API Avg")
-    out = [f"{len(ranks)} ranks"]
+    header = (label, "Time", "Time(%)", "Calls", "Average", "Top API", "Top API Avg")
+    out = [f"{len(ranks)} {label.lower()}s"]
     out.extend(_table(header, body))
     return "\n".join(out)
 

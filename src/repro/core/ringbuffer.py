@@ -78,10 +78,11 @@ class RingBuffer:
         end = h + n
         if end <= self.capacity:
             self._buf[h:end] = record
-        else:  # wrap
+        else:  # wrap: zero-copy halves via memoryview (record[:k] would copy)
             k = self.capacity - h
-            self._buf[h:] = record[:k]
-            self._buf[: n - k] = record[k:]
+            mv = memoryview(record)
+            self._buf[h:] = mv[:k]
+            self._buf[: n - k] = mv[k:]
         self.head += n  # publish (single int store under the GIL)
         self.events += 1
         return True

@@ -70,12 +70,12 @@ import socket
 import struct
 import threading
 import time
-from typing import Dict, Iterator, List, Optional, Tuple, Union
+from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
 
 import msgpack
 
 from .aggregate import merge_tallies
-from .plugins.tally import Tally
+from .plugins.tally import ApiStat, Tally, intern_key
 
 #: v2 adds delta frames, ``hello_ack`` and ``resync`` control frames, and
 #: ``subscribe`` push mode. v1 peers are still understood (full snapshots).
@@ -404,6 +404,169 @@ class SnapshotStreamer:
 
 
 # ---------------------------------------------------------------------------
+# Incremental composite maintenance (the read-path scaling layer)
+# ---------------------------------------------------------------------------
+#
+# Cumulative tallies only grow, so a source's old→new change can be *applied*
+# to a running accumulator row-by-row instead of re-merging every source per
+# read: calls/total add their difference (subtraction is exact on the
+# additive fields), min/max clamp (monotone growth guarantees new.min ≤
+# old.min and new.max ≥ old.max, so the clamp can never miss a tighter bound
+# held by the replaced state).  A change that is NOT monotone growth — a
+# restarted rank, a reset counter, a shrunk table — cannot be applied
+# incrementally; the helpers detect it (before touching the accumulator) and
+# the caller falls back to a full rebuild on the next read.
+
+
+def _acc_row(table: Dict[Tuple[str, str], ApiStat], key, st: ApiStat) -> None:
+    row = table.get(key)
+    if row is None:
+        table[key] = ApiStat(
+            calls=st.calls, total_ns=st.total_ns, min_ns=st.min_ns, max_ns=st.max_ns
+        )
+    else:
+        row.merge(st)
+
+
+def _tally_update_ops(acc: Tally, old: Optional[Tally], new: Tally) -> Optional[int]:
+    """Fold one source's old→new cumulative change into accumulator ``acc``.
+
+    Returns the number of row-ops applied — O(changed rows), the invariant
+    the composite cache is built on — or None (``acc`` untouched) when the
+    change is not monotone growth and the accumulator must be rebuilt.
+    Validation runs fully before the first mutation, so a None return never
+    leaves ``acc`` half-updated.
+    """
+    ops = 0
+    if old is None:
+        for key, st in new.apis.items():
+            _acc_row(acc.apis, key, st)
+            ops += 1
+        for key, st in new.device_apis.items():
+            _acc_row(acc.device_apis, key, st)
+            ops += 1
+        acc.hostnames |= new.hostnames
+        acc.processes |= new.processes
+        acc.threads |= new.threads
+        acc.discarded += new.discarded
+        return ops
+    if new.discarded < old.discarded:
+        return None
+    if (
+        old.hostnames - new.hostnames
+        or old.processes - new.processes
+        or old.threads - new.threads
+    ):
+        return None
+    changed = []
+    for acc_t, old_t, new_t in (
+        (acc.apis, old.apis, new.apis),
+        (acc.device_apis, old.device_apis, new.device_apis),
+    ):
+        if len(old_t) > len(new_t) or old_t.keys() - new_t.keys():
+            return None
+        for key, st in new_t.items():
+            ost = old_t.get(key)
+            if ost is None:
+                changed.append((acc_t, key, None, st))
+            elif (
+                st.calls != ost.calls
+                or st.total_ns != ost.total_ns
+                or st.min_ns != ost.min_ns
+                or st.max_ns != ost.max_ns
+            ):
+                if (
+                    st.calls < ost.calls
+                    or st.total_ns < ost.total_ns
+                    or st.min_ns > ost.min_ns
+                    or st.max_ns < ost.max_ns
+                    or key not in acc_t
+                ):
+                    return None
+                changed.append((acc_t, key, ost, st))
+    for acc_t, key, ost, st in changed:
+        if ost is None:
+            _acc_row(acc_t, key, st)
+        else:
+            row = acc_t[key]
+            row.calls += st.calls - ost.calls
+            row.total_ns += st.total_ns - ost.total_ns
+            if st.min_ns < row.min_ns:
+                row.min_ns = st.min_ns
+            if st.max_ns > row.max_ns:
+                row.max_ns = st.max_ns
+    acc.hostnames |= new.hostnames
+    acc.processes |= new.processes
+    acc.threads |= new.threads
+    acc.discarded += new.discarded - old.discarded
+    return len(changed)
+
+
+def _delta_update_ops(acc: Tally, prev: Tally, delta: dict) -> Optional[int]:
+    """Apply a v2 delta frame's change to accumulator ``acc``.
+
+    The delta already names exactly the changed rows (with full cumulative
+    values), so this is O(changed) with no table scan at all — the steady-
+    state ingest path.  ``prev`` is the source's stored tally *before*
+    ``apply_delta`` runs.  Same None-means-rebuild contract as
+    :func:`_tally_update_ops`: validation — including structural validation
+    of a possibly version-skewed frame — completes before the first
+    mutation, so None never leaves ``acc`` half-updated.
+    """
+    changed = []
+    try:
+        for acc_t, prev_t, rows in (
+            (acc.apis, prev.apis, delta["apis"]),
+            (acc.device_apis, prev.device_apis, delta["device_apis"]),
+        ):
+            for p, a, c, t, mn, mx in rows:
+                key = intern_key(p, a)
+                ost = prev_t.get(key)
+                if ost is not None and (
+                    c < ost.calls
+                    or t < ost.total_ns
+                    or mn > ost.min_ns
+                    or mx < ost.max_ns
+                    or key not in acc_t
+                ):
+                    return None
+                changed.append((acc_t, key, ost, c, t, mn, mx))
+        hostnames = set(delta["hostnames"])
+        processes = set(delta["processes"])
+        threads = {tuple(x) for x in delta["threads"]}
+        nd = int(delta["discarded"])
+    except (KeyError, TypeError, ValueError):
+        return None  # malformed frame: rebuild rather than trust it
+    if nd < prev.discarded:
+        return None
+    for acc_t, key, ost, c, t, mn, mx in changed:
+        if ost is None:
+            row = acc_t.get(key)
+            if row is None:
+                acc_t[key] = ApiStat(calls=c, total_ns=t, min_ns=mn, max_ns=mx)
+            else:
+                row.calls += c
+                row.total_ns += t
+                if mn < row.min_ns:
+                    row.min_ns = mn
+                if mx > row.max_ns:
+                    row.max_ns = mx
+        else:
+            row = acc_t[key]
+            row.calls += c - ost.calls
+            row.total_ns += t - ost.total_ns
+            if mn < row.min_ns:
+                row.min_ns = mn
+            if mx > row.max_ns:
+                row.max_ns = mx
+    acc.hostnames |= hostnames
+    acc.processes |= processes
+    acc.threads |= threads
+    acc.discarded += nd - prev.discarded
+    return len(changed)
+
+
+# ---------------------------------------------------------------------------
 # Master daemon (local or global, depending on forward_to)
 # ---------------------------------------------------------------------------
 
@@ -412,15 +575,21 @@ class _SourceEntry:
     """One source's stored state: connection generation, seq, tally, receipt
     time.  ``gen`` scopes the seq chain to the connection that produced it —
     a reconnecting sender restarts seq at 0 on a new gen, and its full
-    snapshot must not be dropped as stale against the old chain."""
+    snapshot must not be dropped as stale against the old chain.
+    ``version`` stamps every state update; ``snap`` caches a frozen copy of
+    the tally at ``snap_version`` so per-rank reads refresh only the sources
+    that changed since the last read (O(changed), not O(ranks × rows))."""
 
-    __slots__ = ("gen", "seq", "tally", "ts")
+    __slots__ = ("gen", "seq", "tally", "ts", "version", "snap", "snap_version")
 
     def __init__(self, gen: Optional[int], seq: int, tally: Tally, ts: float):
         self.gen = gen
         self.seq = seq
         self.tally = tally
         self.ts = ts
+        self.version = 0
+        self.snap: Optional[Tally] = None
+        self.snap_version = -1
 
 
 class MasterServer:
@@ -457,6 +626,8 @@ class MasterServer:
         forward_delta: bool = True,
         forward_resync_every: int = 32,
         forward_ranks: bool = True,
+        rollup_groups: Union[None, str, int, "Callable[[str], str]"] = None,
+        composite_cache: bool = True,
     ):
         self.host = host
         self.port = port  # rebound to the real port at start()
@@ -466,6 +637,16 @@ class MasterServer:
         self.forward_delta = forward_delta
         self.forward_resync_every = forward_resync_every
         self.forward_ranks = forward_ranks
+        #: node-level pre-aggregation (>1k-rank trees): group sources into
+        #: rollup tallies maintained incrementally on ingest.  ``"host"``
+        #: groups by the host part of ``host:pid:rankN`` source ids; an int N
+        #: buckets rank indices N-at-a-time (``group0`` = ranks 0..N-1); a
+        #: callable maps source id → group id.  None disables rollups.
+        self.rollup_groups = rollup_groups
+        #: maintain the composite incrementally on ingest (O(changed) per
+        #: read).  False restores the rebuild-per-read behavior — the
+        #: benchmark baseline and an escape hatch, not a recommended mode.
+        self.composite_cache = composite_cache
         self.source = source or f"master:{socket.gethostname()}:{os.getpid()}"
         #: source → stored state (gen, seq, cumulative tally, receipt time)
         self._latest: Dict[str, _SourceEntry] = {}
@@ -477,12 +658,24 @@ class MasterServer:
         self._lock = threading.Lock()
         self._dirty = False
         self._version = 0  # bumped per state update; gates subscription pushes
+        #: incrementally-maintained composite + rebuild flag (generation-
+        #: stamped by ``_version``; see ``_composite_locked``)
+        self._comp: Optional[Tally] = None
+        self._comp_dirty = True
+        #: rollup state: group id → running tally, members, rebuild flags
+        self._group_tallies: Dict[str, Tally] = {}
+        self._group_members: Dict[str, set] = {}
+        self._group_dirty: set = set()
+        self._src_group: Dict[str, str] = {}
         self.frames = 0
         self.snapshots = 0  # state updates ingested (full + delta)
         self.full_snapshots = 0
         self.deltas = 0
         self.resyncs_sent = 0
         self.queries = 0
+        self.comp_row_ops = 0  # ApiStat row merges spent maintaining/rebuilding
+        self.comp_rebuilds = 0  # full composite rebuilds (non-monotone fallback)
+        self.comp_incremental = 0  # ingests applied incrementally
         self._lsock: Optional[socket.socket] = None
         self._stop_evt = threading.Event()
         self._threads: List[threading.Thread] = []
@@ -570,7 +763,10 @@ class MasterServer:
         (seq < stored, same connection generation) are stale duplicates of
         state we already supersede — dropped.  A frame from a *different*
         generation (reconnect, new session) always replaces: its snapshot is
-        cumulative truth and its seq chain starts over."""
+        cumulative truth and its seq chain starts over.
+
+        The master takes ownership of ``tally`` — callers must not mutate it
+        afterwards (the incremental composite diffs stored states)."""
         if not isinstance(tally, Tally):
             tally = Tally.from_obj(tally)
         with self._lock:
@@ -578,12 +774,14 @@ class MasterServer:
             if prev is not None and seq is not None and gen == prev.gen and seq < prev.seq:
                 return
             nseq = seq if seq is not None else (prev.seq + 1 if prev is not None else 0)
+            old = prev.tally if prev is not None else None
             self._latest[source] = _SourceEntry(gen, nseq, tally, time.time())
             self.snapshots += 1
             self.full_snapshots += 1
             self._dirty = True
             self._dirty_srcs.add(source)
             self._version += 1
+            self._caches_note_update_locked(source, old, tally, None)
 
     def submit_delta(
         self,
@@ -606,9 +804,14 @@ class MasterServer:
             prev = self._latest.get(source)
             if prev is None or prev.gen != gen or prev.seq != base_seq:
                 return False
+            # caches diff against the pre-apply state, so feed them first —
+            # a delta names exactly the changed rows, the O(changed) path
+            self._caches_note_update_locked(source, prev.tally, None, delta)
             prev.tally.apply_delta(delta)
             prev.seq = seq
             prev.ts = time.time()
+            prev.version += 1
+            prev.snap = None  # stale frozen copy: re-snapped on next read
             self.snapshots += 1
             self.deltas += 1
             self._dirty = True
@@ -623,30 +826,188 @@ class MasterServer:
                 # keep the last tally but accept any future seq from it
                 prev.seq = -1
 
-    def composite(self) -> Tally:
-        """Tree-merge the latest state of every source (fanout-ary, like the
-        offline ``aggregate_tree``). Sources' stored tallies are never
-        mutated — merging runs on defensive copies."""
+    # -- cache maintenance (all called under self._lock) ---------------------
+    def _caches_note_update_locked(
+        self,
+        source: str,
+        old: Optional[Tally],
+        new: Optional[Tally],
+        delta: Optional[dict],
+    ) -> None:
+        """Fold one source update into the composite and rollup caches.
+
+        Exactly one of ``new`` (full snapshot replacing ``old``) or ``delta``
+        (v2 delta about to be applied to ``old``) is set.  Monotone growth is
+        applied incrementally — O(changed rows); anything else flips the
+        affected cache to dirty and the next read rebuilds.
+        """
+        if self.composite_cache and not self._comp_dirty and self._comp is not None:
+            ops = self._apply_to_acc(self._comp, old, new, delta)
+            if ops is None:
+                self._comp_dirty = True
+            else:
+                self.comp_row_ops += ops
+                self.comp_incremental += 1
+        else:
+            self._comp_dirty = True
+        if self.rollup_groups is not None:
+            g = self._group_of_locked(source)
+            self._group_members.setdefault(g, set()).add(source)
+            gt = self._group_tallies.get(g)
+            if g in self._group_dirty:
+                return
+            if gt is None:
+                # first update for this group: seed from the change itself
+                # (old is None on a brand-new source; otherwise seed dirty)
+                if old is None and new is not None:
+                    seeded = Tally()
+                    _tally_update_ops(seeded, None, new)
+                    self._group_tallies[g] = seeded
+                else:
+                    self._group_dirty.add(g)
+                return
+            if self._apply_to_acc(gt, old, new, delta) is None:
+                self._group_dirty.add(g)
+
+    @staticmethod
+    def _apply_to_acc(
+        acc: Tally, old: Optional[Tally], new: Optional[Tally], delta: Optional[dict]
+    ) -> Optional[int]:
+        if delta is not None:
+            assert old is not None
+            return _delta_update_ops(acc, old, delta)
+        assert new is not None
+        return _tally_update_ops(acc, old, new)
+
+    def _comp_copies_locked(self) -> Tuple[List[Tally], int]:
+        """Rebuild input: per-source copies + the row-op count, one lock hold."""
+        ops = sum(
+            len(e.tally.apis) + len(e.tally.device_apis)
+            for e in self._latest.values()
+        )
+        return [Tally().merge(e.tally) for e in self._latest.values()], ops
+
+    def _finish_rebuild(self, copies: List[Tally], ops: int, version: int) -> Tally:
+        """Merge a rebuild's source copies *outside* the lock (ingest never
+        stalls behind an O(ranks × rows) merge), then store the result as the
+        cache only if no ingest landed mid-rebuild (``version`` unchanged —
+        a stale store would silently drop those updates).  Rebuilds go
+        through the same ``fanout``-ary tree merge as the offline
+        ``aggregate_tree`` (merge math is associative, so fanout shapes the
+        work, never the result).  Returns a tally the caller owns."""
+        if copies:
+            comp, _ = merge_tallies(copies, fanout=self.fanout)
+        else:
+            comp = Tally()
         with self._lock:
-            copies = [Tally().merge(e.tally) for e in self._latest.values()]
-        if not copies:
-            return Tally()
-        comp, _ = merge_tallies(copies, fanout=self.fanout)
+            self.comp_rebuilds += 1
+            self.comp_row_ops += ops
+            if self.composite_cache and self._version == version:
+                self._comp = comp
+                self._comp_dirty = False
+                return Tally().merge(comp)
+        # cache disabled, or state moved mid-rebuild (comp is still a
+        # consistent read of the snapshot we copied): hand it out uncached
         return comp
 
-    def ranks(self) -> Dict[str, Tally]:
-        """Per-source breakdown: source id → defensive copy of its latest
-        cumulative tally.  The data ``query_ranks`` serves and cluster-scope
-        policies consume; merging all values reproduces :meth:`composite`."""
+    def _ranks_snapshot_locked(self) -> Dict[str, Tally]:
+        """Frozen per-source copies, refreshed only for sources whose state
+        changed since the last read (version-stamped).  The returned tallies
+        are shared snapshots: replaced wholesale on change, never mutated in
+        place — safe to serialize or merge outside the lock, never to edit."""
+        out = {}
+        for src, e in self._latest.items():
+            if e.snap is None or e.snap_version != e.version:
+                e.snap = Tally().merge(e.tally)
+                e.snap_version = e.version
+            out[src] = e.snap
+        return out
+
+    def _group_of_locked(self, source: str) -> str:
+        g = self._src_group.get(source)
+        if g is None:
+            rg = self.rollup_groups
+            if callable(rg):
+                g = str(rg(source))
+            elif isinstance(rg, int) and not isinstance(rg, bool):
+                # host:pid:rankN → bucket rank indices rg-at-a-time
+                tail = source.rpartition("rank")[2]
+                if tail.isdigit():
+                    g = f"group{int(tail) // max(1, rg)}"
+                else:
+                    g = source.partition(":")[0] or source
+            else:  # "host" (the default string form)
+                g = source.partition(":")[0] or source
+            self._src_group[source] = g
+        return g
+
+    def _rebuild_group_locked(self, g: str) -> None:
+        t = Tally()
+        for src in self._group_members.get(g, ()):
+            e = self._latest.get(src)
+            if e is not None:
+                t.merge(e.tally)
+        self._group_tallies[g] = t
+        self._group_dirty.discard(g)
+
+    def _groups_locked(self) -> Dict[str, Tally]:
+        for g in list(self._group_dirty):
+            self._rebuild_group_locked(g)
+        return self._group_tallies
+
+    # -- reads ---------------------------------------------------------------
+    def composite(self) -> Tally:
+        """The merged cluster profile, O(changed) in steady state.
+
+        Maintained incrementally on ingest (full snapshots diff against the
+        replaced state, deltas apply their changed rows directly), so a read
+        copies the cached composite — O(distinct API rows) — instead of
+        re-merging every source's whole table (O(ranks × rows), the
+        pre-cache behavior, still reachable via ``composite_cache=False``).
+        The returned tally is the caller's to mutate."""
         with self._lock:
-            return {src: Tally().merge(e.tally) for src, e in self._latest.items()}
+            if self.composite_cache and self._comp is not None and not self._comp_dirty:
+                return Tally().merge(self._comp)
+            version = self._version
+            copies, ops = self._comp_copies_locked()
+        return self._finish_rebuild(copies, ops, version)
+
+    def ranks(self, copy: bool = True) -> Dict[str, Tally]:
+        """Per-source breakdown: source id → its latest cumulative tally.
+        The data ``query_ranks`` serves and cluster-scope policies consume;
+        merging all values reproduces :meth:`composite`.
+
+        ``copy=True`` (default) returns defensive copies the caller owns.
+        ``copy=False`` returns the version-stamped frozen snapshots — only
+        sources that changed since the last read are re-copied (O(changed)),
+        but callers must treat the tallies as read-only."""
+        with self._lock:
+            snap = self._ranks_snapshot_locked()
+            if copy:
+                return {src: Tally().merge(t) for src, t in snap.items()}
+            return dict(snap)
+
+    def groups(self) -> Dict[str, Tally]:
+        """Rollup breakdown: group id → aggregated member tally (empty when
+        ``rollup_groups`` is off).  Group tallies are maintained
+        incrementally on ingest — the pre-aggregation layer that keeps
+        >1k-rank trees readable: policies and upstream forwarding touch
+        O(groups) tallies instead of O(ranks).  Returns defensive copies
+        (group accumulators mutate in place on ingest, so — unlike the
+        per-source snapshots — they can never be handed out uncopied)."""
+        if self.rollup_groups is None:
+            return {}
+        with self._lock:
+            return {g: Tally().merge(t) for g, t in self._groups_locked().items()}
 
     def stats(self) -> dict:
         """Counters for monitoring: sources, frame/snapshot/delta/query
-        totals, resyncs sent, last-update wall clock, forwarding role."""
+        totals, resyncs sent, composite-cache row-ops/rebuilds, rollup
+        group count, last-update wall clock, forwarding role."""
         with self._lock:
             sources = len(self._latest)
             updated = max((e.ts for e in self._latest.values()), default=0.0)
+            groups = len(self._group_members) if self.rollup_groups is not None else 0
         return {
             "sources": sources,
             "frames": self.frames,
@@ -655,12 +1016,18 @@ class MasterServer:
             "deltas": self.deltas,
             "resyncs": self.resyncs_sent,
             "queries": self.queries,
+            "comp_row_ops": self.comp_row_ops,
+            "comp_rebuilds": self.comp_rebuilds,
+            "comp_incremental": self.comp_incremental,
+            "groups": groups,
             "updated": updated,
             "forwarding": self.forward_to is not None,
         }
 
     def flush(self, force: bool = False) -> bool:
-        """Push state upstream now (local masters only): the per-rank
+        """Push state upstream now (local masters only): rollup-group
+        tallies when ``rollup_groups`` is set (the pre-aggregated form —
+        O(groups) upstream sources instead of O(ranks)), else the per-rank
         breakdown when ``forward_ranks``, else the merged composite."""
         if self._forwarder is None:
             return False
@@ -668,17 +1035,40 @@ class MasterServer:
             if not self._latest or (not self._dirty and not force):
                 return False
             self._dirty = False
-        if self.forward_ranks:
+        if self.rollup_groups is not None and self.forward_ranks:
             with self._lock:
-                # only updated sources are copied and delta-encoded; a
-                # forced (stop-path) flush re-sends every source in full
-                srcs = list(self._latest) if force else list(self._dirty_srcs)
+                gro = self._groups_locked()
+                if force:
+                    gs = list(gro)
+                else:
+                    gs = sorted(
+                        {self._group_of_locked(src) for src in self._dirty_srcs}
+                    )
                 self._dirty_srcs.clear()
-                copies = {
-                    src: Tally().merge(self._latest[src].tally)
-                    for src in srcs
-                    if src in self._latest
-                }
+                # group accumulators mutate in place on ingest: copy under
+                # the lock, push outside it
+                copies = {g: Tally().merge(gro[g]) for g in gs if g in gro}
+            ok = True
+            for g, tally in copies.items():
+                ok = self._forwarder.push(
+                    tally, source=g, skip_unchanged=not force
+                ) and ok
+            if not ok:
+                with self._lock:
+                    # parent unreachable: re-arm the failed groups' members
+                    # so their state is re-forwarded when the parent returns
+                    self._dirty = True
+                    for g in copies:
+                        self._dirty_srcs.update(self._group_members.get(g, ()))
+        elif self.forward_ranks:
+            with self._lock:
+                # only updated sources are forwarded, via the version-stamped
+                # frozen snapshots (no per-flush deep copies); a forced
+                # (stop-path) flush re-sends every source in full
+                snaps = self._ranks_snapshot_locked()
+                srcs = list(snaps) if force else list(self._dirty_srcs)
+                self._dirty_srcs.clear()
+                copies = {src: snaps[src] for src in srcs if src in snaps}
             ok = True
             for src, tally in copies.items():
                 ok = self._forwarder.push(
@@ -781,6 +1171,12 @@ class MasterServer:
                         conn.sendall(pack_frame(self._ranks_msg()))
                     except OSError:
                         break
+                elif kind == "query_groups":
+                    self.queries += 1
+                    try:
+                        conn.sendall(pack_frame(self._groups_msg()))
+                    except OSError:
+                        break
                 elif kind == "subscribe":
                     # push composites on this connection until it dies; the
                     # pusher owns the socket's send side from here on
@@ -868,20 +1264,22 @@ class MasterServer:
         # one snapshot under one lock: a frame's composite and per-rank map
         # must describe the same instant, or a subscriber cross-checking
         # invariant 7 (per-rank sums == composite) sees spurious mismatches
-        # whenever a submit races the push
+        # whenever a submit races the push.  Both sides come from the
+        # incremental caches — no per-query re-merge of every source — and
+        # the frozen snapshots are safe to serialize outside the lock.  On
+        # the rare rebuild, the source copies and the per-rank snapshot are
+        # taken under the same hold (same instant) and the merge runs
+        # outside the lock so ingest never stalls behind it.
+        comp = None
         with self._lock:
-            snap = {src: Tally().merge(e.tally) for src, e in self._latest.items()}
-        if snap:
-            # merge_tallies folds in place: feed it copies when the per-rank
-            # map must survive intact for the by_rank payload
-            mergeable = (
-                [Tally().merge(t) for t in snap.values()]
-                if by_rank
-                else list(snap.values())
-            )
-            comp, _ = merge_tallies(mergeable, fanout=self.fanout)
-        else:
-            comp = Tally()
+            if self.composite_cache and self._comp is not None and not self._comp_dirty:
+                comp = Tally().merge(self._comp)
+            else:
+                version = self._version
+                copies, ops = self._comp_copies_locked()
+            snap = self._ranks_snapshot_locked() if by_rank else None
+        if comp is None:
+            comp = self._finish_rebuild(copies, ops, version)
         st = self.stats()
         msg = {
             "type": "composite",
@@ -899,14 +1297,32 @@ class MasterServer:
     def _ranks_msg(self) -> dict:
         """``query_ranks`` reply: the per-source tally map + receipt times."""
         with self._lock:
-            ranks = {src: e.tally.to_obj() for src, e in self._latest.items()}
+            snap = self._ranks_snapshot_locked()
             stamps = {src: e.ts for src, e in self._latest.items()}
+        # frozen snapshots: replaced wholesale on change, safe to serialize
+        # after the lock is released
+        ranks = {src: t.to_obj() for src, t in snap.items()}
         st = self.stats()
         return {
             "type": "ranks",
             "v": PROTOCOL_VERSION,
             "ranks": ranks,
             "ts": stamps,
+            "sources": st["sources"],
+            "snapshots": st["snapshots"],
+            "deltas": st["deltas"],
+            "updated": st["updated"],
+        }
+
+    def _groups_msg(self) -> dict:
+        """``query_groups`` reply: the rollup breakdown (empty when off)."""
+        gro = self.groups()
+        st = self.stats()
+        return {
+            "type": "groups",
+            "v": PROTOCOL_VERSION,
+            "rollup": self.rollup_groups is not None,
+            "groups": {g: t.to_obj() for g, t in gro.items()},
             "sources": st["sources"],
             "snapshots": st["snapshots"],
             "deltas": st["deltas"],
@@ -962,6 +1378,31 @@ def query_ranks(
     meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
     meta["ts"] = msg.get("ts", {})
     return {src: Tally.from_obj(o) for src, o in msg["ranks"].items()}, meta
+
+
+def query_groups(
+    addr: Union[str, Tuple[str, int]], timeout_s: float = 3.0
+) -> Tuple[Dict[str, Tally], dict]:
+    """One-shot request: fetch a master's rollup-group breakdown.
+
+    Returns ``(groups, meta)`` where ``groups`` maps group id (e.g. a
+    hostname, or ``groupK`` rank buckets) → the aggregated tally of its
+    member sources, and ``meta`` carries the composite meta keys plus
+    ``rollup`` (False when the master runs without ``rollup_groups`` — the
+    map is then empty).  Merging every group reproduces the composite, so
+    >1k-rank trees can be read at node granularity without shipping or
+    merging per-rank tables.
+    """
+    host, port = parse_addr(addr)
+    with socket.create_connection((host, port), timeout=timeout_s) as s:
+        s.settimeout(timeout_s)
+        s.sendall(pack_frame({"type": "query_groups", "v": PROTOCOL_VERSION}))
+        msg = recv_frame(s)
+    if not msg or msg.get("type") != "groups":
+        raise ProtocolError(f"expected groups reply, got {msg!r}")
+    meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
+    meta["rollup"] = bool(msg.get("rollup", False))
+    return {g: Tally.from_obj(o) for g, o in msg["groups"].items()}, meta
 
 
 def subscribe_composites(

@@ -55,6 +55,10 @@ class TraceConfig:
     ranks: Optional[Sequence[int]] = None
     #: §3.7 — keep only the aggregate tally, delete raw streams at stop().
     aggregate_only: bool = False
+    #: escape hatch: tally the aggregate through the legacy Babeltrace-style
+    #: graph instead of the single-pass fold engine (identical result,
+    #: ~an order of magnitude slower on large traces; see core/fold.py)
+    legacy_graph: bool = False
     #: zstd-compress CTF streams (space knob beyond Fig 8's mode ladder)
     compress: bool = False
     #: §6 future work, implemented: maintain a LIVE tally on the consumer
@@ -232,9 +236,7 @@ class Tracer:
         if self.cfg.online:
             from .online import OnlineAnalyzer
 
-            self.online = OnlineAnalyzer(
-                self.model, self.tp, hostname=socket.gethostname()
-            )
+            self.online = OnlineAnalyzer(self.model, hostname=socket.gethostname())
         if self.cfg.serve_port is not None or self.cfg.stream_to is not None:
             from .stream import MasterServer, SnapshotStreamer, default_source
 
@@ -411,7 +413,7 @@ class Tracer:
         from .aggregate import save_tally
         from .plugins.tally import tally_trace
 
-        tally = tally_trace(self.cfg.out_dir)
+        tally = tally_trace(self.cfg.out_dir, legacy_graph=self.cfg.legacy_graph)
         path = os.path.join(self.cfg.out_dir, f"aggregate_rank{self.cfg.rank}.tally")
         save_tally(tally, path)
         for name in os.listdir(self.cfg.out_dir):

@@ -1,0 +1,500 @@
+"""Fold-engine equivalence + composite-cache tests.
+
+The contract under test: the single-pass fold engine (``core/fold.py``, the
+default behind ``tally_trace``) produces a tally identical to the legacy
+Babeltrace-style graph (``CTFSource → IntervalFilter → tally_intervals``)
+on *any* trace — including compressed streams, truncated tails, unmatched
+entries/exits, and discard records.  Property-based when hypothesis is
+installed (seed-driven trace generation), seeded-loop fallback otherwise.
+
+Plus the read-path scaling layer: MasterServer's incremental composite and
+rollup groups must equal the rebuild-per-read result through full snapshots,
+deltas, and non-monotone restarts.
+"""
+
+import os
+import random
+import struct
+
+from repro.core.api_model import (
+    APIModel,
+    APISpec,
+    DISCARD_EVENT_ID,
+    P,
+    build_trace_model,
+)
+from repro.core.clock import ClockInfo
+from repro.core.ctf import StreamWriter, write_metadata
+from repro.core.fold import FoldEngine, fold_trace
+from repro.core.plugins.tally import ApiStat, Tally, tally_trace
+from repro.core.ringbuffer import RECORD_HEADER, RECORD_HEADER_SIZE
+from tests.hypothesis_optional import given, settings, st
+
+# ---------------------------------------------------------------------------
+# Trace generator (shared by the hypothesis and seeded-fallback tests)
+# ---------------------------------------------------------------------------
+
+_MODEL = build_trace_model(
+    [
+        APIModel(
+            provider="ust_a",
+            apis=(
+                APISpec("alpha", params=(P("x", "u32"),), result=P("status", "u32")),
+                APISpec("beta", params=(P("msg", "str"),), result=P("status", "u32")),
+                APISpec(
+                    "launch",
+                    params=(P("name", "str"), P("flops", "u64")),
+                    span=True,
+                ),
+                APISpec("xfer", params=(P("nbytes", "u64"),), span=True),
+                APISpec("tick", params=(P("v", "f32"),), counter=True),
+            ),
+        )
+    ]
+)
+_BYNAME = _MODEL.by_name()
+_U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+_F32 = struct.Struct("<f")
+
+
+def _rec(eid: int, ts: int, payload: bytes) -> bytes:
+    return RECORD_HEADER.pack(RECORD_HEADER_SIZE + len(payload), eid, ts) + payload
+
+
+def _pstr(s: str) -> bytes:
+    b = s.encode()
+    return _U32.pack(len(b)) + b
+
+
+def _gen_stream(rng: random.Random, pid: int, tid: int) -> bytes:
+    """One thread's record bytes: entries/exits (nested, unmatched both
+    ways), spans, counters, discards — timestamps monotone per thread."""
+    out = []
+    ts = rng.randrange(1, 1000)
+    open_calls = {"alpha": 0, "beta": 0}
+    for _ in range(rng.randrange(0, 120)):
+        ts += rng.randrange(0, 50)
+        op = rng.randrange(0, 10)
+        if op <= 2:  # entry
+            api = rng.choice(("alpha", "beta"))
+            ev = _BYNAME[f"ust_a:{api}_entry"]
+            payload = _pstr("m" * rng.randrange(0, 5)) if api == "beta" else _U32.pack(7)
+            out.append(_rec(ev.eid, ts, payload))
+            open_calls[api] += 1
+        elif op <= 5:  # exit — sometimes unmatched on purpose
+            api = rng.choice(("alpha", "beta"))
+            ev = _BYNAME[f"ust_a:{api}_exit"]
+            out.append(_rec(ev.eid, ts, _U32.pack(0)))
+            open_calls[api] = max(0, open_calls[api] - 1)
+        elif op <= 7:  # device span (named launch or plain transfer)
+            if rng.random() < 0.5:
+                ev = _BYNAME["ust_a:launch_span"]
+                name = rng.choice(("k_gemm", "k_scan", "k_io"))
+                dur = rng.randrange(0, 500)
+                payload = (
+                    _U64.pack(ts) + _U64.pack(ts + dur) + _pstr(name) + _U64.pack(99)
+                )
+            else:
+                ev = _BYNAME["ust_a:xfer_span"]
+                # ts_end < ts_begin occasionally: negative durations clamp
+                t1 = ts + rng.randrange(-20, 300)
+                payload = _U64.pack(ts) + _U64.pack(max(0, t1)) + _U64.pack(4096)
+            out.append(_rec(ev.eid, ts, payload))
+        elif op == 8:  # telemetry counter (skipped by the tally fold)
+            ev = _BYNAME["ust_a:tick"]
+            out.append(_rec(ev.eid, ts, _F32.pack(1.5)))
+        else:  # discard record
+            out.append(_rec(DISCARD_EVENT_ID, ts, _U64.pack(rng.randrange(1, 9))))
+    return b"".join(out)
+
+
+def _build_trace(seed: int, trace_dir: str) -> None:
+    rng = random.Random(seed)
+    os.makedirs(trace_dir, exist_ok=True)
+    n_streams = rng.randrange(1, 4)
+    for i in range(n_streams):
+        pid, tid = 100 + i, 7000 + i
+        compress = rng.random() < 0.3
+        w = StreamWriter(
+            os.path.join(trace_dir, f"stream_{pid}_{tid}.ctf"), pid, tid, compress
+        )
+        w.append(_gen_stream(rng, pid, tid))
+        if not compress and rng.random() < 0.3:
+            # torn tail: a partial record header (crash mid-write)
+            w.append(RECORD_HEADER.pack(64, 1, 42)[: rng.randrange(1, 13)])
+        w.close()
+    write_metadata(
+        trace_dir, _MODEL, ClockInfo.capture(), env={"hostname": "foldhost"}
+    )
+
+
+def canon(t: Tally) -> dict:
+    """Order-independent tally form (dict insertion order differs by path)."""
+    o = t.to_obj()
+    o["apis"] = sorted(o["apis"])
+    o["device_apis"] = sorted(o["device_apis"])
+    return o
+
+
+def _assert_paths_agree(trace_dir: str) -> None:
+    fast = tally_trace(trace_dir)
+    legacy = tally_trace(trace_dir, legacy_graph=True)
+    assert canon(fast) == canon(legacy)
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: property-based + seeded fallback
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+def test_fold_matches_legacy_property(seed):
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        _build_trace(seed, d)
+        _assert_paths_agree(d)
+
+
+def test_fold_matches_legacy_seeded(tmp_path):
+    """Seeded corpus (runs everywhere, hypothesis or not): 20 random traces
+    spanning compression, torn tails, unmatched entries/exits, discards."""
+    for seed in range(20):
+        d = str(tmp_path / f"t{seed}")
+        _build_trace(seed, d)
+        _assert_paths_agree(d)
+
+
+def test_fold_unmatched_and_discard_semantics(tmp_path):
+    """Unmatched entries flush as zero-duration calls; unmatched exits are
+    dropped (counted); discards accumulate — exactly the legacy behavior."""
+    d = str(tmp_path / "t")
+    os.makedirs(d)
+    ev_in = _BYNAME["ust_a:alpha_entry"]
+    ev_out = _BYNAME["ust_a:alpha_exit"]
+    w = StreamWriter(os.path.join(d, "stream_5_6.ctf"), 5, 6)
+    w.append(_rec(ev_out.eid, 50, _U32.pack(0)))  # unmatched exit first
+    w.append(_rec(ev_in.eid, 100, _U32.pack(1)))
+    w.append(_rec(ev_out.eid, 175, _U32.pack(0)))  # pairs: dur 75
+    w.append(_rec(ev_in.eid, 200, _U32.pack(2)))  # never exits: dur 0
+    w.append(_rec(DISCARD_EVENT_ID, 300, _U64.pack(4)))
+    w.close()
+    write_metadata(d, _MODEL, ClockInfo.capture(), env={})
+    t = tally_trace(d)
+    assert canon(t) == canon(tally_trace(d, legacy_graph=True))
+    st_ = t.apis[("ust_a", "alpha")]
+    assert st_.calls == 2 and st_.total_ns == 75
+    assert st_.min_ns == 0 and st_.max_ns == 75  # the unmatched entry's 0
+    assert t.discarded == 4
+
+
+def test_fold_named_launch_varlen_prefix_matches_legacy(tmp_path):
+    """A launch span whose name sits *behind* a varlen field cannot use the
+    fixed-offset fast path — the plan must fall back to a full unpack and
+    still produce per-kernel rows identical to the legacy graph."""
+    model = build_trace_model(
+        [
+            APIModel(
+                provider="ust_x",
+                apis=(
+                    APISpec(
+                        "launch",
+                        params=(P("tag", "str"), P("name", "str"), P("flops", "u64")),
+                        span=True,
+                    ),
+                ),
+            )
+        ]
+    )
+    ev = model.by_name()["ust_x:launch_span"]
+    d = str(tmp_path / "t")
+    os.makedirs(d)
+    w = StreamWriter(os.path.join(d, "stream_1_2.ctf"), 1, 2)
+    for tag, name, dur in (("a", "k_x", 5), ("bb", "k_y", 7), ("c", "k_x", 9)):
+        w.append(
+            _rec(
+                ev.eid,
+                0,
+                _U64.pack(10) + _U64.pack(10 + dur) + _pstr(tag) + _pstr(name) + _U64.pack(1),
+            )
+        )
+    w.close()
+    write_metadata(d, model, ClockInfo.capture(), env={})
+    fast = tally_trace(d)
+    legacy = tally_trace(d, legacy_graph=True)
+    assert canon(fast) == canon(legacy)
+    assert fast.device_apis[("ust_x", "k_x")].calls == 2
+    assert fast.device_apis[("ust_x", "k_y")].total_ns == 7
+
+
+def test_fold_named_launch_rows(tmp_path):
+    """Launch spans tally per kernel name without unpacking the rest."""
+    d = str(tmp_path / "t")
+    os.makedirs(d)
+    ev = _BYNAME["ust_a:launch_span"]
+    w = StreamWriter(os.path.join(d, "stream_1_2.ctf"), 1, 2)
+    for name, dur in (("k_a", 10), ("k_b", 30), ("k_a", 20)):
+        w.append(
+            _rec(ev.eid, 0, _U64.pack(100) + _U64.pack(100 + dur) + _pstr(name) + _U64.pack(1))
+        )
+    w.close()
+    write_metadata(d, _MODEL, ClockInfo.capture(), env={})
+    t = fold_trace(d)
+    assert t.device_apis[("ust_a", "k_a")].calls == 2
+    assert t.device_apis[("ust_a", "k_a")].total_ns == 30
+    assert t.device_apis[("ust_a", "k_b")].total_ns == 30
+    assert ("ust_a", "launch") not in t.device_apis
+
+
+# ---------------------------------------------------------------------------
+# Online analyzer rides the same engine
+# ---------------------------------------------------------------------------
+
+
+def test_online_feed_keys_stacks_by_pid():
+    """Multi-process feeds must not cross-match pairs: an entry from pid 1
+    cannot be closed by an exit from pid 2 on the same tid (the bug the
+    (tid, api)-keyed stacks had)."""
+    from repro.core.online import OnlineAnalyzer
+
+    a = OnlineAnalyzer(_MODEL)
+    ev_in = _BYNAME["ust_a:alpha_entry"]
+    ev_out = _BYNAME["ust_a:alpha_exit"]
+    a.feed(_rec(ev_in.eid, 100, _U32.pack(1)), pid=1, tid=9)
+    a.feed(_rec(ev_out.eid, 900, _U32.pack(0)), pid=2, tid=9)  # foreign exit
+    assert ("ust_a", "alpha") not in a.snapshot().apis
+    a.feed(_rec(ev_out.eid, 150, _U32.pack(0)), pid=1, tid=9)  # the real exit
+    st_ = a.snapshot().apis[("ust_a", "alpha")]
+    assert st_.calls == 1 and st_.total_ns == 50
+
+
+def test_online_matches_offline_fold(tmp_path):
+    """Feeding the analyzer a trace's stream bytes reproduces the offline
+    fold (fully-matched corpus: no unmatched-entry flush involved)."""
+    from repro.core.ctf import StreamReader, stream_files
+    from repro.core.online import OnlineAnalyzer
+
+    d = str(tmp_path / "t")
+    os.makedirs(d)
+    rng = random.Random(7)
+    w = StreamWriter(os.path.join(d, "stream_3_4.ctf"), 3, 4)
+    ts = 0
+    for _ in range(200):
+        ts += rng.randrange(1, 30)
+        dur = rng.randrange(0, 100)
+        w.append(_rec(_BYNAME["ust_a:alpha_entry"].eid, ts, _U32.pack(1)))
+        w.append(_rec(_BYNAME["ust_a:alpha_exit"].eid, ts + dur, _U32.pack(0)))
+    w.close()
+    write_metadata(d, _MODEL, ClockInfo.capture(), env={})
+    a = OnlineAnalyzer(_MODEL)
+    for path in stream_files(d):
+        r = StreamReader(path)
+        buf, release = r.records_region()
+        a.feed(bytes(buf), pid=r.pid, tid=r.tid)
+        release()
+    assert canon(a.snapshot()) == canon(fold_trace(d))
+    assert a.events_seen == 400
+
+
+# ---------------------------------------------------------------------------
+# FoldEngine chunk semantics
+# ---------------------------------------------------------------------------
+
+
+def test_fold_chunk_truncated_tail_stops_cleanly():
+    eng = FoldEngine(_MODEL)
+    state = eng.new_state()
+    ev_in = _BYNAME["ust_a:alpha_entry"]
+    good = _rec(ev_in.eid, 10, _U32.pack(1))
+    torn = RECORD_HEADER.pack(500, ev_in.eid, 20)  # claims 500B, has 14
+    assert eng.fold_chunk(state, good + torn, 1, 1) == 1
+    assert state.events_seen == 1
+
+
+def test_fold_chunk_unknown_eid_skipped():
+    eng = FoldEngine(_MODEL)
+    state = eng.new_state()
+    unknown = _rec(250, 10, b"xxxx")  # eid beyond the model: newer writer
+    assert eng.fold_chunk(state, unknown, 1, 1) == 1
+    assert not state.rows and not state.drows
+
+
+# ---------------------------------------------------------------------------
+# MasterServer: incremental composite + rollup groups
+# ---------------------------------------------------------------------------
+
+
+def _mk_tally(rank: int, calls: int = 3, apis: int = 6) -> Tally:
+    t = Tally()
+    t.hostnames.add(f"node{rank // 4}")
+    t.processes.add(rank)
+    t.threads.add((rank, 0))
+    for a in range(apis):
+        s = ApiStat()
+        for c in range(calls):
+            s.add(100 + 13 * a + c + rank)
+        t.apis[("ust_a", f"api_{a}")] = s
+    return t
+
+
+def _rebuild_reference(m) -> Tally:
+    """What the composite must equal: a fresh merge of every stored source."""
+    ref = Tally()
+    for src, t in m.ranks().items():
+        ref.merge(t)
+    return ref
+
+
+def test_composite_cache_tracks_submits_and_deltas():
+    from repro.core.stream import MasterServer
+
+    m = MasterServer(port=0)  # never started: pure state machine
+    for r in range(8):
+        m.submit(f"r{r}", _mk_tally(r))
+    assert canon(m.composite()) == canon(_rebuild_reference(m))
+    rebuilds_before = m.comp_rebuilds
+    # grow rank 3 via a delta (the steady-state O(changed) path)
+    base = Tally().merge(m.ranks()["r3"])
+    grown = Tally().merge(base)
+    grown.apis[("ust_a", "api_0")].add(5_000)
+    grown.apis[("ust_a", "api_new")] = ApiStat(calls=1, total_ns=9, min_ns=9, max_ns=9)
+    d = grown.delta_to(base)
+    assert m.submit_delta("r3", d, seq=1, base_seq=0, gen=None)
+    assert canon(m.composite()) == canon(_rebuild_reference(m))
+    # full-snapshot monotone growth applies incrementally too
+    grown2 = Tally().merge(grown)
+    grown2.apis[("ust_a", "api_1")].add(77)
+    m.submit("r3", grown2, seq=2, gen=None)
+    assert canon(m.composite()) == canon(_rebuild_reference(m))
+    assert m.comp_rebuilds == rebuilds_before  # never rebuilt along the way
+
+
+def test_composite_cache_rebuilds_on_non_monotone_restart():
+    from repro.core.stream import MasterServer
+
+    m = MasterServer(port=0)
+    m.submit("r0", _mk_tally(0, calls=9), gen=1)
+    m.submit("r1", _mk_tally(1, calls=9), gen=1)
+    m.composite()
+    # rank restarts: counters reset (smaller tally, new generation)
+    m.submit("r0", _mk_tally(0, calls=2), seq=0, gen=2)
+    assert canon(m.composite()) == canon(_rebuild_reference(m))
+    assert m.comp_rebuilds >= 2  # initial build + non-monotone fallback
+
+
+def test_composite_cache_row_ops_beat_rebuild_per_read():
+    """The acceptance criterion: ≥10× fewer merge row-ops in steady state
+    at scale vs the rebuild-per-read baseline, identical results."""
+    from repro.core.stream import MasterServer
+
+    ranks, rounds, width = 64, 12, 40
+    cached = MasterServer(port=0, composite_cache=True)
+    rebuild = MasterServer(port=0, composite_cache=False)
+    for r in range(ranks):
+        t = _mk_tally(r, apis=width)
+        cached.submit(f"r{r}", Tally().merge(t))
+        rebuild.submit(f"r{r}", Tally().merge(t))
+    cached.composite(), rebuild.composite()
+    c0, b0 = cached.comp_row_ops, rebuild.comp_row_ops
+    for i in range(rounds):
+        src = f"r{i % ranks}"
+        grown = Tally().merge(cached.ranks()[src])
+        grown.apis[("ust_a", "api_0")].add(1_000 + i)
+        cached.submit(src, Tally().merge(grown))
+        rebuild.submit(src, Tally().merge(grown))
+        assert canon(cached.composite()) == canon(rebuild.composite())
+    c_ops = cached.comp_row_ops - c0
+    b_ops = rebuild.comp_row_ops - b0
+    assert b_ops >= 10 * max(1, c_ops), (c_ops, b_ops)
+
+
+def test_rollup_groups_by_host_and_bucket():
+    from repro.core.stream import MasterServer
+
+    m = MasterServer(port=0, rollup_groups="host")
+    m.submit("nodeA:1:rank0", _mk_tally(0))
+    m.submit("nodeA:2:rank1", _mk_tally(1))
+    m.submit("nodeB:3:rank2", _mk_tally(2))
+    g = m.groups()
+    assert set(g) == {"nodeA", "nodeB"}
+    merged = Tally()
+    for t in g.values():
+        merged.merge(t)
+    assert canon(merged) == canon(m.composite())
+    # growth lands in the right group incrementally
+    grown = Tally().merge(m.ranks()["nodeA:1:rank0"])
+    grown.apis[("ust_a", "api_0")].add(9_999)
+    m.submit("nodeA:1:rank0", grown, seq=1, gen=None)
+    g2 = m.groups()
+    assert g2["nodeA"].apis[("ust_a", "api_0")].calls > g[
+        "nodeA"
+    ].apis[("ust_a", "api_0")].calls
+    assert canon(g2["nodeB"]) == canon(g["nodeB"])  # bystander untouched
+
+    b = MasterServer(port=0, rollup_groups=2)
+    for r in range(5):
+        b.submit(f"h:{r}:rank{r}", _mk_tally(r))
+    assert set(b.groups()) == {"group0", "group1", "group2"}
+
+
+def test_query_groups_over_tcp():
+    from repro.core.stream import MasterServer, query_groups
+
+    with MasterServer(port=0, rollup_groups="host") as m:
+        m.submit("nodeA:1:rank0", _mk_tally(0))
+        m.submit("nodeB:2:rank1", _mk_tally(1))
+        groups, meta = query_groups(m.addr)
+        assert meta["rollup"] and set(groups) == {"nodeA", "nodeB"}
+        merged = Tally()
+        for t in groups.values():
+            merged.merge(t)
+        assert canon(merged) == canon(m.composite())
+    with MasterServer(port=0) as m2:  # rollup off: empty map, flagged
+        m2.submit("x:1:rank0", _mk_tally(0))
+        groups, meta = query_groups(m2.addr)
+        assert not meta["rollup"] and groups == {}
+
+
+def test_rollup_local_master_forwards_groups(tmp_path):
+    """A local master with rollup_groups forwards group tallies upstream —
+    the >1k-rank pre-aggregation: the global master sees O(groups) sources."""
+    import time as _time
+
+    from repro.core.stream import MasterServer
+
+    with MasterServer(port=0) as top:
+        local = MasterServer(
+            port=0,
+            forward_to=top.addr,
+            forward_period_s=0.05,
+            rollup_groups="host",
+        ).start()
+        try:
+            for r in range(6):
+                local.submit(f"node{r % 2}:1:rank{r}", _mk_tally(r))
+            deadline = _time.monotonic() + 5.0
+            while _time.monotonic() < deadline:
+                if set(top.ranks()) == {"node0", "node1"}:
+                    break
+                _time.sleep(0.02)
+            assert set(top.ranks()) == {"node0", "node1"}
+            assert canon(top.composite()) == canon(local.composite())
+        finally:
+            local.stop()
+
+
+def test_ranks_copy_false_returns_frozen_snapshots():
+    from repro.core.stream import MasterServer
+
+    m = MasterServer(port=0)
+    m.submit("r0", _mk_tally(0))
+    first = m.ranks(copy=False)["r0"]
+    assert m.ranks(copy=False)["r0"] is first  # unchanged: same snapshot
+    grown = Tally().merge(first)
+    grown.apis[("ust_a", "api_0")].add(1)
+    m.submit("r0", grown, seq=1, gen=None)
+    second = m.ranks(copy=False)["r0"]
+    assert second is not first  # replaced wholesale, never mutated in place
+    assert first.apis[("ust_a", "api_0")].calls == 3

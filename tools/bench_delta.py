@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Benchmark regression delta: compare this run's BENCH_*.json against a
+previous run's artifacts and print a delta table.
+
+Warn-only by design (exit 0 always): CI runners are noisy shared machines,
+so the table is a trend signal for the reviewer, not a gate.  Metrics where
+*lower* is better (tracepoint costs, wall times) and where *higher* is
+better (events/s, reduction ratios) are annotated accordingly; deltas past
+``--warn-pct`` get a ``!!`` marker.
+
+    python tools/bench_delta.py --prev prev-bench/ --cur .
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+#: (json file, dotted key path, label, higher_is_better)
+METRICS = [
+    ("BENCH_smoke.json", "tracepoint_cost.disabled_ns", "tracepoint disabled ns", False),
+    ("BENCH_smoke.json", "tracepoint_cost.enabled_ns", "tracepoint enabled ns", False),
+    ("BENCH_smoke.json", "tracepoint_cost.drop_ns", "tracepoint drop ns", False),
+    ("BENCH_smoke.json", "aggregate_scale.merge_wall_s", "aggregate merge wall s", False),
+    ("BENCH_smoke.json", "analysis_speed.tally.fast_events_per_s", "tally fold ev/s", True),
+    ("BENCH_smoke.json", "analysis_speed.tally.speedup", "tally fold speedup x", True),
+    (
+        "BENCH_smoke.json",
+        "analysis_speed.composite.row_ops_ratio",
+        "composite row-ops ratio x",
+        True,
+    ),
+    ("BENCH_smoke.json", "stream_bw.ratio", "stream delta reduction x", True),
+    ("BENCH_stream_bw.json", "ratio", "stream_bw standalone x", True),
+]
+
+
+def _dig(doc: dict, path: str):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def _load(root: str, exclude: str = None) -> dict:
+    """filename → parsed JSON, for every BENCH_*.json under root (any depth —
+    artifact downloads sometimes nest).  ``exclude`` drops files under that
+    directory, so scanning the repo root for *current* results never sweeps
+    up the downloaded previous-run artifacts."""
+    out = {}
+    exclude_abs = os.path.abspath(exclude) + os.sep if exclude else None
+    for path in glob.glob(os.path.join(root, "**", "BENCH_*.json"), recursive=True):
+        if exclude_abs and os.path.abspath(path).startswith(exclude_abs):
+            continue
+        try:
+            with open(path) as f:
+                out.setdefault(os.path.basename(path), json.load(f))
+        except (OSError, json.JSONDecodeError):
+            pass
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prev", required=True, help="directory of the previous run's artifacts")
+    ap.add_argument("--cur", default=".", help="directory of this run's BENCH_*.json")
+    ap.add_argument("--warn-pct", type=float, default=20.0, help="flag deltas past this %%")
+    args = ap.parse_args()
+
+    prev, cur = _load(args.prev), _load(args.cur, exclude=args.prev)
+    if not prev:
+        print(f"[bench-delta] no previous BENCH_*.json under {args.prev!r} — first run?")
+        return 0
+    if not cur:
+        print(f"[bench-delta] no current BENCH_*.json under {args.cur!r}")
+        return 0
+
+    rows = []
+    warned = 0
+    for fname, keypath, label, higher_better in METRICS:
+        p = _dig(prev.get(fname, {}), keypath)
+        c = _dig(cur.get(fname, {}), keypath)
+        if p is None or c is None or p == 0:
+            continue
+        pct = 100.0 * (c - p) / abs(p)
+        regressed = (pct < 0) if higher_better else (pct > 0)
+        flag = "!!" if (regressed and abs(pct) >= args.warn_pct) else "  "
+        warned += flag == "!!"
+        arrow = "higher=better" if higher_better else "lower=better"
+        rows.append((label, p, c, pct, flag, arrow))
+
+    if not rows:
+        print("[bench-delta] no overlapping metrics between runs")
+        return 0
+    w = max(len(r[0]) for r in rows)
+    print(f"{'metric'.ljust(w)} | {'prev':>12} | {'cur':>12} | {'delta':>8} |")
+    print("-" * (w + 44))
+    for label, p, c, pct, flag, arrow in rows:
+        print(f"{label.ljust(w)} | {p:12.4g} | {c:12.4g} | {pct:+7.1f}% | {flag} ({arrow})")
+    if warned:
+        print(
+            f"[bench-delta] {warned} metric(s) moved past the {args.warn_pct:.0f}% "
+            "warn threshold (warn-only: not failing the job)"
+        )
+    return 0  # warn-only gate: never fail CI on shared-runner noise
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,20 +33,27 @@ CONFIGS = [
 
 def run(steps: int = 12, suite=SUITE, repeats: int = 1) -> Dict:
     rows: List[dict] = []
+    repeats = max(repeats, 1)
     for arch in suite:
         base = min(
-            run_training_workload(arch, steps)["wall_s"] for _ in range(max(repeats, 1))
+            run_training_workload(arch, steps)["wall_s"] for _ in range(repeats)
         )
         row = {"arch": arch, "baseline_s": base}
         for label, mode, sample in CONFIGS:
-            with tempfile.TemporaryDirectory() as d:
-                r = run_training_workload(
-                    arch,
-                    steps,
-                    trace=TraceConfig(out_dir=d, mode=mode, sample=sample),
-                )
-            row[label] = 100.0 * (r["wall_s"] - base) / base
-            row[f"{label}_events"] = r.get("events", 0)
+            # same min-of-repeats protocol as the baseline: a single traced
+            # run would fold run-to-run noise into the reported overhead %
+            best = None
+            for _ in range(repeats):
+                with tempfile.TemporaryDirectory() as d:
+                    r = run_training_workload(
+                        arch,
+                        steps,
+                        trace=TraceConfig(out_dir=d, mode=mode, sample=sample),
+                    )
+                if best is None or r["wall_s"] < best["wall_s"]:
+                    best = r
+            row[label] = 100.0 * (best["wall_s"] - base) / base
+            row[f"{label}_events"] = best.get("events", 0)
         rows.append(row)
     summary = {}
     for label, _, _ in CONFIGS:

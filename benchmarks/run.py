@@ -21,6 +21,8 @@ import time
 
 def run_smoke(json_path: str) -> None:
     """CI smoke: fast sections, crash on regression-shaped breakage, JSON out."""
+    import os
+
     from . import aggregate_scale, analysis_speed, stream_bw, tracepoint_cost
 
     results = {
@@ -28,11 +30,25 @@ def run_smoke(json_path: str) -> None:
         "python": platform.python_version(),
         "platform": platform.platform(),
     }
-    print("== smoke: §3.1 tracepoint hot-path cost ==")
+    print("== smoke: §3.1 collection hot-path cost (legacy vs reserve/commit) ==")
     tc = tracepoint_cost.run()
     for k, v in sorted(tc.items()):
-        print(f"  {k:26s} {v:12.1f}")
+        print(f"  {k:30s} {v:12.1f}")
     results["tracepoint_cost"] = tc
+    # standalone collection-path artifact, tracked by tools/bench_delta.py
+    coll_path = os.path.join(os.path.dirname(json_path) or ".", "BENCH_collection.json")
+    with open(coll_path, "w") as f:
+        json.dump(
+            {
+                "python": platform.python_version(),
+                "platform": platform.platform(),
+                **tc,
+            },
+            f,
+            indent=2,
+            sort_keys=True,
+        )
+    print(f"wrote {coll_path}")
 
     print("== smoke: §3.4 analysis throughput (fold vs legacy graph) ==")
     an = analysis_speed.run(events=200_000, ranks=256)
@@ -105,6 +121,7 @@ def main() -> None:
     csv.append(("tracepoint_disabled", tc["disabled_ns"] / 1000, "ns->us per call"))
     csv.append(("tracepoint_enabled", tc["enabled_ns"] / 1000, "us per call"))
     csv.append(("tracepoint_drop", tc["drop_ns"] / 1000, "us per discarded event"))
+    csv.append(("collection_pair_speedup", tc["speedup_pair"], "x vs legacy write path"))
 
     print("\n== Fig 7 runtime overhead per tracing mode ==")
     ov = overhead.run(steps=steps, suite=suite)

@@ -1,59 +1,146 @@
 """§3.1 — tracepoint hot-path cost (LTTng's 'order of nanoseconds' claim).
 
 Measures, per event:
+  * timing-harness overhead (calibrated out: the loop + lambda cost);
   * disabled tracepoint (no session) — the always-paid cost;
-  * enabled tracepoint → ring write;
+  * enabled tracepoint on the legacy bytes-write path (``ring_reserve=False``:
+    per-segment ``pack`` + concatenation + ``RingBuffer.write`` copy);
+  * enabled tracepoint on the zero-allocation reserve/commit path
+    (``pack_into`` directly into ring storage);
+  * the paper's running-example workload — a memcpy API call, i.e. an
+    entry+exit *pair* — on both paths.  The reserve path frames the pair
+    through one fused recorder (one reservation, one publish), which is the
+    headline ``speedup_pair`` number;
   * drop path (ring full, discard mode);
-  * consumer drain throughput.
+  * producer throughput with a zero-copy consumer drain.
 
 LTTng's C tracepoints cost ~ns; our Python-generated recorders land in the
-µs regime — the *relative* claim that disabled ≪ enabled and that drops
-never block is the architecture property being validated (DESIGN.md §7).
+µs regime — the *relative* claims (disabled ≪ enabled, drops never block,
+reserve/commit ≥3x the legacy path on the pair workload) are the
+architecture properties being validated.
+
+    PYTHONPATH=src python -m benchmarks.tracepoint_cost [--json out.json]
+
+Raw numbers include the timing loop + lambda dispatch; net numbers subtract
+the calibrated ``loop_overhead_ns`` (measured with a no-op lambda through
+the same harness).  Speedups compare net values.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import statistics
 import time
 from typing import Dict
 
 from repro.core.api_model import builtin_trace_model
+from repro.core.clock import now
 from repro.core.ringbuffer import RingRegistry
 from repro.core.tracepoints import Tracepoints
 
 
-def _time_per_call(fn, n: int = 50_000) -> float:
+def _time_block(fn, n: int) -> float:
+    """One timing pass: ns per ``fn()`` call over ``n`` calls."""
     t0 = time.perf_counter_ns()
     for _ in range(n):
         fn()
     return (time.perf_counter_ns() - t0) / n
 
 
+def _time_per_call(fn, n: int = 50_000, repeats: int = 5, prep=None) -> float:
+    """min-of-repeats ns per ``fn()`` call; ``prep`` runs untimed per repeat."""
+    best = float("inf")
+    for _ in range(repeats):
+        if prep is not None:
+            prep()
+        best = min(best, _time_block(fn, n))
+    return best
+
+
 def run() -> Dict[str, float]:
     model = builtin_trace_model()
     tp = Tracepoints(model)
     rec = tp.record["ust_jaxrt:memcpy_entry"]
+    rex = tp.record["ust_jaxrt:memcpy_exit"]
+    pair = tp.record_pair["ust_jaxrt:memcpy"]
+
     call = lambda: rec(0x1234, 0xFF00_5678, 1 << 20, 0, b"")
 
+    def legacy_pair_call():  # the running-example API call: entry + exit
+        rec(0x1234, 0xFF00_5678, 1 << 20, 0, b"")
+        rex(0)
+
+    fused_pair_call = lambda: pair(0x1234, 0xFF00_5678, 1 << 20, 0, b"", now(), 0)
+
     out: Dict[str, float] = {}
+    # harness calibration: loop + lambda dispatch, nothing else
+    nop = lambda: None
+    ov = out["loop_overhead_ns"] = _time_per_call(nop)
+
     out["disabled_ns"] = _time_per_call(call)  # no session attached
+    out["disabled_net_ns"] = out["disabled_ns"] - ov
 
-    reg = RingRegistry(1 << 22, pid=1)
-    tp.attach(reg, range(len(model.events)))
-    out["enabled_ns"] = _time_per_call(call)
+    reg = RingRegistry(1 << 24, pid=1)
+    drain = lambda: [r.drain() for r in reg.rings()]
 
-    # throughput + consumer drain
+    # Legacy vs reserve, interleaved round-robin: each round measures every
+    # configuration back-to-back, so machine-wide drift (CI runner
+    # throttling) hits both paths alike.  ns metrics take the min over
+    # rounds; speedups take the *median of per-round ratios*, which stays
+    # honest even when whole rounds land in a throttled window.
+    n, rounds = 50_000, 9
+    best = {k: float("inf") for k in ("ls", "lp", "rs", "rp")}
+    ratios_single, ratios_pair = [], []
+    eids = range(len(model.events))
+    for _ in range(rounds):
+        tp.attach(reg, eids, ring_reserve=False)
+        drain()
+        ls = _time_block(call, n)
+        drain()
+        lp = _time_block(legacy_pair_call, n // 2)
+        tp.attach(reg, eids, ring_reserve=True)
+        drain()
+        rs = _time_block(call, n)
+        drain()
+        rp = _time_block(fused_pair_call, n // 2)
+        o = _time_block(nop, n)
+        ov = min(ov, o)
+        best["ls"] = min(best["ls"], ls)
+        best["lp"] = min(best["lp"], lp)
+        best["rs"] = min(best["rs"], rs)
+        best["rp"] = min(best["rp"], rp)
+        ratios_single.append((ls - o) / (rs - o))
+        ratios_pair.append((lp - o) / (rp - o))
+    out["loop_overhead_ns"] = ov
+    out["legacy_enabled_ns"] = best["ls"]
+    out["legacy_enabled_net_ns"] = best["ls"] - ov
+    out["legacy_pair_ns_per_event"] = best["lp"] / 2
+    out["legacy_pair_net_ns_per_event"] = (best["lp"] - ov) / 2
+    out["enabled_ns"] = best["rs"]
+    out["enabled_net_ns"] = best["rs"] - ov
+    out["pair_ns_per_event"] = best["rp"] / 2
+    out["pair_net_ns_per_event"] = (best["rp"] - ov) / 2
+
+    out["speedup_single"] = statistics.median(ratios_single)
+    out["speedup_pair"] = statistics.median(ratios_pair)
+
+    # throughput + zero-copy consumer drain (reserve path, pair workload)
+    rb = reg.get()
+    rb.drain()
     n = 200_000
     t0 = time.perf_counter_ns()
-    for _ in range(n):
-        call()
-        if reg.get().used > (1 << 21):
-            reg.get().drain()
+    for _ in range(n // 2):
+        fused_pair_call()
+        if rb.used > (1 << 21):
+            rb.drain_view()
+            rb.release()
     dt = time.perf_counter_ns() - t0
     out["throughput_events_per_s"] = n / (dt / 1e9)
 
     # drop path: fill the ring, measure discard cost
     small = RingRegistry(1 << 10, pid=2)
-    tp.attach(small, range(len(model.events)))
+    tp.attach(small, range(len(model.events)), ring_reserve=True)
     while small.get().dropped == 0:
         call()
     out["drop_ns"] = _time_per_call(call)
@@ -64,12 +151,22 @@ def run() -> Dict[str, float]:
     return out
 
 
-def main():
+def main(json_path=None):
     out = run()
     for k, v in out.items():
-        print(f"  {k:28s} {v:,.0f}")
+        print(f"  {k:28s} {v:,.1f}")
+    print(
+        f"  -> pair workload speedup (net): {out['speedup_pair']:.2f}x, "
+        f"single record: {out['speedup_single']:.2f}x"
+    )
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
     return out
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write results as JSON")
+    main(ap.parse_args().json)

@@ -86,17 +86,25 @@ class StreamWriter:
             self._finish = None
             self._out = self._f
         self._out.write(STREAM_HEADER.pack(MAGIC, VERSION, 0))
-        self._seen_dropped = 0
+        #: drop count already materialized as discard records; the consumer
+        #: compares against the ring's live counter to skip no-op calls
+        self.seen_dropped = 0
         self.bytes_written = STREAM_HEADER.size
 
-    def append(self, chunk: bytes) -> None:
+    def append(self, chunk) -> None:
+        """Append raw framed-record bytes — accepts any bytes-like object.
+
+        The zero-copy drain hands ``memoryview`` regions straight from ring
+        storage; the buffered file object copies them out during ``write``,
+        so the view may be released as soon as this returns.
+        """
         if chunk:
             self._out.write(chunk)
             self.bytes_written += len(chunk)
 
     def note_drops(self, total_dropped: int, ts_ns: int) -> None:
         """Emit a ctf:events_discarded record if the drop counter advanced."""
-        delta = total_dropped - self._seen_dropped
+        delta = total_dropped - self.seen_dropped
         if delta > 0:
             payload = struct.pack("<Q", delta)
             rec = RECORD_HEADER.pack(
@@ -104,7 +112,7 @@ class StreamWriter:
             ) + payload
             self._out.write(rec)
             self.bytes_written += len(rec)
-            self._seen_dropped = total_dropped
+            self.seen_dropped = total_dropped
 
     def close(self) -> None:
         if not self._f.closed:

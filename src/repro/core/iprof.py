@@ -52,6 +52,7 @@ def _run(args) -> int:
         stream_resync_every=args.stream_resync_every,
         serve_port=args.serve_port,
         legacy_graph=args.legacy_graph,
+        ring_reserve=not args.no_ring_reserve,
     )
     old_argv = sys.argv
     sys.argv = [target] + list(args.args)
@@ -290,6 +291,12 @@ def build_parser() -> argparse.ArgumentParser:
         "--legacy-graph",
         action="store_true",
         help="aggregate-only tallying via the legacy Babeltrace-style graph",
+    )
+    r.add_argument(
+        "--no-ring-reserve",
+        action="store_true",
+        help="recorders use the legacy bytes-build + ring write path instead "
+        "of the zero-allocation reserve/commit pack_into codegen",
     )
     r.add_argument("entry", help="pkg.module:function")
     r.add_argument("args", nargs="*")

@@ -59,9 +59,12 @@ class OnlineAnalyzer:
         """Cumulative ctf:events_discarded count observed in the feed."""
         return self._state.discarded
 
-    def feed(self, chunk: bytes, pid: int = 0, tid: int = 0) -> None:
+    def feed(self, chunk, pid: int = 0, tid: int = 0) -> None:
         """Fold one drained ring-buffer chunk into the live tally.
 
+        ``chunk`` is any bytes-like object; the tracer's zero-copy drain
+        passes a ``memoryview`` over ring storage directly (the fold is
+        synchronous, so the region may be released when this returns).
         Entry events open per-``(pid, tid)``, per-API LIFO stacks; exits pop
         and accumulate; device spans accumulate directly; discard records
         bump ``discarded``.  One shared fold pass, one memoryview per chunk.

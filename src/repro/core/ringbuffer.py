@@ -11,13 +11,35 @@ design is single-producer/single-consumer:
 
   producer (traced thread)  — writes framed records at ``head``; only ever
                               advances ``head``; never blocks; drops when full.
-  consumer (flusher daemon) — copies the committed region and advances
+  consumer (flusher daemon) — reads the committed region and advances
                               ``tail``; never touches ``head``.
 
 ``head``/``tail`` are monotonically increasing Python ints; a reader sees
 either the old or the new binding (GIL-atomic), so the committed prefix is
 always consistent.  Data is written *before* ``head`` is published, which is
 the same publish protocol as LTTng's sub-buffer commit counters.
+
+Two producer protocols share that publish ordering:
+
+  ``write(record)``        — legacy: the caller builds the framed record as
+                             one ``bytes`` object and the ring copies it in.
+  ``reserve(n)/commit(n)`` — zero-allocation: the producer asks for ``n``
+                             contiguous bytes, packs fields *directly into
+                             ring storage* (``wbuf`` at the returned offset)
+                             and then publishes.  On the common non-wrap path
+                             no intermediate object is allocated; when the
+                             record would straddle the physical end of the
+                             ring, ``reserve`` stages the write through one
+                             reusable per-ring scratch ``bytearray`` and
+                             ``commit`` copies the two halves into place —
+                             the ring *content* is identical either way.
+
+Producers on the reserve path may additionally bound-check against ``_lim``
+(`head`-space address below which a record is guaranteed to fit without
+wrapping or overwriting unconsumed data) to skip ``reserve`` entirely:
+``_lim`` is only ever advanced by ``reserve`` from a fresh ``tail`` read, so
+a stale value is conservative — the generated tracepoints lean on this for
+their single-compare fast path.
 
 Record framing (little-endian):
     u32  total record length (including this header)
@@ -30,7 +52,7 @@ from __future__ import annotations
 
 import struct
 import threading
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 RECORD_HEADER = struct.Struct("<IHQ")
 RECORD_HEADER_SIZE = RECORD_HEADER.size  # 14 bytes
@@ -43,10 +65,15 @@ class RingBuffer:
         "capacity",
         "_mask",
         "_buf",
+        "_mv",
         "head",
         "tail",
         "dropped",
         "events",
+        "wbuf",
+        "_scratch",
+        "_lim",
+        "_pending",
         "pid",
         "tid",
         "tname",
@@ -58,10 +85,19 @@ class RingBuffer:
         self.capacity = capacity
         self._mask = capacity - 1
         self._buf = bytearray(capacity)
+        self._mv = memoryview(self._buf)  # zero-copy drain slices come from here
         self.head = 0  # producer-owned
         self.tail = 0  # consumer-owned
         self.dropped = 0  # producer-owned (discard-mode counter)
-        self.events = 0
+        self.events = 0  # records written (write()/recorders; commit() is agnostic)
+        #: buffer the producer packs into after ``reserve``: the ring storage
+        #: itself on the non-wrap path, the scratch staging area otherwise
+        self.wbuf = self._buf
+        self._scratch = bytearray(0)
+        #: producer-cached fast-path bound: head-space address up to which a
+        #: record fits without wrap/overwrite. Stale values are conservative.
+        self._lim = capacity
+        self._pending = 0  # head snapshot of the outstanding drain_view
         self.pid = pid
         self.tid = tid
         self.tname = tname
@@ -87,6 +123,53 @@ class RingBuffer:
         self.events += 1
         return True
 
+    def reserve(self, n: int) -> int:
+        """Claim ``n`` bytes; return the ``wbuf`` offset to pack into, -1 = drop.
+
+        Does not publish: the producer packs the record into ``self.wbuf`` at
+        the returned offset, then calls :meth:`commit`.  ``head`` is untouched
+        until then, so an exception between reserve and commit leaves the ring
+        consistent (the reservation is simply forgotten).  Also refreshes
+        ``_lim`` from a fresh ``tail`` read so subsequent records can skip
+        straight to packing while ``head + n <= _lim`` holds.
+        """
+        h = self.head
+        if n > self.capacity - (h - self.tail):
+            self.dropped += 1
+            return -1
+        o = h & self._mask
+        # fast-path bound for the generated recorders: stop at whichever comes
+        # first, the consumer's tail + one capacity or the physical wrap point
+        self._lim = min(self.tail + self.capacity, h - o + self.capacity)
+        if o + n <= self.capacity:
+            self.wbuf = self._buf
+            return o
+        # wrap: stage through the reusable scratch buffer (rare; one
+        # allocation the first time it grows, then reused)
+        if len(self._scratch) < n:
+            self._scratch = bytearray(n)
+        self.wbuf = self._scratch
+        return 0
+
+    def commit(self, n: int) -> None:
+        """Publish the ``n`` bytes packed after :meth:`reserve`.
+
+        Non-wrap: the record is already in ring storage; publishing is one
+        ``head`` store.  Wrap: copy the scratch halves into place first (data
+        lands before ``head`` moves — same ordering as :meth:`write`).
+        ``events`` is *not* incremented here: reserve/commit callers account
+        records themselves (a fused pair recorder commits two at once).
+        """
+        wb = self.wbuf
+        if wb is not self._buf:
+            h = self.head & self._mask
+            k = self.capacity - h
+            mv = memoryview(wb)
+            self._buf[h:] = mv[:k]
+            self._buf[: n - k] = mv[k:n]
+            self.wbuf = self._buf
+        self.head += n  # publish (single int store under the GIL)
+
     # -- consumer side ---------------------------------------------------------
 
     def drain(self) -> bytes:
@@ -104,6 +187,34 @@ class RingBuffer:
             out = bytes(self._buf[lo:]) + bytes(self._buf[: end - self.capacity])
         self.tail = h  # release
         return out
+
+    def drain_view(self) -> Tuple[memoryview, ...]:
+        """Zero-copy drain: memoryview region(s) over the committed bytes.
+
+        Returns ``()`` when empty, one region on the common path, two when the
+        committed bytes straddle the physical end of the ring (records may be
+        split across the pair — join before frame-parsing them).  The region
+        is NOT released: the caller must finish consuming the views and then
+        call :meth:`release`, or the producer could overwrite bytes still
+        being read.  Consumer-only.
+        """
+        t = self.tail
+        h = self.head  # snapshot; producer may advance after this — fine
+        self._pending = h
+        n = h - t
+        if n == 0:
+            return ()
+        lo = t & self._mask
+        end = lo + n
+        mv = self._mv
+        if end <= self.capacity:
+            return (mv[lo:end],)
+        return (mv[lo:], mv[: end - self.capacity])
+
+    def release(self) -> None:
+        """Release the region returned by the last :meth:`drain_view`."""
+        if self._pending > self.tail:  # guard against drain()/drain_view() mixes
+            self.tail = self._pending
 
     @property
     def used(self) -> int:

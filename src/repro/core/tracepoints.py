@@ -9,15 +9,45 @@ type of the trace model we *generate source code* for
   * an **unpacker** — the inverse, used by the Babeltrace-style analysis
     layer (and by Metababel's generated dispatchers), guaranteeing that the
     write and read sides can never drift apart because they come from the
-    same schema.
+    same schema;
+  * a **pair recorder** for every entry/exit API — one call that frames both
+    records in a single reserved region (the wrapper supplies the entry
+    timestamp it captured before the traced work ran).
 
-The generated recorder hot path is branch-light:
+Two code variants are compiled per recorder and swapped via ``__code__`` at
+session attach (so callables cached by the interception layer stay valid):
 
-    def ust_jaxrt__memcpy_entry(src, dst, nbytes, kind):
-        if not _enabled[7]: return
-        _rb = _rings.get()
-        _p = _S.pack(src, dst, nbytes, kind)
-        _rb.write(_H.pack(14 + len(_p), 7, _now()) + _p)
+``ring_reserve=True`` (default) — the zero-allocation hot path.  The record
+layout is compiled into fused ``struct`` formats (header + fixed fields +
+varlen length prefixes collapse into ONE ``pack_into`` per contiguous run)
+written directly into ring storage through the reserve/commit protocol.  The
+per-thread ``(ring, storage, mask)`` binding is cached after first touch at
+``_tls.c`` — one attribute load on the session registry's thread-local, no
+registry/holder call chain — and the single-compare ``_lim`` bound skips
+even the ``reserve()`` call on the common path.  Runtime helpers ride in
+trailing positional defaults (LOAD_FAST, not LOAD_GLOBAL); session-scoped
+ones (``_tls``) are refreshed through ``fn.__defaults__`` at attach.  The
+generated fast path looks like:
+
+    def ust_jaxrt__memcpy_entry(src, dst, nbytes, kind, payload_head,
+                                _e=..., _bytes=..., _len=..., _tls=..., _bind=..., _now=..., _pk0=...):
+        if not _e[7]: return
+        _v0 = payload_head if payload_head.__class__ is _bytes else ...
+        _k0 = _len(_v0)
+        _n = 43 + _k0
+        try:
+            _ct = _tls.c
+        except AttributeError:
+            _ct = _bind()          # first touch: bind this thread's ring
+        _rb = _ct[0]; _h = _rb.head
+        if _h + _n <= _rb._lim:
+            _pk0(_ct[1], _h & _ct[2], _n, 7, _now(), src, dst, nbytes, kind, _k0)
+            ...
+            _rb.head = _h + _n
+
+``ring_reserve=False`` — the legacy bytes-write escape hatch: per-segment
+``_S.pack`` objects concatenated and handed to ``RingBuffer.write``.  Both
+variants produce byte-identical ring content for the same inputs and clock.
 
 Per-event enablement (`_enabled`, a flat list of ints) is LTTng's selective
 event activation (§3.2): the tracer flips entries per tracing mode; with no
@@ -27,7 +57,8 @@ active session every entry is 0 and tracepoints cost one list index + branch.
 from __future__ import annotations
 
 import struct
-from typing import Callable, Dict, List, Optional, Sequence
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .api_model import FIELD_CLASSES, VARLEN, EventType, TraceModel
 from .clock import now
@@ -64,36 +95,335 @@ def _segments(fields) -> List:
 
 
 # ---------------------------------------------------------------------------
-# Recorder codegen
+# Reserve-mode codegen: record layout → fused pack_into program
 # ---------------------------------------------------------------------------
 
 
-def codegen_recorder(ev: EventType) -> str:
+class _RecordPlan:
+    """One record of a recorder (a pair recorder has two)."""
+
+    def __init__(self, ev: EventType, ts_expr: str, arg_prefix: str = ""):
+        self.ev = ev
+        self.ts_expr = ts_expr  # python expr for the header timestamp
+        self.arg_prefix = arg_prefix  # disambiguates pair exit args
+        self.segs = _segments(ev.fields)
+        self.const = RECORD_HEADER_SIZE + sum(
+            seg[2].size if seg[0] == "fixed" else 4 for seg in self.segs
+        )
+        self.kterms: List[str] = []  # filled by the walker
+
+    def arg(self, p) -> str:
+        return self.arg_prefix + p.name
+
+    @property
+    def size_expr(self) -> str:
+        return " + ".join([str(self.const)] + self.kterms)
+
+
+def _compile_records(records: List[_RecordPlan]):
+    """Lay out one or more framed records into a fused pack_into program.
+
+    Returns (prologue, ops, fmts, total_const, total_kterms, mega_vals).
+    ``ops`` interleaves ("pack", fmt_idx, vals, off) and ("data", v, k, off)
+    preserving byte order; ``off`` is (const, [k-terms]) relative to the
+    reserved offset.  ``mega_vals`` is the all-varlens-empty value list for
+    the single fused struct covering every byte (None when any group is
+    impossible to fuse — i.e. never; it is None only when there is no varlen
+    at all, in which case ``ops`` is already a single pack).
+    """
+    prologue: List[str] = []
+    ops: List[tuple] = []
+    fmts: List[str] = []
+    mega_fmt = ""
+    mega_vals: List[str] = []
+    cur_fmt = ""
+    cur_vals: List[str] = []
+    cur_off: Optional[Tuple[int, List[str]]] = None
+    const = 0
+    terms: List[str] = []
+    vidx = 0
+
+    def flush():
+        nonlocal cur_fmt, cur_vals, cur_off
+        if cur_fmt:
+            fmts.append("<" + cur_fmt)
+            ops.append(("pack", len(fmts) - 1, cur_vals, cur_off))
+        cur_fmt, cur_vals, cur_off = "", [], None
+
+    def add(fmt: str, vals: List[str], mvals: List[str]):
+        nonlocal cur_fmt, cur_off, mega_fmt
+        if not cur_fmt:
+            cur_off = (const, list(terms))
+        cur_fmt += fmt
+        cur_vals.extend(vals)
+        mega_fmt += fmt
+        mega_vals.extend(mvals)
+
+    for rec in records:
+        # precompute this record's own varlen terms (header needs its size)
+        own = [f"_k{vidx + j}" for j, seg in enumerate(
+            s for s in rec.segs if s[0] == "var")]
+        rec.kterms = own
+        add(
+            "IHQ",
+            [rec.size_expr, str(rec.ev.eid), rec.ts_expr],
+            [str(rec.const), str(rec.ev.eid), rec.ts_expr],
+        )
+        const += RECORD_HEADER_SIZE
+        for seg in rec.segs:
+            if seg[0] == "fixed":
+                _, params, st = seg
+                names = [rec.arg(p) for p in params]
+                add(st.format[1:], names, names)
+                const += st.size
+            else:
+                _, p = seg
+                v, k = f"_v{vidx}", f"_k{vidx}"
+                name = rec.arg(p)
+                if p.cls == "str":
+                    prologue.append(
+                        f"    {v} = {name}.encode() if {name}.__class__ is _str else _bytes({name})"
+                    )
+                else:
+                    prologue.append(
+                        f"    {v} = {name} if {name}.__class__ is _bytes else _bytes({name})"
+                    )
+                prologue.append(f"    {k} = _len({v})")
+                add("I", [k], ["0"])
+                const += 4
+                flush()
+                ops.append(("data", v, k, (const, list(terms))))
+                terms.append(k)
+                vidx += 1
+    flush()
+    if terms:
+        fmts.append("<" + mega_fmt)
+    else:
+        mega_vals = None  # no varlen: the general program is one static pack
+    return prologue, ops, fmts, const, terms, mega_vals
+
+
+def _off_expr(off: Tuple[int, List[str]]) -> str:
+    const, terms = off
+    parts = ["_o"] + ([str(const)] if const else []) + terms
+    return " + ".join(parts)
+
+
+def _emit_pack_block(ops, indent: str) -> List[str]:
+    lines = []
+    for op in ops:
+        if op[0] == "pack":
+            _, idx, vals, off = op
+            lines.append(f"{indent}_pk{idx}(_b, {_off_expr(off)}, {', '.join(vals)})")
+        else:
+            _, v, k, off = op
+            lines.append(f"{indent}_s = {_off_expr(off)}")
+            lines.append(f"{indent}_b[_s:_s + {k}] = {v}")
+    return lines
+
+
+def _reserve_body(
+    records: List[_RecordPlan], nrecords: int, extra_drop: int
+) -> Tuple[List[str], List[str], List[str]]:
+    """Shared reserve-mode body (after the enablement check).
+
+    Returns (lines, default_params, struct_formats).  ``extra_drop`` adds to
+    ``dropped`` on a failed reserve beyond the 1 reserve() itself counts (a
+    dropped pair discards two events).
+
+    The per-thread binding ``(ring, storage, mask)`` lives at ``_tls.c``,
+    where ``_tls`` is the *session registry's* ``threading.local`` (rebound
+    into the recorder defaults at attach).  Thread-local storage dies with
+    its thread, so a recycled thread ident can never alias a dead thread's
+    ring, and every recorder shares the one binding per thread.
+    """
+    prologue, ops, fmts, const, terms, mega_vals = _compile_records(records)
+    lines = list(prologue)
+    lines.append(f"    _n = {' + '.join([str(const)] + terms)}")
+    lines.append("    try:")
+    lines.append("        _ct = _tls.c")
+    lines.append("    except AttributeError:")
+    lines.append("        _ct = _bind()")
+    lines.append("    _rb = _ct[0]")
+    lines.append("    _h = _rb.head")
+    lines.append("    if _h + _n <= _rb._lim:")
+    lines.append("        _b = _ct[1]")
+    lines.append("        _o = _h & _ct[2]")
+    if mega_vals is not None:
+        mega_idx = len(fmts) - 1
+        any_k = " or ".join(terms)
+        lines.append(f"        if {any_k}:")
+        lines.extend(_emit_pack_block(ops, " " * 12))
+        lines.append("        else:")
+        lines.append(
+            f"            _pk{mega_idx}(_b, _o, {', '.join(mega_vals)})"
+        )
+    else:
+        lines.extend(_emit_pack_block(ops, " " * 8))
+    lines.append("        _rb.head = _h + _n")
+    lines.append(f"        _rb.events += {nrecords}")
+    lines.append("        return")
+    lines.append("    _o = _rb.reserve(_n)")
+    lines.append("    if _o < 0:")
+    if extra_drop:
+        lines.append(f"        _rb.dropped += {extra_drop}")
+    lines.append("        return")
+    lines.append("    _b = _rb.wbuf")
+    lines.extend(_emit_pack_block(ops, "    "))
+    lines.append("    _rb.commit(_n)")
+    lines.append(f"    _rb.events += {nrecords}")
+
+    # helpers ride in trailing positional defaults: LOAD_FAST, not LOAD_GLOBAL.
+    # The flag lists are mutated in place by attach()/set_event (never
+    # rebound), so binding the list object at def time is safe; `_tls` is
+    # session state and gets refreshed via fn.__defaults__ at attach/detach.
+    defaults = ["_e=_enabled"] if len(records) == 1 else ["_e2=_enabled2"]
+    if terms:
+        defaults.extend(["_bytes=_bytes", "_len=_len"])
+        if any(
+            seg[0] == "var" and seg[1].cls == "str"
+            for rec in records
+            for seg in rec.segs
+        ):
+            defaults.append("_str=_str")
+    defaults.extend(["_tls=_tls", "_bind=_bind", "_now=_now"])
+    defaults.extend(f"_pk{i}=_PK{i}" for i in range(len(fmts)))
+    return lines, defaults, fmts
+
+
+# ---------------------------------------------------------------------------
+# Legacy codegen (the bytes-write escape hatch, ring_reserve=False)
+# ---------------------------------------------------------------------------
+
+
+def _legacy_payload_lines(
+    ev: EventType, sname: str, pname: str, prefix: str = "", indent: str = "    "
+) -> Tuple[List[str], str]:
+    """Current-behavior payload build: per-segment packs + concatenation."""
+    lines = []
+    parts = []
+    for i, seg in enumerate(_segments(ev.fields)):
+        if seg[0] == "fixed":
+            _, params, _ = seg
+            argl = ", ".join(prefix + p.name for p in params)
+            lines.append(f"{indent}{pname}{i} = {sname}{i}.pack({argl})")
+        else:
+            _, p = seg
+            name = prefix + p.name
+            if p.cls == "str":
+                lines.append(
+                    f"{indent}_lv{pname}{i} = {name}.encode() if type({name}) is str else bytes({name})"
+                )
+            else:
+                lines.append(f"{indent}_lv{pname}{i} = bytes({name})")
+            lines.append(f"{indent}{pname}{i} = _L.pack(len(_lv{pname}{i})) + _lv{pname}{i}")
+        parts.append(f"{pname}{i}")
+    payload = " + ".join(parts) if parts else "b''"
+    return lines, payload
+
+
+# ---------------------------------------------------------------------------
+# Recorder codegen (both variants)
+# ---------------------------------------------------------------------------
+
+
+def codegen_recorder(ev: EventType, reserve: bool = True) -> str:
     """Source for one tracepoint function (≙ one TRACEPOINT_EVENT of Fig 3)."""
     args = [p.name for p in ev.fields]
     fname = ev.name.replace(":", "__")
-    lines = [f"def {fname}({', '.join(args)}):"]
+    if reserve:
+        body, defaults, _ = _reserve_body(
+            [_RecordPlan(ev, "_now()")], nrecords=1, extra_drop=0
+        )
+        sig = ", ".join(args + defaults)
+        lines = [f"def {fname}({sig}):"]
+        lines.append(f"    if not _e[{ev.eid}]: return")
+        lines.extend(body)
+        return "\n".join(lines)
+    # legacy: identical behavior to the historical bytes-write recorder, with
+    # the reserve variant's signature so __code__ swapping stays legal
+    _, defaults, _ = _reserve_body([_RecordPlan(ev, "_now()")], 1, 0)
+    sig = ", ".join(args + defaults)
+    lines = [f"def {fname}({sig}):"]
     lines.append(f"    if not _enabled[{ev.eid}]: return")
-    segs = _segments(ev.fields)
-    parts = []
-    for i, seg in enumerate(segs):
-        if seg[0] == "fixed":
-            _, params, _ = seg
-            argl = ", ".join(p.name for p in params)
-            lines.append(f"    _p{i} = _S{i}.pack({argl})")
-        else:
-            _, p = seg
-            if p.cls == "str":
-                lines.append(f"    _v{i} = {p.name}.encode() if type({p.name}) is str else bytes({p.name})")
-            else:
-                lines.append(f"    _v{i} = bytes({p.name})")
-            lines.append(f"    _p{i} = _L.pack(len(_v{i})) + _v{i}")
-        parts.append(f"_p{i}")
-    payload = " + ".join(parts) if parts else "b''"
+    pay_lines, payload = _legacy_payload_lines(ev, "_S", "_p")
+    lines.extend(pay_lines)
     lines.append(f"    _p = {payload}")
     lines.append(
         f"    _rings.get().write(_H.pack({RECORD_HEADER_SIZE} + len(_p), {ev.eid}, _now()) + _p)"
     )
+    return "\n".join(lines)
+
+
+def codegen_pair_recorder(
+    entry_ev: EventType, exit_ev: EventType, pair_idx: int, reserve: bool = True
+) -> str:
+    """Source for a fused entry/exit recorder: two framed records, one call.
+
+    Signature: ``(<entry args>, _ts_entry, <exit args prefixed x_>)`` — the
+    wrapper captures the entry timestamp before the traced work and records
+    both events after it, halving the per-call overhead of the hottest
+    interception pattern (the paper's memcpy running example; polling fences).
+    The pair is atomic under discard: both records or neither (``dropped``
+    advances by 2).  Enablement is one precomputed flag (``_enabled2``,
+    maintained at attach/set_event); when overrides split the pair, a
+    still-enabled entry is written with the caller's ``_ts_entry`` (not a
+    fresh clock read — its timestamp must not shift because the *other*
+    event of the pair was disabled) and a still-enabled exit goes through
+    its single recorder.
+    """
+    e_args = [p.name for p in entry_ev.fields]
+    x_args = ["x_" + p.name for p in exit_ev.fields]
+    fname = entry_ev.name.replace(":", "__").replace("_entry", "_pair")
+
+    def fallback(flag_expr):
+        fa_lines, fa_payload = _legacy_payload_lines(
+            entry_ev, "_SA", "_fa", indent=" " * 12
+        )
+        return [
+            f"    if not {flag_expr}:",
+            f"        if _enabled[{entry_ev.eid}]:",
+            *fa_lines,
+            f"            _fa = {fa_payload}",
+            f"            _rings.get().write(_H.pack({RECORD_HEADER_SIZE} + len(_fa), "
+            f"{entry_ev.eid}, _ts_entry) + _fa)",
+            f"        if _enabled[{exit_ev.eid}]: _rec_exit({', '.join(x_args)})",
+            "        return",
+        ]
+
+    records = [
+        _RecordPlan(entry_ev, "_ts_entry"),
+        _RecordPlan(exit_ev, "_now()", arg_prefix="x_"),
+    ]
+    if reserve:
+        body, defaults, _ = _reserve_body(records, nrecords=2, extra_drop=1)
+        sig = ", ".join(e_args + ["_ts_entry"] + x_args + defaults)
+        lines = [f"def {fname}({sig}):"]
+        lines.extend(fallback(f"_e2[{pair_idx}]"))
+        lines.extend(body)
+        return "\n".join(lines)
+    _, defaults, _ = _reserve_body(records, 2, 1)
+    sig = ", ".join(e_args + ["_ts_entry"] + x_args + defaults)
+    lines = [f"def {fname}({sig}):"]
+    lines.extend(fallback(f"_enabled2[{pair_idx}]"))
+    pay_a, payload_a = _legacy_payload_lines(entry_ev, "_SA", "_pa")
+    lines.extend(pay_a)
+    lines.append(f"    _pa = {payload_a}")
+    lines.append(
+        f"    _r1 = _H.pack({RECORD_HEADER_SIZE} + len(_pa), {entry_ev.eid}, _ts_entry) + _pa"
+    )
+    pay_b, payload_b = _legacy_payload_lines(exit_ev, "_SB", "_pb", prefix="x_")
+    lines.extend(pay_b)
+    lines.append(f"    _pb = {payload_b}")
+    lines.append(
+        f"    _r2 = _H.pack({RECORD_HEADER_SIZE} + len(_pb), {exit_ev.eid}, _now()) + _pb"
+    )
+    lines.append("    _rb = _rings.get()")
+    lines.append("    if len(_r1) + len(_r2) > _rb.capacity - (_rb.head - _rb.tail):")
+    lines.append("        _rb.dropped += 2")
+    lines.append("        return")
+    lines.append("    _rb.write(_r1)")
+    lines.append("    _rb.write(_r2)")
     return "\n".join(lines)
 
 
@@ -119,31 +449,48 @@ def codegen_unpacker(ev: EventType) -> str:
 class Tracepoints:
     """All generated recorders/unpackers for one trace model.
 
-    ``record[name]`` — tracepoint callables keyed by event name.
-    ``unpack[eid]``  — payload unpackers keyed by event id.
-    ``enabled``      — per-event activation flags (shared with recorders).
+    ``record[name]``       — tracepoint callables keyed by event name.
+    ``record_pair[api]``   — fused entry/exit recorders keyed "provider:api".
+    ``unpack[eid]``        — payload unpackers keyed by event id.
+    ``enabled``            — per-event activation flags (shared with recorders).
+    ``clock``              — timestamp source (injectable for byte-identity
+                             tests; defaults to the trace clock).
     """
 
-    def __init__(self, model: TraceModel):
+    def __init__(self, model: TraceModel, clock: Optional[Callable[[], int]] = None):
         self.model = model
         self.enabled: List[int] = [0] * len(model.events)
+        #: derived per-pair flags: enabled[entry] & enabled[exit], so the
+        #: fused recorders pay one list index instead of two
+        self.enabled_pair: List[int] = []
+        self._pair_eids: List[Tuple[int, int]] = []
+        self.clock = clock or now
+        self.ring_reserve = True
         self._registry_holder = _RegistryHolder()
+        self._binder = self._make_binder(self._registry_holder)
         self.record: Dict[str, Callable] = {}
+        self.record_pair: Dict[str, Callable] = {}
         self.unpack: Dict[int, Callable] = {}
+        self._namespaces: List[dict] = []
+        #: recorder → (reserve code, legacy code, ns, default names);
+        #: attach() swaps __code__ and refreshes __defaults__ from ns
+        self._variants: Dict[Callable, Tuple] = {}
+
         for ev in model.events:
-            ns = {
-                "_enabled": self.enabled,
-                "_rings": self._registry_holder,
-                "_H": RECORD_HEADER,
-                "_L": _LEN,
-                "_now": now,
-            }
+            ns = self._base_ns()
             for i, seg in enumerate(_segments(ev.fields)):
                 if seg[0] == "fixed":
                     ns[f"_S{i}"] = seg[2]
-            src = codegen_recorder(ev)
-            exec(compile(src, f"<tracepoint {ev.name}>", "exec"), ns)
-            self.record[ev.name] = ns[ev.name.replace(":", "__")]
+            names = self._install_structs(ns, [_RecordPlan(ev, "_now()")], 1, 0)
+            fn = self._compile_variants(
+                ns,
+                ev.name.replace(":", "__"),
+                codegen_recorder(ev, reserve=True),
+                codegen_recorder(ev, reserve=False),
+                ev.name,
+                names,
+            )
+            self.record[ev.name] = fn
 
             uns = {"_L": _LEN}
             for i, seg in enumerate(_segments(ev.fields)):
@@ -153,23 +500,143 @@ class Tracepoints:
             exec(compile(usrc, f"<unpacker {ev.name}>", "exec"), uns)
             self.unpack[ev.eid] = uns["unpack_" + ev.name.replace(":", "__")]
 
+        # fused entry/exit pair recorders
+        by_key: Dict[Tuple[str, str], Dict[str, EventType]] = {}
+        for ev in model.events:
+            if ev.phase in ("entry", "exit"):
+                by_key.setdefault((ev.provider, ev.api), {})[ev.phase] = ev
+        for (provider, api), phases in by_key.items():
+            if "entry" not in phases or "exit" not in phases:
+                continue
+            entry_ev, exit_ev = phases["entry"], phases["exit"]
+            pair_idx = len(self._pair_eids)
+            self._pair_eids.append((entry_ev.eid, exit_ev.eid))
+            self.enabled_pair.append(0)
+            ns = self._base_ns()
+            for i, seg in enumerate(_segments(entry_ev.fields)):
+                if seg[0] == "fixed":
+                    ns[f"_SA{i}"] = seg[2]
+            for i, seg in enumerate(_segments(exit_ev.fields)):
+                if seg[0] == "fixed":
+                    ns[f"_SB{i}"] = seg[2]
+            ns["_rec_entry"] = self.record[entry_ev.name]
+            ns["_rec_exit"] = self.record[exit_ev.name]
+            records = [
+                _RecordPlan(entry_ev, "_ts_entry"),
+                _RecordPlan(exit_ev, "_now()", arg_prefix="x_"),
+            ]
+            names = self._install_structs(ns, records, 2, 1)
+            fn = self._compile_variants(
+                ns,
+                entry_ev.name.replace(":", "__").replace("_entry", "_pair"),
+                codegen_pair_recorder(entry_ev, exit_ev, pair_idx, reserve=True),
+                codegen_pair_recorder(entry_ev, exit_ev, pair_idx, reserve=False),
+                f"{provider}:{api}",
+                names,
+            )
+            self.record_pair[f"{provider}:{api}"] = fn
+
+    # -- codegen plumbing ----------------------------------------------------
+
+    def _base_ns(self) -> dict:
+        ns = {
+            "_enabled": self.enabled,
+            "_enabled2": self.enabled_pair,
+            "_rings": self._registry_holder,
+            "_H": RECORD_HEADER,
+            "_L": _LEN,
+            "_now": self.clock,
+            "_bytes": bytes,
+            "_len": len,
+            "_str": str,
+            # per-thread ring-binding cache lives at _tls.c; a placeholder
+            # local until a session attaches its registry's thread-local.
+            # Per-THREAD storage (not ident-keyed): a recycled thread ident
+            # can never alias a dead thread's binding.
+            "_tls": threading.local(),
+            "_bind": self._binder,
+        }
+        self._namespaces.append(ns)
+        return ns
+
+    @staticmethod
+    def _make_binder(holder) -> Callable:
+        """Cold-path ring binding: resolve this thread's ring once, cache the
+        ``(ring, storage, mask)`` tuple on the session registry's
+        thread-local — all recorders share it via their ``_tls`` default."""
+
+        def bind():
+            registry = holder.registry
+            rb = registry.get()
+            ct = (rb, rb._buf, rb._mask)
+            registry._tls.c = ct
+            return ct
+
+        return bind
+
+    @staticmethod
+    def _install_structs(ns: dict, records: List[_RecordPlan], nrec: int, extra: int) -> List[str]:
+        """Bind the fused pack_into methods the reserve variant's defaults
+        use; return the defaults' namespace names (for __defaults__ refresh)."""
+        _, defaults, fmts = _reserve_body(records, nrec, extra)
+        for i, fmt in enumerate(fmts):
+            ns[f"_PK{i}"] = struct.Struct(fmt).pack_into
+        return [d.split("=", 1)[1] for d in defaults]
+
+    def _compile_variants(self, ns, pyname, src_reserve, src_legacy, label, default_names):
+        exec(compile(src_reserve, f"<tracepoint {label}>", "exec"), ns)
+        fn = ns[pyname]
+        exec(compile(src_legacy, f"<tracepoint legacy {label}>", "exec"), ns)
+        legacy_fn = ns.pop(pyname)
+        ns[pyname] = fn
+        self._variants[fn] = (fn.__code__, legacy_fn.__code__, ns, default_names)
+        return fn
+
     # -- session binding -----------------------------------------------------
 
-    def attach(self, registry: RingRegistry, enabled_eids: Sequence[int]) -> None:
+    def _rebind_session(self, tls) -> None:
+        """Point every recorder's ``_tls`` default at the session's
+        thread-local.  A fresh local has no ``c`` attribute anywhere, so all
+        threads fall to the bind path on first touch — cache invalidation
+        across sessions comes for free."""
+        for fn, (rcode, lcode, ns, names) in self._variants.items():
+            ns["_tls"] = tls
+            code = rcode if self.ring_reserve else lcode
+            if fn.__code__ is not code:
+                fn.__code__ = code
+            fn.__defaults__ = tuple(ns[n] for n in names)
+
+    def attach(
+        self,
+        registry: RingRegistry,
+        enabled_eids: Sequence[int],
+        ring_reserve: bool = True,
+    ) -> None:
         self._registry_holder.registry = registry
+        self.ring_reserve = bool(ring_reserve)
+        self._rebind_session(registry._tls)
         for eid in range(len(self.enabled)):
             self.enabled[eid] = 0
         for eid in enabled_eids:
             self.enabled[eid] = 1
+        self._recompute_pairs()
 
     def detach(self) -> None:
         for eid in range(len(self.enabled)):
             self.enabled[eid] = 0
+        self._recompute_pairs()
+        self._rebind_session(threading.local())  # drop all ring bindings
         self._registry_holder.registry = None
 
     def set_event(self, name: str, on: bool) -> None:
         ev = self.model.by_name()[name]
         self.enabled[ev.eid] = 1 if on else 0
+        self._recompute_pairs()
+
+    def _recompute_pairs(self) -> None:
+        enabled = self.enabled
+        for i, (e, x) in enumerate(self._pair_eids):
+            self.enabled_pair[i] = enabled[e] & enabled[x]
 
 
 class _RegistryHolder:

@@ -59,6 +59,11 @@ class TraceConfig:
     #: graph instead of the single-pass fold engine (identical result,
     #: ~an order of magnitude slower on large traces; see core/fold.py)
     legacy_graph: bool = False
+    #: escape hatch: False reverts recorders to the legacy bytes-build +
+    #: RingBuffer.write path instead of the zero-allocation reserve/commit
+    #: pack_into codegen (byte-identical streams, ~2-3x slower producers;
+    #: see core/tracepoints.py)
+    ring_reserve: bool = True
     #: zstd-compress CTF streams (space knob beyond Fig 8's mode ladder)
     compress: bool = False
     #: §6 future work, implemented: maintain a LIVE tally on the consumer
@@ -232,7 +237,7 @@ class Tracer:
             for name, on in self.cfg.event_overrides.items():
                 eid = name2ev[name].eid
                 (enabled.add if on else enabled.discard)(eid)
-        self.tp.attach(self.registry, sorted(enabled))
+        self.tp.attach(self.registry, sorted(enabled), ring_reserve=self.cfg.ring_reserve)
         if self.cfg.online:
             from .online import OnlineAnalyzer
 
@@ -363,20 +368,39 @@ class Tracer:
 
     # -- consumer daemon -------------------------------------------------------
     def _drain_once(self) -> None:
+        """Drain every ring zero-copy: stream + online analysis read the ring
+        storage through ``drain_view`` memoryviews and the region is released
+        only after both consumed it — no intermediate ``bytes`` on the common
+        (single-region) path.  A ring that has produced nothing (an idle
+        thread) gets no ``StreamWriter`` — and so no empty ``stream_*.ctf``
+        file — until its first record or drop shows up; the ``now()`` stamp
+        for discard records is only taken when the drop counter advanced."""
         assert self.registry is not None
+        writers = self._writers
+        online = self.online
         for ring in self.registry.rings():
-            chunk = ring.drain()
+            regions = ring.drain_view()
+            dropped = ring.dropped
             key = (ring.pid, ring.tid)
-            w = self._writers.get(key)
+            w = writers.get(key)
             if w is None:
+                if not regions and not dropped:
+                    continue  # idle thread: defer stream-file creation
                 path = os.path.join(self.cfg.out_dir, f"stream_{ring.pid}_{ring.tid}.ctf")
-                w = self._writers[key] = StreamWriter(
+                w = writers[key] = StreamWriter(
                     path, ring.pid, ring.tid, compress=self.cfg.compress
                 )
-            w.append(chunk)
-            if self.online is not None:
-                self.online.feed(chunk, ring.pid, ring.tid)
-            w.note_drops(ring.dropped, now())
+            if regions:
+                for r in regions:
+                    w.append(r)
+                if online is not None:
+                    # two regions = wrap: records may straddle the boundary,
+                    # so the fold gets them joined (rare; one copy)
+                    chunk = regions[0] if len(regions) == 1 else b"".join(regions)
+                    online.feed(chunk, ring.pid, ring.tid)
+                ring.release()
+            if dropped != w.seen_dropped:
+                w.note_drops(dropped, now())
 
     def _consumer_loop(self) -> None:
         while not self._stop_evt.wait(self.cfg.flush_period_s):

@@ -1,0 +1,425 @@
+"""Reserve/commit ring protocol tests (the zero-allocation collection path).
+
+The contracts under test:
+
+  * ``RingBuffer.reserve``/``commit`` frame records byte-identically to the
+    legacy ``write()`` path — across event schemas, varlen payloads, wrap
+    boundaries (scratch staging) and full-ring drops;
+  * ``drain_view``/``release`` expose the committed region zero-copy without
+    ever letting the producer overwrite unread bytes;
+  * the generated reserve-mode recorders survive a threaded SPSC stress run
+    crossing many wrap boundaries with no torn or reordered records;
+  * fused pair recorders emit the same bytes as the two single recorders,
+    fall back cleanly when enablement splits the pair, and drop atomically;
+  * ``iprof tally`` over a reserve/commit trace equals a legacy-path trace.
+
+Property-based when hypothesis is installed, seeded-loop fallback otherwise
+(mirroring tests/test_fold.py).
+"""
+
+import os
+import random
+import threading
+
+from repro.core.api_model import APIModel, APISpec, P, build_trace_model
+from repro.core.clock import ClockInfo
+from repro.core.ctf import StreamWriter, write_metadata
+from repro.core.iprof import main as iprof
+from repro.core.ringbuffer import RECORD_HEADER, RECORD_HEADER_SIZE, RingBuffer, RingRegistry
+from repro.core.tracepoints import Tracepoints
+from repro.core.tracer import TraceConfig, Tracer
+from tests.hypothesis_optional import given, settings, st
+
+_MODEL = build_trace_model(
+    [
+        APIModel(
+            provider="ust_r",
+            apis=(
+                APISpec(
+                    "mix",
+                    params=(P("a", "u32"), P("s", "str"), P("b", "u64"), P("blob", "bytes")),
+                    result=P("rc", "i32"),
+                ),
+                APISpec("fixed", params=(P("x", "u64"), P("y", "u32")), result=P("rc", "u32")),
+                APISpec("seq", params=(P("n", "u64"), P("fill", "bytes")), result=P("rc", "u32")),
+                APISpec("launch", params=(P("name", "str"), P("flops", "u64")), span=True),
+            ),
+        )
+    ]
+)
+
+
+def frame(eid, ts, payload):
+    return RECORD_HEADER.pack(RECORD_HEADER_SIZE + len(payload), eid, ts) + payload
+
+
+def unframe(blob):
+    out = []
+    off = 0
+    while off < len(blob):
+        total, eid, ts = RECORD_HEADER.unpack_from(blob, off)
+        out.append((eid, ts, bytes(blob[off + RECORD_HEADER_SIZE : off + total])))
+        off += total
+    return out
+
+
+def ticking_clock(start=1000, step=7):
+    c = [start]
+
+    def clock():
+        c[0] += step
+        return c[0]
+
+    return clock
+
+
+# ---------------------------------------------------------------------------
+# RingBuffer.reserve/commit unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_reserve_commit_roundtrip_matches_write():
+    a, b = RingBuffer(1 << 10), RingBuffer(1 << 10)
+    for i in range(1, 30):
+        rec = frame(i % 5, i, bytes([i]) * (i % 17))
+        assert b.write(rec)
+        off = a.reserve(len(rec))
+        assert off >= 0
+        a.wbuf[off : off + len(rec)] = rec
+        a.commit(len(rec))
+    assert a.drain() == b.drain()
+
+
+def test_reserve_wrap_goes_through_scratch():
+    rb = RingBuffer(1 << 8)
+    rec = frame(1, 1, b"q" * 50)
+    n = len(rec)
+    seen = []
+    for i in range(40):  # many wraps through the 256-byte ring
+        off = rb.reserve(n)
+        assert off >= 0
+        staged = rb.wbuf is not rb._buf
+        if staged:  # wrap path: the reusable scratch buffer
+            assert off == 0
+        rb.wbuf[off : off + n] = rec
+        rb.commit(n)
+        assert rb.wbuf is rb._buf  # invariant restored after commit
+        seen.extend(unframe(rb.drain()))
+    assert len(seen) == 40
+    assert all(payload == b"q" * 50 for _, _, payload in seen)
+
+
+def test_reserve_drop_when_full_and_lim_recovers():
+    rb = RingBuffer(1 << 8)
+    rec = frame(2, 0, b"z" * 40)
+    n = len(rec)
+    written = 0
+    while True:
+        off = rb.reserve(n)
+        if off < 0:
+            break
+        rb.wbuf[off : off + n] = rec
+        rb.commit(n)
+        written += 1
+    assert rb.dropped == 1
+    assert rb.reserve(n) < 0 and rb.dropped == 2  # discard mode: counted, not blocked
+    rb.drain()
+    assert rb.reserve(n) >= 0  # space released → reservations resume
+    rb.commit(n)
+    assert rb.reserve(len(frame(0, 0, b"x" * 300))) < 0  # bigger than capacity
+
+
+def test_drain_view_zero_copy_and_release():
+    rb = RingBuffer(1 << 8)
+    r1 = frame(1, 10, b"abc")
+    rb.write(r1)
+    regions = rb.drain_view()
+    assert len(regions) == 1
+    assert bytes(regions[0]) == r1
+    assert rb.used == len(r1)  # not yet released
+    rb.release()
+    assert rb.used == 0
+    assert rb.drain_view() == ()
+
+
+def test_drain_view_wrap_returns_two_regions():
+    rb = RingBuffer(1 << 8)
+    filler = frame(1, 1, b"f" * 100)
+    rb.write(filler)
+    rb.drain()
+    rec = frame(2, 2, b"w" * 180)  # straddles the 256-byte boundary
+    assert rb.write(rec)
+    regions = rb.drain_view()
+    assert len(regions) == 2
+    assert b"".join(regions) == rec
+    rb.release()
+    assert rb.used == 0
+
+
+def test_release_guard_against_drain_mix():
+    rb = RingBuffer(1 << 8)
+    rb.write(frame(1, 1, b"a"))
+    rb.drain_view()
+    rb.write(frame(1, 2, b"b"))
+    rb.drain()  # consumed past the snapshot
+    rb.release()  # must not rewind tail
+    assert rb.used == 0
+
+
+# ---------------------------------------------------------------------------
+# Generated recorders: reserve path == legacy path, byte for byte
+# ---------------------------------------------------------------------------
+
+
+def _drive(ring_reserve, seed, cap, clock):
+    """Run a seeded op mix through one path; return (stream bytes, drops, events)."""
+    rng = random.Random(seed)
+    tp = Tracepoints(_MODEL, clock=clock)
+    reg = RingRegistry(cap, pid=1)
+    tp.attach(reg, range(len(_MODEL.events)), ring_reserve=ring_reserve)
+    mix = tp.record["ust_r:mix_entry"]
+    mix_x = tp.record["ust_r:mix_exit"]
+    fixed = tp.record["ust_r:fixed_entry"]
+    pair = tp.record_pair["ust_r:fixed"]
+    span = tp.record["ust_r:launch_span"]
+    out = []
+    for i in range(rng.randrange(50, 250)):
+        op = rng.randrange(0, 6)
+        if op == 0:
+            mix(i, "s" * rng.randrange(0, 40), 2**40 + i, bytes(rng.randrange(0, 60)))
+        elif op == 1:
+            mix_x(-i)
+        elif op == 2:
+            fixed(i, i * 2)
+        elif op == 3:
+            pair(i, i * 3, 777, i % 5)
+        elif op == 4:
+            span(i, i + 50, "k" * rng.randrange(0, 9), 99)
+        else:
+            for ring in reg.rings():
+                out.append(ring.drain())
+    for ring in reg.rings():
+        out.append(ring.drain())
+    tp.detach()
+    return b"".join(out), reg.total_dropped, reg.total_events
+
+
+def _assert_paths_identical(seed, cap, constant_clock):
+    mk = (lambda: (lambda: 5_000)) if constant_clock else (lambda: ticking_clock())
+    a, da, ea = _drive(True, seed, cap, mk())
+    b, db, eb = _drive(False, seed, cap, mk())
+    assert a == b, f"stream bytes diverged (seed={seed}, cap={cap})"
+    assert (da, ea) == (db, eb)
+
+
+def test_paths_identical_seeded():
+    """Seeded fallback: ample ring + ticking clock (no drops) and tiny ring +
+    constant clock (drops + wraps; constant because the legacy path consumes
+    a clock tick building a record that then drops — timestamps of surviving
+    records would diverge under a ticking fake clock)."""
+    for seed in range(25):
+        _assert_paths_identical(seed, 1 << 16, constant_clock=False)
+        _assert_paths_identical(seed, 1 << 9, constant_clock=True)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000), tiny=st.booleans())
+def test_property_paths_identical(seed, tiny):
+    """Property: reserve/commit framing is byte-identical to legacy write()."""
+    if tiny:
+        _assert_paths_identical(seed, 1 << 9, constant_clock=True)
+    else:
+        _assert_paths_identical(seed, 1 << 16, constant_clock=False)
+
+
+# ---------------------------------------------------------------------------
+# Fused pair recorders
+# ---------------------------------------------------------------------------
+
+
+def test_pair_equals_two_singles():
+    # singles consume one clock tick each; the pair takes the entry timestamp
+    # as an argument and ticks once for the exit — same byte stream
+    tp1 = Tracepoints(_MODEL, clock=ticking_clock())
+    reg1 = RingRegistry(1 << 12, pid=1)
+    tp1.attach(reg1, range(len(_MODEL.events)))
+    tp1.record["ust_r:fixed_entry"](7, 8)
+    tp1.record["ust_r:fixed_exit"](9)
+    one = reg1.rings()[0].drain()
+
+    clock = ticking_clock()
+    ts_entry = clock()  # 1007: what the first single stamped
+    tp2 = Tracepoints(_MODEL, clock=clock)
+    reg2 = RingRegistry(1 << 12, pid=1)
+    tp2.attach(reg2, range(len(_MODEL.events)))
+    tp2.record_pair["ust_r:fixed"](7, 8, ts_entry, 9)
+    two = reg2.rings()[0].drain()
+    assert one == two
+
+
+def test_pair_fallback_when_enablement_splits():
+    tp = Tracepoints(_MODEL, clock=ticking_clock())
+    reg = RingRegistry(1 << 12, pid=1)
+    by = _MODEL.by_name()
+    entry_eid, exit_eid = by["ust_r:fixed_entry"].eid, by["ust_r:fixed_exit"].eid
+    tp.attach(reg, [e.eid for e in _MODEL.events if e.eid != exit_eid])
+    tp.record_pair["ust_r:fixed"](1, 2, 500, 3)
+    recs = unframe(reg.rings()[0].drain())
+    assert [eid for eid, _, _ in recs] == [entry_eid]  # only the entry event
+    # the fallback must preserve the caller's entry timestamp: disabling the
+    # *exit* must not shift the entry stamp from pre-work to record time
+    assert recs[0][1] == 500
+    tp.set_event("ust_r:fixed_exit", True)
+    tp.record_pair["ust_r:fixed"](1, 2, 500, 3)
+    recs = unframe(reg.rings()[0].drain())
+    assert [(eid, ts) for eid, ts, _ in recs][0] == (entry_eid, 500)
+    assert recs[1][0] == exit_eid
+
+
+def test_thread_ident_recycling_cannot_alias_rings():
+    """CPython recycles thread idents: a new thread reusing a joined thread's
+    ident must still get its own ring (the binding cache is per-thread
+    storage, not ident-keyed)."""
+    tp = Tracepoints(_MODEL, clock=ticking_clock())
+    reg = RingRegistry(1 << 12, pid=1)
+    tp.attach(reg, range(len(_MODEL.events)))
+    rec = tp.record["ust_r:fixed_entry"]
+    idents = []
+
+    def worker(i):
+        idents.append(threading.get_ident())
+        rec(i, i)
+
+    for i in range(4):  # sequential start/join: idents typically recycle
+        t = threading.Thread(target=worker, args=(i,))
+        t.start()
+        t.join()
+    assert len(reg.rings()) == 4  # one ring per thread, even on ident reuse
+    per_ring = [unframe(r.drain()) for r in reg.rings()]
+    assert all(len(rs) == 1 for rs in per_ring)
+    tp.detach()
+
+
+def test_pair_drop_is_atomic():
+    tp = Tracepoints(_MODEL, clock=ticking_clock())
+    reg = RingRegistry(1 << 6, pid=1)  # 64 bytes: pair (26 + 18 = 44) fits, big one not
+    tp.attach(reg, range(len(_MODEL.events)))
+    pair = tp.record_pair["ust_r:mix"]
+    pair(1, "x" * 40, 2, b"y" * 30, 100, -1)  # entry alone exceeds capacity
+    rb = reg.rings()[0]
+    assert rb.used == 0 and rb.events == 0
+    assert rb.dropped == 2  # both records of the pair accounted
+    tp.record_pair["ust_r:fixed"](1, 2, 100, 3)  # small pair still fits
+    assert rb.events == 2 and rb.dropped == 2
+
+
+# ---------------------------------------------------------------------------
+# Threaded SPSC stress across wrap boundaries
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_spsc_stress_no_torn_records():
+    """Producer thread on generated recorders + consumer on drain_view/release
+    crossing many wrap boundaries: every surviving record arrives exactly
+    once, well-framed, in order."""
+    tp = Tracepoints(_MODEL)
+    reg = RingRegistry(1 << 12, pid=1)  # 4 KiB: thousands of wraps
+    tp.attach(reg, range(len(_MODEL.events)))
+    rec = tp.record["ust_r:seq_entry"]
+    N = 20_000
+    chunks = []
+    stop = threading.Event()
+    ring_ready = threading.Event()
+
+    def producer():
+        for i in range(N):
+            rec(i, b"x" * (i % 33))
+            if i == 0:
+                ring_ready.set()
+        stop.set()
+
+    def consumer():
+        ring_ready.wait(5)
+        ring = reg.rings()[0]
+        while not stop.is_set() or ring.used:
+            regions = ring.drain_view()
+            if regions:
+                chunks.append(b"".join(regions))
+                ring.release()
+
+    pt = threading.Thread(target=producer)
+    ct = threading.Thread(target=consumer)
+    pt.start(); ct.start()
+    pt.join(); ct.join()
+    ring = reg.rings()[0]
+    chunks.append(b"".join(ring.drain_view()))
+    ring.release()
+    seq_eid = _MODEL.by_name()["ust_r:seq_entry"].eid
+    unpack = tp.unpack[seq_eid]
+    seqs = []
+    for eid, _, payload in unframe(b"".join(chunks)):
+        assert eid == seq_eid
+        n, fill, _rc_absent = *unpack(memoryview(payload)), None
+        assert fill == b"x" * (n % 33), "torn record"
+        seqs.append(n)
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)  # in order, once
+    assert len(seqs) + ring.dropped == N
+    assert len(seqs) == ring.events
+    tp.detach()
+
+
+# ---------------------------------------------------------------------------
+# Tracer consumer integration
+# ---------------------------------------------------------------------------
+
+
+def test_idle_thread_leaves_no_stream_file(tmp_path):
+    out = str(tmp_path / "t")
+    with Tracer(TraceConfig(out_dir=out, mode="default")) as tr:
+        # a thread touches the registry (gets a ring) but never records
+        th = threading.Thread(target=tr.registry.get)
+        th.start(); th.join()
+        tr.tp.record["ust_repro:data_next_entry"](1)
+        tr.tp.record["ust_repro:data_next_exit"](0, 42)
+    streams = [n for n in os.listdir(out) if n.endswith(".ctf")]
+    assert len(streams) == 1  # only the producing thread's stream exists
+    assert tr.handle.events == 2
+
+
+def test_legacy_ring_reserve_escape_hatch(tmp_path):
+    out = str(tmp_path / "t")
+    with Tracer(TraceConfig(out_dir=out, mode="default", ring_reserve=False)) as tr:
+        assert tr.tp.ring_reserve is False
+        tr.tp.record["ust_repro:data_next_entry"](1)
+        tr.tp.record["ust_repro:data_next_exit"](0, 42)
+    assert tr.handle.events == 2
+    assert iprof(["tally", out]) == 0
+
+
+# ---------------------------------------------------------------------------
+# iprof tally equality over reserve vs legacy traces
+# ---------------------------------------------------------------------------
+
+
+def _build_trace_dir(trace_dir, ring_reserve):
+    os.makedirs(trace_dir, exist_ok=True)
+    stream, dropped, _ = _drive(ring_reserve, seed=4242, cap=1 << 16, clock=ticking_clock())
+    w = StreamWriter(os.path.join(trace_dir, "stream_1_100.ctf"), 1, 100)
+    w.append(stream)
+    if dropped:
+        w.note_drops(dropped, 10_000)
+    w.close()
+    write_metadata(trace_dir, _MODEL, ClockInfo.capture(), env={}, mode="full")
+
+
+def test_iprof_tally_identical_across_paths(tmp_path, capsys):
+    a, b = str(tmp_path / "reserve"), str(tmp_path / "legacy")
+    _build_trace_dir(a, ring_reserve=True)
+    _build_trace_dir(b, ring_reserve=False)
+    capsys.readouterr()
+    assert iprof(["tally", a]) == 0
+    out_a = capsys.readouterr().out
+    assert iprof(["tally", b]) == 0
+    out_b = capsys.readouterr().out
+    assert out_a == out_b
+    assert "UST_R" in out_a

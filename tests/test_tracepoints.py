@@ -105,8 +105,16 @@ def test_detach_makes_recorders_noop(model):
 def test_codegen_source_structure(model):
     ev = model.by_name()["ust_test:mix_entry"]
     src = codegen_recorder(ev)
-    assert f"_enabled[{ev.eid}]" in src
-    assert "def ust_test__mix_entry(a, s, b, blob, f):" in src
+    assert f"_e[{ev.eid}]" in src
+    # reserve variant: pack_into directly into ring storage, helpers as defaults
+    assert src.startswith("def ust_test__mix_entry(a, s, b, blob, f, _e=_enabled")
+    assert "pack_into" not in src  # bound methods ride in the _pk* defaults
+    assert "_rb.reserve(_n)" in src and "_rb.commit(_n)" in src
+    assert "_rb._lim" in src  # single-compare fast path
+    # legacy variant keeps the historical bytes-build + write shape
+    legacy = codegen_recorder(ev, reserve=False)
+    assert "_rings.get().write(_H.pack(" in legacy
+    assert "_rb.reserve" not in legacy
 
 
 def test_meta_out_scalars_on_exit_schema(model):

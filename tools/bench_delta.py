@@ -35,6 +35,16 @@ METRICS = [
     ),
     ("BENCH_smoke.json", "stream_bw.ratio", "stream delta reduction x", True),
     ("BENCH_stream_bw.json", "ratio", "stream_bw standalone x", True),
+    ("BENCH_collection.json", "enabled_net_ns", "collection enabled net ns", False),
+    ("BENCH_collection.json", "pair_net_ns_per_event", "collection pair net ns/ev", False),
+    ("BENCH_collection.json", "speedup_pair", "collection pair speedup x", True),
+    ("BENCH_collection.json", "speedup_single", "collection single speedup x", True),
+    (
+        "BENCH_collection.json",
+        "throughput_events_per_s",
+        "collection throughput ev/s",
+        True,
+    ),
 ]
 
 

@@ -1,28 +1,41 @@
-"""Analysis throughput: single-pass fold engine vs legacy graph, and
-composite read cost at scale (the PR-4 perf targets).
+"""Analysis throughput: single-pass fold engine vs legacy graph, sharded
+parallel fold + columnar sidecar, and composite read cost at scale.
 
-Two sections:
+Three sections:
 
 1. **tally_trace throughput** — a synthetic CTF-lite trace (entry/exit
    pairs + named kernel spans + discards, written through the real
    ``StreamWriter``) tallied by both paths.  Reports events/s and the
    fast-vs-legacy speedup; asserts both produce identical tallies so the
    speed is never bought with wrong numbers.
-2. **composite read cost** — a ``MasterServer`` holding N rank tallies,
+2. **parallel fold + sidecar** — the same trace folded via
+   ``fold_trace(jobs=N)`` for each N in a sweep, each variant in a *fresh
+   subprocess* (cold interpreter, its own pool, no shared page-cache-warm
+   engine state leaking between timings), plus the ``.ctfcol`` columnar
+   fast path (index once, then sidecar folds at jobs=1 and jobs=max).
+   Every variant prints a canonical-tally digest; the parent asserts all
+   digests agree — speedups are only reported for identical results.
+   ``cpus`` is recorded alongside: on a 1-CPU box the jobs sweep measures
+   pool overhead, not scaling, and the sidecar path carries the win.
+3. **composite read cost** — a ``MasterServer`` holding N rank tallies,
    driven through steady-state rounds (a few ranks grow, then the
    composite is read, the `iprof top` polling pattern).  Compares ApiStat
    row-merge operations with the incremental cache vs rebuild-per-read,
    checking result equality each round.
 
     PYTHONPATH=src python -m benchmarks.analysis_speed [--events 1000000]
-        [--ranks 256] [--json BENCH_analysis.json]
+        [--parallel-events 10000000] [--jobs 1,2,4,8] [--ranks 256]
+        [--json BENCH_analysis.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import os
+import subprocess
+import sys
 import tempfile
 import time
 
@@ -98,6 +111,89 @@ def run_tally(events: int = 1_000_000) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Parallel sharded fold + columnar sidecar (subprocess-isolated variants)
+# ---------------------------------------------------------------------------
+
+
+def _tally_digest(t: Tally) -> str:
+    return hashlib.sha256(
+        json.dumps(_canon(t), sort_keys=True).encode()
+    ).hexdigest()[:16]
+
+
+def _fold_variant_main(trace_dir: str, jobs: int, use_sidecar: bool) -> None:
+    """Hidden subprocess entry (``--fold-dir``): time one fold variant in a
+    cold interpreter and print ``{"wall_s", "digest"}`` as JSON."""
+    from repro.core.fold import fold_trace
+
+    t0 = time.perf_counter()
+    t = fold_trace(trace_dir, jobs=jobs, use_sidecar=use_sidecar)
+    wall = time.perf_counter() - t0
+    print(json.dumps({"wall_s": wall, "digest": _tally_digest(t)}))
+
+
+def _run_variant(trace_dir: str, jobs: int, use_sidecar: bool) -> dict:
+    import repro
+
+    src_dir = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [
+        sys.executable,
+        os.path.abspath(__file__),
+        "--fold-dir",
+        trace_dir,
+        "--fold-jobs",
+        str(jobs),
+    ]
+    if not use_sidecar:
+        cmd.append("--no-sidecar")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True, check=True)
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run_parallel(
+    events: int = 10_000_000, jobs: tuple = (1, 2, 4, 8), streams: int = 8
+) -> dict:
+    """Jobs sweep (record-parse) + sidecar fast path, one subprocess each."""
+    from repro.core.ctf import build_sidecars
+
+    jobs = tuple(sorted(set(jobs)))
+    with tempfile.TemporaryDirectory() as d:
+        n = build_trace(d, events, streams=streams)
+        sweep = {}
+        digests = set()
+        for j in jobs:
+            r = _run_variant(d, j, use_sidecar=False)
+            sweep[j] = r["wall_s"]
+            digests.add(r["digest"])
+        t0 = time.perf_counter()
+        n_sc = build_sidecars(d)
+        index_s = time.perf_counter() - t0
+        sc1 = _run_variant(d, 1, use_sidecar=True)
+        scmax = _run_variant(d, max(jobs), use_sidecar=True)
+        digests.add(sc1["digest"])
+        digests.add(scmax["digest"])
+    assert len(digests) == 1, f"fold variants diverged: {digests}"
+    base = sweep[jobs[0]]
+    return {
+        "events": n,
+        "streams": streams,
+        "cpus": os.cpu_count(),
+        "jobs_wall_s": {str(j): w for j, w in sweep.items()},
+        "jobs_speedup": {str(j): base / w for j, w in sweep.items()},
+        "speedup_max": max(base / w for w in sweep.values()),
+        "index_streams": n_sc,
+        "index_s": index_s,
+        "sidecar_jobs1_s": sc1["wall_s"],
+        "sidecar_jobsmax_s": scmax["wall_s"],
+        "sidecar_speedup": base / sc1["wall_s"],
+        "combined_speedup": base / scmax["wall_s"],
+        "digest": digests.pop(),
+    }
+
+
 def _rank_tally(rank: int, width: int) -> Tally:
     t = Tally()
     t.hostnames.add(f"node{rank // 8:03d}")
@@ -150,18 +246,47 @@ def run_composite(ranks: int = 256, width: int = 100, rounds: int = 32, hot: int
     }
 
 
-def run(events: int = 1_000_000, ranks: int = 256) -> dict:
-    return {"tally": run_tally(events), "composite": run_composite(ranks)}
+def run(
+    events: int = 1_000_000,
+    ranks: int = 256,
+    parallel_events: int | None = None,
+    jobs: tuple = (1, 2),
+) -> dict:
+    """``parallel_events=None`` scales the parallel sweep down to the tally
+    section's size (the CI-smoke configuration)."""
+    out = {"tally": run_tally(events), "composite": run_composite(ranks)}
+    out["parallel"] = run_parallel(
+        parallel_events if parallel_events is not None else events,
+        jobs=jobs,
+        streams=max(4, max(jobs)),
+    )
+    return out
 
 
-def main(events: int = 1_000_000, ranks: int = 256, json_path: str | None = None) -> dict:
-    out = run(events, ranks)
-    ta, co = out["tally"], out["composite"]
+def main(
+    events: int = 1_000_000,
+    ranks: int = 256,
+    json_path: str | None = None,
+    parallel_events: int | None = None,
+    jobs: tuple = (1, 2, 4, 8),
+) -> dict:
+    out = run(events, ranks, parallel_events=parallel_events, jobs=jobs)
+    ta, co, pa = out["tally"], out["composite"], out["parallel"]
     print(
         f"  tally_trace {ta['events']} events: fast={ta['fast_s']:.2f}s "
         f"({ta['fast_events_per_s'] / 1e6:.2f}M ev/s) "
         f"legacy={ta['legacy_s']:.2f}s ({ta['legacy_events_per_s'] / 1e6:.2f}M ev/s) "
         f"speedup={ta['speedup']:.1f}x"
+    )
+    sweep = " ".join(
+        f"jobs{j}={w:.2f}s({pa['jobs_speedup'][j]:.2f}x)"
+        for j, w in sorted(pa["jobs_wall_s"].items(), key=lambda kv: int(kv[0]))
+    )
+    print(
+        f"  parallel fold {pa['events']} events x{pa['streams']} streams "
+        f"on {pa['cpus']} cpu(s): {sweep} | index={pa['index_s']:.2f}s "
+        f"sidecar jobs1={pa['sidecar_jobs1_s']:.2f}s "
+        f"({pa['sidecar_speedup']:.1f}x) combined={pa['combined_speedup']:.1f}x"
     )
     print(
         f"  composite @{co['ranks']} ranks x{co['width']} rows, {co['rounds']} reads: "
@@ -180,5 +305,25 @@ if __name__ == "__main__":
     ap.add_argument("--events", type=int, default=1_000_000)
     ap.add_argument("--ranks", type=int, default=256)
     ap.add_argument("--json", default=None)
+    ap.add_argument(
+        "--parallel-events",
+        type=int,
+        default=None,
+        help="event count for the jobs sweep (default: --events)",
+    )
+    ap.add_argument("--jobs", default="1,2,4,8", help="comma-separated jobs sweep")
+    # hidden subprocess mode: time one fold variant and print JSON
+    ap.add_argument("--fold-dir", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--fold-jobs", type=int, default=1, help=argparse.SUPPRESS)
+    ap.add_argument("--no-sidecar", action="store_true", help=argparse.SUPPRESS)
     args = ap.parse_args()
-    main(args.events, args.ranks, args.json)
+    if args.fold_dir:
+        _fold_variant_main(args.fold_dir, args.fold_jobs, not args.no_sidecar)
+    else:
+        main(
+            args.events,
+            args.ranks,
+            args.json,
+            parallel_events=args.parallel_events,
+            jobs=tuple(int(j) for j in args.jobs.split(",")),
+        )

@@ -52,11 +52,16 @@ def run_smoke(json_path: str) -> None:
 
     print("== smoke: §3.4 analysis throughput (fold vs legacy graph) ==")
     an = analysis_speed.run(events=200_000, ranks=256)
+    pa = an["parallel"]
     print(
         f"  tally fast={an['tally']['fast_events_per_s'] / 1e6:.2f}M ev/s "
         f"legacy={an['tally']['legacy_events_per_s'] / 1e6:.2f}M ev/s "
         f"speedup={an['tally']['speedup']:.1f}x | composite row-ops "
         f"{an['composite']['row_ops_ratio']:.0f}x fewer @{an['composite']['ranks']} ranks"
+    )
+    print(
+        f"  parallel fold on {pa['cpus']} cpu(s): jobs-sweep max "
+        f"{pa['speedup_max']:.2f}x | sidecar {pa['sidecar_speedup']:.1f}x"
     )
     results["analysis_speed"] = an
 

@@ -6,6 +6,7 @@ shape: a trace is a *directory* containing
 
     metadata.json            trace model + clock + environment (≙ CTF TSDL)
     stream_<pid>_<tid>.ctf   one binary stream per producer ring
+    stream_<pid>_<tid>.ctfcol  optional columnar sidecar (see below)
     <prefix>...              multiple ranks may share a dir with rank prefixes
 
 Stream layout: 16-byte magic/version header, then packets of framed records
@@ -16,6 +17,21 @@ write path, which is how LTTng keeps the consumer cheap.
 Discarded events are materialized as ``ctf:events_discarded`` records
 (event id 0) whenever the consumer observes a ring's drop counter advance —
 the CTF discarded-events counter made explicit.
+
+Columnar sidecar (the Anderson-et-al. "scalable trace format" argument):
+when ``TraceConfig.columnar`` is on (or ``iprof index`` is run post-hoc),
+each stream gains a ``.ctfcol`` sidecar holding the analysis-relevant view
+of its records as four contiguous packed-u64 columns — interval timestamp,
+event id (kernel-name table index packed in the high bits), duration, and
+pair link (row index of the matching entry/exit) — plus a JSON footer that
+carries the per-stream folded tally, the kernel-name table, and the exact
+stream byte count the sidecar was built against.  Analysis that trusts a
+sidecar never parses records: ``fold_trace`` reads the footer tally,
+timeline interval queries walk the columns.  Trust is strict: wrong magic,
+unknown version, structural mismatch, or a stream whose on-disk size no
+longer equals ``stream_bytes`` (truncated tail, appended records) all make
+``load_sidecar`` return ``None`` and analysis falls back to record parsing
+— the sidecar is a cache, never a source of truth.
 """
 
 from __future__ import annotations
@@ -267,3 +283,314 @@ def stream_files(trace_dir: str) -> List[str]:
 
 def trace_size_bytes(trace_dir: str) -> int:
     return sum(os.path.getsize(p) for p in stream_files(trace_dir))
+
+
+# ---------------------------------------------------------------------------
+# Columnar sidecar (.ctfcol): per-stream packed-u64 columns + JSON footer
+# ---------------------------------------------------------------------------
+
+COL_MAGIC = b"THAPIcol"  # 8 bytes, distinct from the stream MAGIC
+COL_VERSION = 1
+COL_HEADER = struct.Struct("<8sII")  # magic, version, reserved
+_COL_COUNT = struct.Struct("<Q")
+_COL_FLEN = struct.Struct("<I")
+N_COLUMNS = 4  # ts, eid+name, duration, pair link
+
+#: pair-link / "no link" sentinel in the pair column
+NO_PAIR = (1 << 64) - 1
+
+
+def sidecar_path(stream_path: str) -> str:
+    """``stream_<pid>_<tid>.ctf`` → ``stream_<pid>_<tid>.ctfcol``."""
+    if stream_path.endswith(".ctf"):
+        return stream_path + "col"
+    return stream_path + ".ctfcol"
+
+
+def _le_u64s(a) -> bytes:
+    """array('Q') → little-endian bytes regardless of host byte order."""
+    import sys as _sys
+
+    if _sys.byteorder != "little":
+        a = a[:]
+        a.byteswap()
+    return a.tobytes()
+
+
+class ColumnarWriter:
+    """Builds one stream's ``.ctfcol`` sidecar from drained record chunks.
+
+    Fed the exact framed-record bytes the :class:`StreamWriter` receives
+    (the tracer's zero-copy drain memoryviews, or a whole-stream
+    ``records_region`` when indexing post-hoc).  Two derived views are
+    maintained per chunk:
+
+      * the **folded tally** — every chunk goes through the shared
+        :class:`~repro.core.fold.FoldEngine`, so the footer tally is
+        *by construction* what a record-parse fold of the stream produces
+        (identical pairing, clamping, unmatched and discard semantics);
+      * the **interval columns** — one row per analysis-relevant record
+        (entries, exits, device spans; samples/discards/unknown eids
+        contribute nothing a query reads and get no row):
+
+          ts    u64  interval-semantic timestamp: header ts for entry/exit
+                     records, payload ``ts_begin`` for spans
+          eid   u64  low 16 bits: event id; high bits: 1 + index into the
+                     footer name table for named launch spans (0 = unnamed)
+          dur   u64  completed-interval duration (on exit and span rows)
+          pair  u64  row index of the matching entry (on exits) / exit (on
+                     entries); NO_PAIR when unmatched or not a pair event
+
+    ``close(stream_bytes)`` flushes unmatched entries through the engine
+    (mirroring the offline fold) and writes the file atomically.
+    """
+
+    def __init__(self, engine, pid: int, tid: int, path: str):
+        # engine is a repro.core.fold.FoldEngine (imported lazily by callers:
+        # fold.py imports this module, so ctf cannot import fold at top level)
+        from array import array
+
+        self.engine = engine
+        self.pid = pid
+        self.tid = tid
+        self.path = path
+        self.state = engine.new_state()
+        self.ts = array("Q")
+        self.en = array("Q")
+        self.dur = array("Q")
+        self.pair = array("Q")
+        self._stacks: dict = {}  # pair_id → [row indexes of open entries]
+        self._names: list = []  # kernel-name table (footer)
+        self._nids: dict = {}  # name → table index
+
+    def append(self, chunk) -> None:
+        """Index one framed-record chunk (and fold it into the tally)."""
+        self.engine.fold_chunk(self.state, chunk, self.pid, self.tid)
+        self._index_chunk(chunk)
+
+    def note_discard(self, count: int) -> None:
+        """Account discard records the consumer writes straight to the stream
+        (``StreamWriter.note_drops`` bytes never pass through ``append``)."""
+        self.state.discarded += count
+
+    def _name_id(self, name) -> int:
+        nid = self._nids.get(name)
+        if nid is None:
+            nid = self._nids[name] = len(self._names)
+            self._names.append(name)
+        return nid
+
+    def _index_chunk(self, buf) -> None:
+        # mirrors FoldEngine.fold_chunk's walk (same skip rules, so a row
+        # exists exactly when the fold read the record) with column output
+        from .fold import (
+            K_ENTRY,
+            K_EXIT,
+            K_SPAN,
+            K_SPAN_NAMED,
+            K_SPAN_NAMED_GENERIC,
+            _LEN,
+            _SPAN_TS,
+        )
+
+        if type(buf) is not memoryview:
+            buf = memoryview(buf)
+        plan_rows = self.engine.plan.rows
+        nplans = len(plan_rows)
+        hdr_unpack = RECORD_HEADER.unpack_from
+        col_ts, col_en, col_dur, col_pair = self.ts, self.en, self.dur, self.pair
+        stacks = self._stacks
+        off = 0
+        n = len(buf)
+        limit = n - RECORD_HEADER_SIZE
+        while off <= limit:
+            total, eid, ts = hdr_unpack(buf, off)
+            if total < RECORD_HEADER_SIZE or off + total > n:
+                break  # truncated tail
+            rec_end = off + total
+            if eid < nplans:
+                kind, key, aid, noff, _ = plan_rows[eid]
+                if kind == K_ENTRY:
+                    stack = stacks.get(aid)
+                    if stack is None:
+                        stack = stacks[aid] = []
+                    stack.append(len(col_ts))
+                    col_ts.append(ts)
+                    col_en.append(eid)
+                    col_dur.append(0)
+                    col_pair.append(NO_PAIR)
+                elif kind == K_EXIT:
+                    stack = stacks.get(aid)
+                    row = len(col_ts)
+                    if stack:
+                        eidx = stack.pop()
+                        d = ts - col_ts[eidx]
+                        if d < 0:
+                            d = 0
+                        col_pair[eidx] = row
+                        col_ts.append(ts)
+                        col_en.append(eid)
+                        col_dur.append(d)
+                        col_pair.append(eidx)
+                    else:  # unmatched exit: row kept, contributes no interval
+                        col_ts.append(ts)
+                        col_en.append(eid)
+                        col_dur.append(0)
+                        col_pair.append(NO_PAIR)
+                elif kind in (K_SPAN, K_SPAN_NAMED, K_SPAN_NAMED_GENERIC):
+                    poff = off + RECORD_HEADER_SIZE
+                    if poff + 16 > rec_end:  # short payload: fold skipped it
+                        off = rec_end
+                        continue
+                    t0, t1 = _SPAN_TS.unpack_from(buf, poff)
+                    d = t1 - t0
+                    if d < 0:
+                        d = 0
+                    nid = 0
+                    if kind == K_SPAN_NAMED:
+                        nb_off = poff + noff
+                        if nb_off + 4 > rec_end:
+                            off = rec_end
+                            continue
+                        (ln,) = _LEN.unpack_from(buf, nb_off)
+                        if nb_off + 4 + ln > rec_end:
+                            off = rec_end
+                            continue
+                        name = bytes(buf[nb_off + 4 : nb_off + 4 + ln]).decode(
+                            errors="replace"
+                        )
+                        nid = 1 + self._name_id(name)
+                    elif kind == K_SPAN_NAMED_GENERIC:
+                        try:
+                            name = self.engine._unpack[eid](buf[poff:rec_end])[noff]
+                        except struct.error:
+                            off = rec_end
+                            continue
+                        if type(name) is not str:  # footer table is JSON
+                            name = str(name)
+                        nid = 1 + self._name_id(name)
+                    col_ts.append(t0)
+                    col_en.append(eid | (nid << 16))
+                    col_dur.append(d)
+                    col_pair.append(NO_PAIR)
+                # K_SKIP / K_DISCARD: nothing a query reads — no row
+            off = rec_end
+
+    def close(self, stream_bytes: int) -> None:
+        """Finalize: flush unmatched entries into the footer tally and write
+        the sidecar atomically (readers see a complete file or none)."""
+        tally = self.engine.finish(self.state)
+        footer = {
+            "format": "thapi-ctf-col",
+            "version": COL_VERSION,
+            "rows": len(self.ts),
+            "stream_bytes": int(stream_bytes),
+            "names": self._names,
+            "tally": tally.to_obj(),
+            "events_seen": self.state.events_seen,
+        }
+        fb = json.dumps(footer, sort_keys=True).encode()
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(COL_HEADER.pack(COL_MAGIC, COL_VERSION, 0))
+            f.write(_COL_COUNT.pack(len(self.ts)))
+            for col in (self.ts, self.en, self.dur, self.pair):
+                f.write(_le_u64s(col))
+            f.write(fb)
+            f.write(_COL_FLEN.pack(len(fb)))
+        os.replace(tmp, self.path)
+
+
+class ColumnarSidecar:
+    """A validated, loaded ``.ctfcol`` sidecar (see :func:`load_sidecar`)."""
+
+    __slots__ = ("path", "rows", "footer")
+
+    def __init__(self, path: str, rows: int, footer: dict):
+        self.path = path
+        self.rows = rows
+        self.footer = footer
+
+    def tally(self):
+        """The per-stream folded tally recorded in the footer."""
+        from .plugins.tally import Tally
+
+        return Tally.from_obj(self.footer["tally"])
+
+    def columns(self) -> tuple:
+        """(ts, eid+name, dur, pair) as array('Q') columns."""
+        import sys as _sys
+        from array import array
+
+        out = []
+        with open(self.path, "rb") as f:
+            f.seek(COL_HEADER.size + _COL_COUNT.size)
+            for _ in range(N_COLUMNS):
+                a = array("Q")
+                a.frombytes(f.read(8 * self.rows))
+                if _sys.byteorder != "little":
+                    a.byteswap()
+                out.append(a)
+        return tuple(out)
+
+
+def load_sidecar(stream_path: str) -> Optional[ColumnarSidecar]:
+    """Load and validate the sidecar for one stream, or None.
+
+    None (→ callers fall back to record parsing) whenever the sidecar is
+    missing, carries an unknown magic/version (forward compatibility: newer
+    formats are skipped, never crashed on), is structurally inconsistent, or
+    is **stale** — the stream's current on-disk byte count differs from the
+    ``stream_bytes`` the sidecar was built against (truncation or append).
+    """
+    path = sidecar_path(stream_path)
+    try:
+        fsize = os.path.getsize(path)
+        with open(path, "rb") as f:
+            head_len = COL_HEADER.size + _COL_COUNT.size
+            if fsize < head_len + _COL_FLEN.size:
+                return None
+            magic, version, _ = COL_HEADER.unpack(f.read(COL_HEADER.size))
+            if magic != COL_MAGIC or version != COL_VERSION:
+                return None
+            (rows,) = _COL_COUNT.unpack(f.read(_COL_COUNT.size))
+            base = head_len + 8 * N_COLUMNS * rows
+            if fsize < base + _COL_FLEN.size:
+                return None
+            f.seek(fsize - _COL_FLEN.size)
+            (flen,) = _COL_FLEN.unpack(f.read(_COL_FLEN.size))
+            if base + flen + _COL_FLEN.size != fsize:
+                return None
+            f.seek(base)
+            footer = json.loads(f.read(flen))
+        stream_size = os.path.getsize(stream_path)
+    except (OSError, ValueError, struct.error):
+        return None
+    if not isinstance(footer, dict) or "tally" not in footer:
+        return None
+    if footer.get("version") != COL_VERSION:
+        return None
+    if footer.get("stream_bytes") != stream_size:
+        return None  # stale: stream truncated or grew since indexing
+    return ColumnarSidecar(path, rows, footer)
+
+
+def build_sidecars(trace_dir: str) -> int:
+    """Index an existing trace post-hoc: write/refresh a ``.ctfcol`` sidecar
+    for every stream (``iprof index``).  Returns the stream count."""
+    from .fold import FoldEngine
+
+    meta = TraceMeta.load(trace_dir)
+    engine = FoldEngine(meta.model)
+    n = 0
+    for path in stream_files(trace_dir):
+        reader = StreamReader(path)
+        cw = ColumnarWriter(engine, reader.pid, reader.tid, sidecar_path(path))
+        buf, release = reader.records_region()
+        try:
+            cw.append(buf)
+        finally:
+            release()
+        cw.close(os.path.getsize(path))
+        n += 1
+    return n

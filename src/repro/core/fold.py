@@ -36,11 +36,12 @@ records).
 
 from __future__ import annotations
 
+import os
 import struct
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .api_model import DISCARD_EVENT_ID, FIELD_CLASSES, VARLEN, TraceModel
-from .ctf import StreamReader, TraceMeta, stream_files
+from .ctf import StreamReader, TraceMeta, load_sidecar, stream_files
 from .plugins.tally import ApiStat, Tally, intern_key
 from .ringbuffer import RECORD_HEADER, RECORD_HEADER_SIZE
 
@@ -375,21 +376,135 @@ class FoldEngine:
         return state.to_tally()
 
 
-def fold_trace(trace_dir: str) -> Tally:
-    """Fast-path ``tally_trace``: fold a CTF-lite trace directory directly
-    into a :class:`~repro.core.plugins.tally.Tally` — no Event/Interval
-    materialization, no global time-sort, one mmap'd buffer per stream."""
-    meta = TraceMeta.load(trace_dir)
+# ---------------------------------------------------------------------------
+# Trace-level fold: sidecar fast path + sharded parallel execution
+# ---------------------------------------------------------------------------
+
+
+def stream_groups(paths: Sequence[str]) -> List[List[str]]:
+    """Partition stream paths into ``(pid, tid)``-groups, preserving the
+    sorted file order within each group.
+
+    The grouping is the parallel-fold correctness unit: pairing stacks are
+    ``(pid, tid)``-local, so streams of *different* groups share no fold
+    state and may run in any order on any worker — but two files carrying
+    the same ``(pid, tid)`` (multi-rank dirs with rank prefixes) must stay
+    together, in order, on one worker, or an entry left open by the first
+    file could no longer pair with its exit in the second.
+    """
+    groups: Dict[Tuple[int, int], List[str]] = {}
+    for path in paths:
+        reader = StreamReader(path)  # filename parse only, no I/O
+        groups.setdefault((reader.pid, reader.tid), []).append(path)
+    return list(groups.values())
+
+
+def _fold_groups(
+    trace_dir: str,
+    groups: Sequence[Sequence[str]],
+    use_sidecar: bool,
+    meta: Optional[TraceMeta] = None,
+) -> Tally:
+    """Fold a set of stream groups into one tally (one worker's share).
+
+    Per group: a trusted columnar sidecar short-circuits record parsing
+    entirely (the footer carries the stream's folded tally); otherwise the
+    group's records run through the shared engine.  Sidecars are per-stream
+    self-contained (their unmatched entries were flushed at write time), so
+    the fast path is only taken for single-stream groups — the common case;
+    a multi-file ``(pid, tid)`` group needs cross-file stack continuity and
+    always folds records.
+    """
+    if meta is None:
+        meta = TraceMeta.load(trace_dir)
     engine = FoldEngine(meta.model)
     state = engine.new_state()
-    for path in stream_files(trace_dir):
-        reader = StreamReader(path)
-        buf, release = reader.records_region()
+    from_sidecars = Tally()
+    for group in groups:
+        if use_sidecar and len(group) == 1:
+            sc = load_sidecar(group[0])
+            if sc is not None:
+                from_sidecars.merge(sc.tally())
+                continue
+        for path in group:
+            reader = StreamReader(path)
+            buf, release = reader.records_region()
+            try:
+                engine.fold_chunk(state, buf, reader.pid, reader.tid)
+            finally:
+                release()
+    return engine.finish(state).merge(from_sidecars)
+
+
+def _fold_shard(trace_dir: str, groups: List[List[str]], use_sidecar: bool) -> dict:
+    """Worker entry point: fold one shard, return a compact tally dict.
+
+    Module-level (picklable), loads its own TraceMeta, and mmaps its streams
+    via ``records_region`` — worker startup carries no parent state beyond
+    the path list.  Exceptions propagate to the parent (which wraps them):
+    a poisoned shard must surface, never silently truncate the tally.
+    """
+    return _fold_groups(trace_dir, groups, use_sidecar).to_obj()
+
+
+def _partition_groups(groups: List[List[str]], shards: int) -> List[List[List[str]]]:
+    """Greedy byte-balanced partition: largest group to the lightest shard."""
+
+    def group_bytes(g: List[str]) -> int:
+        return sum(os.path.getsize(p) for p in g)
+
+    sized = sorted(((group_bytes(g), g) for g in groups), key=lambda x: -x[0])
+    out: List[List[List[str]]] = [[] for _ in range(shards)]
+    loads = [0] * shards
+    for size, g in sized:
+        i = loads.index(min(loads))
+        out[i].append(g)
+        loads[i] += size
+    return [s for s in out if s]
+
+
+def fold_trace(trace_dir: str, jobs: int = 1, use_sidecar: bool = True) -> Tally:
+    """Fast-path ``tally_trace``: fold a CTF-lite trace directory directly
+    into a :class:`~repro.core.plugins.tally.Tally` — no Event/Interval
+    materialization, no global time-sort, one mmap'd buffer per stream.
+
+    ``jobs > 1`` shards the per-stream work across a process pool: workers
+    fold disjoint ``(pid, tid)`` stream groups through their own engine and
+    return compact tally dicts the parent merges.  Because pairing state is
+    ``(pid, tid)``-local, the result is identical to ``jobs=1`` for every
+    job count (property-tested in ``tests/test_parallel_fold.py``).
+    ``jobs=None`` means one worker per CPU.  A failing worker (corrupt
+    stream, killed process) raises ``RuntimeError`` naming the cause — a
+    partial tally is never returned.
+
+    ``use_sidecar=False`` disables the columnar fast path (``.ctfcol``
+    footers); the default trusts validated sidecars and skips record
+    parsing for those streams.
+    """
+    meta = TraceMeta.load(trace_dir)
+    groups = stream_groups(stream_files(trace_dir))
+    if jobs is None:
+        jobs = os.cpu_count() or 1
+    jobs = max(1, min(int(jobs), len(groups) or 1))
+    if jobs <= 1:
+        tally = _fold_groups(trace_dir, groups, use_sidecar, meta=meta)
+    else:
+        from concurrent.futures import ProcessPoolExecutor
+
+        shards = _partition_groups(groups, jobs)
+        tally = Tally()
         try:
-            engine.fold_chunk(state, buf, reader.pid, reader.tid)
-        finally:
-            release()
-    tally = engine.finish(state)
+            with ProcessPoolExecutor(max_workers=len(shards)) as ex:
+                futures = [
+                    ex.submit(_fold_shard, trace_dir, shard, use_sidecar)
+                    for shard in shards
+                ]
+                for f in futures:
+                    tally.merge(Tally.from_obj(f.result()))
+        except Exception as e:
+            raise RuntimeError(
+                f"parallel fold (jobs={jobs}) failed; no partial tally: {e}"
+            ) from e
     host = meta.env.get("hostname", "")
     if host:
         tally.hostnames.add(host)

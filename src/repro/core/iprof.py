@@ -7,7 +7,8 @@
 
 Usage:
     python -m repro.core.iprof run  -m default --sample -o /tmp/t -- pkg.module:main arg1 ...
-    python -m repro.core.iprof tally    /tmp/t [--device] [--top N]
+    python -m repro.core.iprof tally    /tmp/t [--device] [--top N] [--jobs N]
+    python -m repro.core.iprof index    /tmp/t              # build .ctfcol sidecars
     python -m repro.core.iprof pretty   /tmp/t [-n N] [--filter memcpy]
     python -m repro.core.iprof timeline /tmp/t -o timeline.json
     python -m repro.core.iprof validate /tmp/t
@@ -53,6 +54,7 @@ def _run(args) -> int:
         serve_port=args.serve_port,
         legacy_graph=args.legacy_graph,
         ring_reserve=not args.no_ring_reserve,
+        columnar=args.columnar,
     )
     old_argv = sys.argv
     sys.argv = [target] + list(args.args)
@@ -73,11 +75,37 @@ def _run(args) -> int:
 
 
 def _tally(args) -> int:
-    t = tally_plugin.tally_trace(args.trace_dir, legacy_graph=args.legacy_graph)
+    from .ctf import stream_files
+
+    if not stream_files(args.trace_dir):
+        # zero completed streams: a valid (if sad) state — the workload
+        # crashed before the first drain, traced nothing, or ran
+        # --aggregate-only (use `iprof combine` there).  Render the empty
+        # tally rather than erroring, but say why it is empty.
+        print(
+            f"[iprof] warning: no completed streams in {args.trace_dir} "
+            "(empty trace, crashed workload, or aggregate-only run — "
+            "see `iprof combine`); tally is empty",
+            file=sys.stderr,
+        )
+    t = tally_plugin.tally_trace(
+        args.trace_dir,
+        legacy_graph=args.legacy_graph,
+        jobs=args.jobs if args.jobs > 0 else None,  # 0 → one per CPU
+        use_sidecar=not args.no_sidecar,
+    )
     print(tally_plugin.render(t, top=args.top, device=False))
     if args.device or t.device_apis:
         print("\n-- device --")
         print(tally_plugin.render(t, top=args.top, device=True))
+    return 0
+
+
+def _index(args) -> int:
+    from .ctf import build_sidecars
+
+    n = build_sidecars(args.trace_dir)
+    print(f"[iprof] indexed {n} stream(s): columnar sidecars written")
     return 0
 
 
@@ -293,6 +321,12 @@ def build_parser() -> argparse.ArgumentParser:
         help="aggregate-only tallying via the legacy Babeltrace-style graph",
     )
     r.add_argument(
+        "--columnar",
+        action="store_true",
+        help="also write per-stream .ctfcol columnar sidecars at drain time "
+        "(tally/timeline reads skip record parsing)",
+    )
+    r.add_argument(
         "--no-ring-reserve",
         action="store_true",
         help="recorders use the legacy bytes-build + ring write path instead "
@@ -312,7 +346,25 @@ def build_parser() -> argparse.ArgumentParser:
         help="tally via the full Babeltrace-style graph instead of the "
         "single-pass fold engine (slow; identical result)",
     )
+    t.add_argument(
+        "--jobs",
+        type=int,
+        default=1,
+        help="shard the fold across N worker processes (0 = one per CPU); "
+        "identical result for every N",
+    )
+    t.add_argument(
+        "--no-sidecar",
+        action="store_true",
+        help="ignore .ctfcol columnar sidecars; always parse records",
+    )
     t.set_defaults(fn=_tally)
+
+    ix = sub.add_parser(
+        "index", help="build columnar .ctfcol sidecars for an existing trace"
+    )
+    ix.add_argument("trace_dir")
+    ix.set_defaults(fn=_index)
 
     pr = sub.add_parser("pretty", help="pretty-print events (§3.4)")
     pr.add_argument("trace_dir")

@@ -222,20 +222,29 @@ def tally_intervals(intervals: Iterable[Interval], hostname: str = "") -> Tally:
     return t
 
 
-def tally_trace(trace_dir: str, legacy_graph: bool = False) -> Tally:
+def tally_trace(
+    trace_dir: str,
+    legacy_graph: bool = False,
+    jobs: int = 1,
+    use_sidecar: bool = True,
+) -> Tally:
     """Tally a CTF-lite trace directory.
 
     Default: the single-pass fold engine (``core/fold.py``) — no Event/
     Interval materialization, no global time-sort, ~an order of magnitude
-    faster on large traces.  ``legacy_graph=True`` is the escape hatch that
-    routes through the full Babeltrace-style graph (CTFSource →
-    IntervalFilter → tally_intervals); both paths produce identical tallies
-    (property-tested in ``tests/test_fold.py``).
+    faster on large traces.  ``jobs`` shards the fold across worker
+    processes (``jobs=None`` = one per CPU; identical result for every job
+    count), and ``use_sidecar`` lets validated ``.ctfcol`` columnar
+    sidecars short-circuit record parsing entirely.  ``legacy_graph=True``
+    is the escape hatch that routes through the full Babeltrace-style graph
+    (CTFSource → IntervalFilter → tally_intervals), single-process and
+    sidecar-blind; all paths produce identical tallies (property-tested in
+    ``tests/test_fold.py`` and ``tests/test_parallel_fold.py``).
     """
     if not legacy_graph:
         from ..fold import fold_trace  # deferred: fold imports this module
 
-        return fold_trace(trace_dir)
+        return fold_trace(trace_dir, jobs=jobs, use_sidecar=use_sidecar)
     src = CTFSource(trace_dir)
     filt = IntervalFilter(iter(src))
     t = tally_intervals(filt)

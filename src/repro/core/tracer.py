@@ -66,6 +66,11 @@ class TraceConfig:
     ring_reserve: bool = True
     #: zstd-compress CTF streams (space knob beyond Fig 8's mode ladder)
     compress: bool = False
+    #: write a columnar ``.ctfcol`` sidecar per stream at drain time (packed
+    #: interval columns + per-stream folded tally footer): repeat analysis
+    #: and timeline queries then skip record parsing entirely (see
+    #: core/ctf.py ColumnarWriter; staleness-checked, falls back safely)
+    columnar: bool = False
     #: §6 future work, implemented: maintain a LIVE tally on the consumer
     #: thread (read via tracer.online.snapshot() mid-run)
     online: bool = False
@@ -196,6 +201,9 @@ class Tracer:
         self.registry: Optional[RingRegistry] = None
         self.handle: Optional[TraceHandle] = None
         self._writers: Dict[Tuple[int, int], StreamWriter] = {}
+        #: per-stream columnar sidecar writers (cfg.columnar) + shared engine
+        self._colwriters: Dict[Tuple[int, int], object] = {}
+        self._fold_engine = None
         self._consumer: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
         self._sampler: Optional[_telemetry.TelemetryDaemon] = None
@@ -320,6 +328,10 @@ class Tracer:
                 self.server.stop()  # flushes the composite upstream first
             for w in self._writers.values():
                 w.close()
+            for key, cw in self._colwriters.items():
+                # staleness is keyed on the final on-disk stream size, so the
+                # stream writer must be closed (flushed) first
+                cw.close(os.path.getsize(self._writers[key].path))
             assert self.registry is not None and self.clock is not None
             write_metadata(
                 self.cfg.out_dir,
@@ -390,17 +402,37 @@ class Tracer:
                 w = writers[key] = StreamWriter(
                     path, ring.pid, ring.tid, compress=self.cfg.compress
                 )
+            cw = self._colwriters.get(key)
+            if cw is None and self.cfg.columnar:
+                cw = self._colwriters[key] = self._new_colwriter(w)
             if regions:
                 for r in regions:
                     w.append(r)
-                if online is not None:
+                if online is not None or cw is not None:
                     # two regions = wrap: records may straddle the boundary,
-                    # so the fold gets them joined (rare; one copy)
+                    # so the folds get them joined (rare; one copy)
                     chunk = regions[0] if len(regions) == 1 else b"".join(regions)
-                    online.feed(chunk, ring.pid, ring.tid)
+                    if online is not None:
+                        online.feed(chunk, ring.pid, ring.tid)
+                    if cw is not None:
+                        cw.append(chunk)
                 ring.release()
             if dropped != w.seen_dropped:
+                delta = dropped - w.seen_dropped
                 w.note_drops(dropped, now())
+                if cw is not None and delta > 0:
+                    # discard records go straight to the stream file; the
+                    # sidecar's footer tally must account them too
+                    cw.note_discard(delta)
+
+    def _new_colwriter(self, w: StreamWriter):
+        from .ctf import ColumnarWriter, sidecar_path
+
+        if self._fold_engine is None:
+            from .fold import FoldEngine
+
+            self._fold_engine = FoldEngine(self.model)
+        return ColumnarWriter(self._fold_engine, w.pid, w.tid, sidecar_path(w.path))
 
     def _consumer_loop(self) -> None:
         while not self._stop_evt.wait(self.cfg.flush_period_s):
@@ -441,7 +473,7 @@ class Tracer:
         path = os.path.join(self.cfg.out_dir, f"aggregate_rank{self.cfg.rank}.tally")
         save_tally(tally, path)
         for name in os.listdir(self.cfg.out_dir):
-            if name.endswith(".ctf"):
+            if name.endswith((".ctf", ".ctfcol")):
                 os.unlink(os.path.join(self.cfg.out_dir, name))
         return path
 

@@ -1,0 +1,252 @@
+"""Columnar trace sidecar (``.ctfcol``): round-trip, staleness, forward-compat.
+
+The sidecar is a *cache, never a source of truth*: every property here is a
+statement about when it may be trusted and what it must equal when it is.
+
+  * round-trip — tallies and timeline interval queries through the columnar
+    fast path equal the record-parse paths exactly, for generated traces
+    (compressed streams, torn tails, unmatched pairs, discards) and for
+    traces written live by the tracer (``TraceConfig.columnar``);
+  * staleness — truncating or appending to a stream after indexing
+    invalidates its sidecar (byte-count mismatch) and reads transparently
+    fall back to record parsing, still correct;
+  * forward-compat — a sidecar with an unknown version (or arbitrary
+    garbage) is skipped, never crashed on.
+"""
+
+import json
+import os
+import struct
+
+from repro.core.clock import ClockInfo
+from repro.core.ctf import (
+    COL_HEADER,
+    COL_MAGIC,
+    COL_VERSION,
+    StreamWriter,
+    build_sidecars,
+    load_sidecar,
+    sidecar_path,
+    stream_files,
+    write_metadata,
+)
+from repro.core.fold import fold_trace
+from repro.core.plugins.tally import tally_trace
+from repro.core.plugins.timeline import query_intervals
+from tests.hypothesis_optional import given, settings, st
+from tests.test_fold import _BYNAME, _MODEL, _U32, _U64, _build_trace, _pstr, _rec, canon
+
+
+def _assert_roundtrip(trace_dir: str) -> None:
+    """Columnar reads == record-parse reads, tallies and interval queries."""
+    ref_tally = canon(fold_trace(trace_dir, use_sidecar=False))
+    ref_rows = query_intervals(trace_dir, use_sidecar=False)
+    assert canon(fold_trace(trace_dir, use_sidecar=True)) == ref_tally
+    assert query_intervals(trace_dir, use_sidecar=True) == ref_rows
+    if ref_rows:
+        # windowed queries agree too (begin/end straddling the middle row)
+        mid = ref_rows[len(ref_rows) // 2][0]
+        for begin, end in ((None, mid), (mid, None), (mid // 2, mid * 2 + 1)):
+            assert query_intervals(
+                trace_dir, begin, end, use_sidecar=True
+            ) == query_intervals(trace_dir, begin, end, use_sidecar=False)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip: property-based + seeded fallback
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+def test_columnar_roundtrip_property(seed):
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        _build_trace(seed, d)
+        assert build_sidecars(d) == len(stream_files(d))
+        _assert_roundtrip(d)
+
+
+def test_columnar_roundtrip_seeded(tmp_path):
+    for seed in range(8):
+        d = str(tmp_path / f"t{seed}")
+        _build_trace(seed, d)
+        build_sidecars(d)
+        _assert_roundtrip(d)
+
+
+def test_columnar_tally_through_tally_trace(tmp_path):
+    """The public entry point takes the fast path too."""
+    d = str(tmp_path / "t")
+    _build_trace(5, d)
+    ref = canon(tally_trace(d, use_sidecar=False))
+    build_sidecars(d)
+    assert canon(tally_trace(d)) == ref
+    assert canon(tally_trace(d, legacy_graph=True)) == ref  # sidecar-blind
+
+
+def test_columnar_unmatched_and_discard_rows(tmp_path):
+    """Hand-built stream exercising every row kind: paired call, unmatched
+    exit (no interval), unmatched entry (zero-duration flush), named span,
+    discard record."""
+    from repro.core.api_model import DISCARD_EVENT_ID
+
+    d = str(tmp_path / "t")
+    os.makedirs(d)
+    ev_in = _BYNAME["ust_a:alpha_entry"]
+    ev_out = _BYNAME["ust_a:alpha_exit"]
+    launch = _BYNAME["ust_a:launch_span"]
+    w = StreamWriter(os.path.join(d, "stream_5_6.ctf"), 5, 6)
+    w.append(_rec(ev_out.eid, 50, _U32.pack(0)))  # unmatched exit
+    w.append(_rec(ev_in.eid, 100, _U32.pack(1)))
+    w.append(_rec(ev_out.eid, 175, _U32.pack(0)))  # pairs: dur 75
+    w.append(
+        _rec(launch.eid, 200, _U64.pack(200) + _U64.pack(230) + _pstr("k_q") + _U64.pack(1))
+    )
+    w.append(_rec(ev_in.eid, 300, _U32.pack(2)))  # never exits
+    w.append(_rec(DISCARD_EVENT_ID, 400, _U64.pack(3)))
+    w.close()
+    write_metadata(d, _MODEL, ClockInfo.capture(), env={})
+    build_sidecars(d)
+    _assert_roundtrip(d)
+    rows = query_intervals(d)
+    assert (100, 75, 5, 6, "ust_a:alpha", False) in rows
+    assert (200, 30, 5, 6, "k_q", True) in rows
+    assert (300, 0, 5, 6, "ust_a:alpha", False) in rows  # flushed entry
+    assert len([r for r in rows if r[0] == 50]) == 0  # unmatched exit: none
+    assert fold_trace(d).discarded == 3
+
+
+# ---------------------------------------------------------------------------
+# Tracer integration: TraceConfig.columnar writes sidecars at drain time
+# ---------------------------------------------------------------------------
+
+
+def _traced_dir(tmp_path, name, **cfg_kw):
+    import jax.numpy as jnp
+
+    from repro.core import TraceConfig, Tracer, kernel_span, traced_jit
+
+    d = str(tmp_path / name)
+    f = traced_jit(lambda x: (x * 3).sum(), name="triple_sum")
+    x = jnp.arange(64.0)
+    with Tracer(TraceConfig(out_dir=d, mode="default", columnar=True, **cfg_kw)):
+        for _ in range(3):
+            f(x)
+            with kernel_span("k_t", grid=(2,), flops=64, bytes_accessed=256):
+                pass
+    return d
+
+
+def test_tracer_columnar_writes_valid_sidecars(tmp_path):
+    d = _traced_dir(tmp_path, "t")
+    paths = stream_files(d)
+    assert paths
+    for p in paths:
+        sc = load_sidecar(p)
+        assert sc is not None
+        assert sc.footer["stream_bytes"] == os.path.getsize(p)
+    _assert_roundtrip(d)
+
+
+def test_tracer_columnar_compressed_streams(tmp_path):
+    """Staleness keys on the *container* size, so compression still works."""
+    d = _traced_dir(tmp_path, "t", compress=True)
+    for p in stream_files(d):
+        assert load_sidecar(p) is not None
+    _assert_roundtrip(d)
+
+
+def test_tracer_aggregate_only_prunes_sidecars(tmp_path):
+    d = _traced_dir(tmp_path, "t", aggregate_only=True)
+    left = [n for n in os.listdir(d) if n.endswith((".ctf", ".ctfcol"))]
+    assert left == []
+
+
+# ---------------------------------------------------------------------------
+# Staleness: byte-count mismatch invalidates; reads fall back, stay correct
+# ---------------------------------------------------------------------------
+
+
+def test_stale_sidecar_truncated_stream(tmp_path):
+    d = str(tmp_path / "t")
+    _build_trace(9, d)
+    build_sidecars(d)
+    p0 = stream_files(d)[0]
+    size = os.path.getsize(p0)
+    with open(p0, "r+b") as f:
+        f.truncate(size - 7)
+    assert load_sidecar(p0) is None  # detected
+    # transparent fallback: reads still agree with pure record parsing
+    _assert_roundtrip(d)
+
+
+def test_stale_sidecar_appended_stream(tmp_path):
+    d = str(tmp_path / "t")
+    _build_trace(10, d)
+    build_sidecars(d)
+    p0 = stream_files(d)[0]
+    with open(p0, "ab") as f:
+        f.write(_rec(_BYNAME["ust_a:alpha_entry"].eid, 99_999, _U32.pack(1)))
+    assert load_sidecar(p0) is None
+    _assert_roundtrip(d)
+    # re-indexing revalidates
+    build_sidecars(d)
+    assert load_sidecar(p0) is not None
+    _assert_roundtrip(d)
+
+
+def test_missing_sidecar_is_silent_fallback(tmp_path):
+    d = str(tmp_path / "t")
+    _build_trace(12, d)
+    build_sidecars(d)
+    os.unlink(sidecar_path(stream_files(d)[0]))
+    _assert_roundtrip(d)  # partial coverage: fold per-stream, query wholesale
+
+
+# ---------------------------------------------------------------------------
+# Forward compatibility: unknown versions skipped, garbage never crashes
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_sidecar_version_skipped(tmp_path):
+    d = str(tmp_path / "t")
+    _build_trace(13, d)
+    build_sidecars(d)
+    p0 = stream_files(d)[0]
+    sp = sidecar_path(p0)
+    with open(sp, "r+b") as f:  # bump the header version in place
+        f.write(COL_HEADER.pack(COL_MAGIC, COL_VERSION + 1, 0))
+    assert load_sidecar(p0) is None
+    _assert_roundtrip(d)
+
+
+def test_unknown_footer_version_skipped(tmp_path):
+    """Header version ok but footer claims a newer format: also skipped
+    (a future writer may extend only the footer)."""
+    d = str(tmp_path / "t")
+    _build_trace(14, d)
+    build_sidecars(d)
+    p0 = stream_files(d)[0]
+    sp = sidecar_path(p0)
+    raw = open(sp, "rb").read()
+    (flen,) = struct.unpack("<I", raw[-4:])
+    footer = json.loads(raw[-4 - flen : -4])
+    footer["version"] = COL_VERSION + 9
+    fb = json.dumps(footer, sort_keys=True).encode()
+    with open(sp, "wb") as f:
+        f.write(raw[: -4 - flen] + fb + struct.pack("<I", len(fb)))
+    assert load_sidecar(p0) is None
+    _assert_roundtrip(d)
+
+
+def test_garbage_sidecar_never_crashes(tmp_path):
+    d = str(tmp_path / "t")
+    _build_trace(15, d)
+    for p in stream_files(d):
+        for junk in (b"", b"short", COL_MAGIC, COL_MAGIC + b"\xff" * 40, b"x" * 64):
+            with open(sidecar_path(p), "wb") as f:
+                f.write(junk)
+            assert load_sidecar(p) is None
+    _assert_roundtrip(d)

@@ -12,12 +12,14 @@ from repro.core.iprof import main as iprof
 from repro.core.plugins.tally import tally_trace
 
 
-def _traced_workload(tmp_path, rank=0, aggregate_only=False):
+def _traced_workload(tmp_path, rank=0, aggregate_only=False, columnar=False):
     """Run a tiny traced workload via the iprof 'run' subcommand."""
     out = str(tmp_path / f"trace_r{rank}")
     args = ["run", "-m", "default", "-o", out, "--rank", str(rank)]
     if aggregate_only:
         args.append("--aggregate-only")
+    if columnar:
+        args.append("--columnar")
     args.append("tests.iprof_target:main")
     rc = iprof(args)
     assert rc == 0
@@ -30,6 +32,61 @@ def test_run_and_tally(tmp_path, capsys):
     assert iprof(["tally", out]) == 0
     text = capsys.readouterr().out
     assert "train_step" in text and "Time(%)" in text
+
+
+def test_tally_jobs_matches_serial(tmp_path, capsys):
+    """--jobs N renders the identical table (sharded fold, same tally)."""
+    out = _traced_workload(tmp_path)
+    capsys.readouterr()
+    assert iprof(["tally", out]) == 0
+    serial = capsys.readouterr().out
+    assert iprof(["tally", out, "--jobs", "3"]) == 0
+    assert capsys.readouterr().out == serial
+    assert iprof(["tally", out, "--jobs", "3", "--no-sidecar"]) == 0
+    assert capsys.readouterr().out == serial
+
+
+def test_tally_empty_trace_dir_warns(tmp_path, capsys):
+    """Zero completed streams (metadata only): warn on stderr, exit 0 with
+    an empty table — not a crash, not silence."""
+    import shutil
+
+    out = _traced_workload(tmp_path)
+    empty = str(tmp_path / "empty")
+    os.makedirs(empty)
+    shutil.copy(os.path.join(out, "metadata.json"), empty)
+    capsys.readouterr()
+    assert iprof(["tally", empty]) == 0
+    cap = capsys.readouterr()
+    assert "no completed streams" in cap.err
+    assert "0 Processes" in cap.out
+
+
+def test_index_then_tally_uses_sidecars(tmp_path, capsys):
+    """iprof index builds .ctfcol sidecars; tally output is unchanged."""
+    from repro.core.ctf import load_sidecar, stream_files
+
+    out = _traced_workload(tmp_path)
+    capsys.readouterr()
+    assert iprof(["tally", out]) == 0
+    before = capsys.readouterr().out
+    assert iprof(["index", out]) == 0
+    assert "indexed" in capsys.readouterr().out
+    for p in stream_files(out):
+        assert load_sidecar(p) is not None
+    assert iprof(["tally", out]) == 0
+    assert capsys.readouterr().out == before
+
+
+def test_run_columnar_writes_sidecars(tmp_path, capsys):
+    """iprof run --columnar leaves valid sidecars next to the streams."""
+    from repro.core.ctf import load_sidecar, stream_files
+
+    out = _traced_workload(tmp_path, columnar=True)
+    paths = stream_files(out)
+    assert paths
+    for p in paths:
+        assert load_sidecar(p) is not None
 
 
 def test_pretty(tmp_path, capsys):

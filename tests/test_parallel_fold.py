@@ -1,0 +1,210 @@
+"""Parallel sharded fold: ``fold_trace(jobs=N)`` ≡ ``fold_trace(jobs=1)``.
+
+The contract under test: sharding the per-stream fold across a process
+pool changes wall-clock only, never the tally — for any trace (compressed
+streams, torn tails, unmatched entries/exits, discard records) and any
+job count.  The correctness unit is the ``(pid, tid)`` stream *group*:
+pairing stacks are (pid, tid)-local, so groups may land on any worker in
+any order, but multi-file groups (rank-prefixed dirs) must stay together
+in file order.  Property-based when hypothesis is installed, seeded-loop
+fallback otherwise; plus a poisoned-shard test (a corrupt stream must
+surface a clear error, never a silent partial tally) and a slow-marked
+1M-event smoke reusing the benchmark's trace builder.
+"""
+
+import os
+
+import pytest
+
+from repro.core.ctf import StreamWriter, build_sidecars, write_metadata
+from repro.core.clock import ClockInfo
+from repro.core.fold import _partition_groups, fold_trace, stream_groups
+from repro.core.ringbuffer import RECORD_HEADER
+from tests.hypothesis_optional import given, settings, st
+from tests.test_fold import (
+    _BYNAME,
+    _MODEL,
+    _U32,
+    _build_trace,
+    _gen_stream,
+    _rec,
+    canon,
+)
+
+JOB_COUNTS = (2, 4, 7)
+
+
+def _assert_jobs_agree(trace_dir: str) -> None:
+    ref = canon(fold_trace(trace_dir, jobs=1))
+    for n in JOB_COUNTS:
+        assert canon(fold_trace(trace_dir, jobs=n)) == ref, f"jobs={n} diverged"
+
+
+# ---------------------------------------------------------------------------
+# Identity: property-based + seeded fallback
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+def test_parallel_fold_identity_property(seed):
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        _build_trace(seed, d)
+        _assert_jobs_agree(d)
+
+
+def test_parallel_fold_identity_seeded(tmp_path):
+    """Seeded corpus (runs everywhere, hypothesis or not): traces spanning
+    compression, torn tails, unmatched pairs, discards — every job count."""
+    for seed in range(8):
+        d = str(tmp_path / f"t{seed}")
+        _build_trace(seed, d)
+        _assert_jobs_agree(d)
+
+
+def test_parallel_fold_jobs_exceeding_groups(tmp_path):
+    """jobs > group count clamps (no empty workers, same result)."""
+    d = str(tmp_path / "t")
+    _build_trace(3, d)
+    assert canon(fold_trace(d, jobs=64)) == canon(fold_trace(d, jobs=1))
+
+
+def test_parallel_fold_sidecar_consistent(tmp_path):
+    """Workers take the sidecar fast path per stream; result unchanged."""
+    d = str(tmp_path / "t")
+    _build_trace(11, d)
+    ref = canon(fold_trace(d, jobs=1, use_sidecar=False))
+    build_sidecars(d)
+    for n in (1,) + JOB_COUNTS:
+        assert canon(fold_trace(d, jobs=n, use_sidecar=True)) == ref
+
+
+# ---------------------------------------------------------------------------
+# Sharding unit: (pid, tid) groups
+# ---------------------------------------------------------------------------
+
+
+def _write_split_pair_trace(d: str) -> None:
+    """Two rank-prefixed files carrying the SAME (pid, tid): an entry left
+    open at the end of the first file pairs with its exit at the start of
+    the second — only whole-group sharding folds it as one call."""
+    import random
+
+    os.makedirs(d, exist_ok=True)
+    ev_in = _BYNAME["ust_a:alpha_entry"]
+    ev_out = _BYNAME["ust_a:alpha_exit"]
+    w = StreamWriter(os.path.join(d, "rank0_stream_5_6.ctf"), 5, 6)
+    w.append(_gen_stream(random.Random(1), 5, 6))
+    w.append(_rec(ev_in.eid, 10_000, _U32.pack(1)))  # left open here
+    w.close()
+    w = StreamWriter(os.path.join(d, "rank1_stream_5_6.ctf"), 5, 6)
+    w.append(_rec(ev_out.eid, 10_250, _U32.pack(0)))  # …closed here: dur 250
+    w.append(_gen_stream(random.Random(2), 5, 6))
+    w.close()
+    # a second, independent group so jobs=2 really forks two shards
+    w = StreamWriter(os.path.join(d, "stream_7_8.ctf"), 7, 8)
+    w.append(_gen_stream(random.Random(3), 7, 8))
+    w.close()
+    write_metadata(d, _MODEL, ClockInfo.capture(), env={"hostname": "split"})
+
+
+def test_same_pid_tid_files_stay_one_group(tmp_path):
+    d = str(tmp_path / "t")
+    _write_split_pair_trace(d)
+    from repro.core.ctf import stream_files
+
+    groups = stream_groups(stream_files(d))
+    assert len(groups) == 2
+    split = next(g for g in groups if len(g) == 2)
+    # sorted file order within the group: rank0 before rank1
+    assert [os.path.basename(p) for p in split] == [
+        "rank0_stream_5_6.ctf",
+        "rank1_stream_5_6.ctf",
+    ]
+    # every partition keeps each group whole on one shard, whatever the count
+    whole = {tuple(g) for g in groups}
+    for shards in (2, 3, 8):
+        parts = _partition_groups(groups, shards)
+        assert sum(len(s) for s in parts) == len(groups)
+        for shard in parts:
+            for g in shard:
+                assert tuple(g) in whole
+
+
+def test_split_pair_folds_identically_parallel(tmp_path):
+    """The cross-file pair must tally as ONE 250ns call under every job
+    count — the observable proof groups never split across workers."""
+    d = str(tmp_path / "t")
+    _write_split_pair_trace(d)
+    ref = fold_trace(d, jobs=1)
+    assert ref.apis[("ust_a", "alpha")].max_ns >= 250
+    _assert_jobs_agree(d)
+
+
+# ---------------------------------------------------------------------------
+# Failure surface: a poisoned shard must raise, never truncate the tally
+# ---------------------------------------------------------------------------
+
+
+def _poison(path: str) -> None:
+    """Corrupt a stream into an unreadable container: zstd frame magic with
+    garbage body — decompression in the worker raises."""
+    with open(path, "wb") as f:
+        f.write(b"\x28\xb5\x2f\xfd" + b"\x00garbage\xff" * 4)
+
+
+def test_poisoned_shard_surfaces_error(tmp_path):
+    d = str(tmp_path / "t")
+    os.makedirs(d)
+    for i in range(4):
+        w = StreamWriter(os.path.join(d, f"stream_{50 + i}_{9}.ctf"), 50 + i, 9)
+        import random
+
+        w.append(_gen_stream(random.Random(i), 50 + i, 9))
+        w.close()
+    write_metadata(d, _MODEL, ClockInfo.capture(), env={})
+    _poison(os.path.join(d, "stream_52_9.ctf"))
+    with pytest.raises(RuntimeError, match="parallel fold .* no partial tally"):
+        fold_trace(d, jobs=2)
+    # serial path fails too (same poison), so parallel hides nothing extra
+    with pytest.raises(Exception):
+        fold_trace(d, jobs=1)
+
+
+def test_truncated_header_is_benign_not_poison(tmp_path):
+    """A torn record tail is NOT an error (crash-mid-write is a normal
+    trace state): both serial and parallel folds stop cleanly at it."""
+    d = str(tmp_path / "t")
+    os.makedirs(d)
+    w = StreamWriter(os.path.join(d, "stream_1_2.ctf"), 1, 2)
+    w.append(_rec(_BYNAME["ust_a:alpha_entry"].eid, 5, _U32.pack(1)))
+    w.append(RECORD_HEADER.pack(999, 1, 7)[:9])  # torn mid-header
+    w.close()
+    w = StreamWriter(os.path.join(d, "stream_3_4.ctf"), 3, 4)
+    w.append(_rec(_BYNAME["ust_a:alpha_entry"].eid, 6, _U32.pack(1)))
+    w.close()
+    write_metadata(d, _MODEL, ClockInfo.capture(), env={})
+    assert canon(fold_trace(d, jobs=2)) == canon(fold_trace(d, jobs=1))
+
+
+# ---------------------------------------------------------------------------
+# Scale smoke (CI bench job: pytest -m slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_parallel_fold_1m_event_smoke(tmp_path):
+    """1M events through the real recorder→ring→StreamWriter pipeline:
+    jobs=4 and the sidecar fast path both reproduce the jobs=1 tally."""
+    from benchmarks.analysis_speed import build_trace
+
+    d = str(tmp_path / "t")
+    os.makedirs(d)
+    n = build_trace(d, 1_000_000, streams=4)
+    assert n >= 950_000  # builder floors to whole record blocks
+    ref = canon(fold_trace(d, jobs=1, use_sidecar=False))
+    assert canon(fold_trace(d, jobs=4, use_sidecar=False)) == ref
+    assert build_sidecars(d) == 4
+    assert canon(fold_trace(d, jobs=4, use_sidecar=True)) == ref

@@ -33,6 +33,27 @@ METRICS = [
         "composite row-ops ratio x",
         True,
     ),
+    (
+        "BENCH_smoke.json",
+        "analysis_speed.parallel.speedup_max",
+        "parallel fold jobs-sweep max x",
+        True,
+    ),
+    (
+        "BENCH_smoke.json",
+        "analysis_speed.parallel.sidecar_speedup",
+        "columnar sidecar fold speedup x",
+        True,
+    ),
+    (
+        "BENCH_smoke.json",
+        "analysis_speed.parallel.combined_speedup",
+        "parallel+sidecar combined x",
+        True,
+    ),
+    ("BENCH_analysis.json", "tally.fast_events_per_s", "analysis fold ev/s", True),
+    ("BENCH_analysis.json", "parallel.speedup_max", "analysis jobs-sweep max x", True),
+    ("BENCH_analysis.json", "parallel.sidecar_speedup", "analysis sidecar x", True),
     ("BENCH_smoke.json", "stream_bw.ratio", "stream delta reduction x", True),
     ("BENCH_stream_bw.json", "ratio", "stream_bw standalone x", True),
     ("BENCH_collection.json", "enabled_net_ns", "collection enabled net ns", False),

@@ -33,7 +33,11 @@ def run_smoke(json_path: str) -> None:
     print("== smoke: §3.1 collection hot-path cost (legacy vs reserve/commit) ==")
     tc = tracepoint_cost.run()
     for k, v in sorted(tc.items()):
-        print(f"  {k:30s} {v:12.1f}")
+        if isinstance(v, dict):  # the per-fidelity-mode sweep
+            for kk, vv in sorted(v.items()):
+                print(f"  {k}.{kk:28s} {vv:12.3f}")
+        else:
+            print(f"  {k:30s} {v:12.1f}")
     results["tracepoint_cost"] = tc
     # standalone collection-path artifact, tracked by tools/bench_delta.py
     coll_path = os.path.join(os.path.dirname(json_path) or ".", "BENCH_collection.json")

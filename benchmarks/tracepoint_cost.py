@@ -125,6 +125,33 @@ def run() -> Dict[str, float]:
     out["speedup_single"] = statistics.median(ratios_single)
     out["speedup_pair"] = statistics.median(ratios_pair)
 
+    # fidelity-ladder sweep (§5.2 ladder, run-time knob): the same fused
+    # pair workload per rung.  Producer-side cost only — "tally-only" pays
+    # full recorder cost here (its win is downstream: no stream files), the
+    # "sampled" rung's gate skips 63/64 of the record bodies, and "off"
+    # falls through the enablement check like a session-less call.
+    interval = 64
+    mode_names = ("full", "sampled", "tally-only", "off")
+    best_m = {m: float("inf") for m in mode_names}
+    tp.attach(reg, eids, ring_reserve=True)
+    for _ in range(7):  # interleaved rounds, same drift argument as above
+        for m in mode_names:
+            tp.set_fidelity(m, interval=interval)
+            drain()
+            best_m[m] = min(best_m[m], _time_block(fused_pair_call, n // 2) / 2)
+    tp.set_fidelity("full")
+    full_ns = best_m["full"]
+    out["modes"] = {
+        "sampling_interval": interval,
+        "full_ns_per_event": full_ns,
+        "sampled_ns_per_event": best_m["sampled"],
+        "tally_only_ns_per_event": best_m["tally-only"],
+        "off_ns_per_event": best_m["off"],
+        "sampled_fraction_of_full": best_m["sampled"] / full_ns,
+        "tally_only_fraction_of_full": best_m["tally-only"] / full_ns,
+        "off_fraction_of_full": best_m["off"] / full_ns,
+    }
+
     # throughput + zero-copy consumer drain (reserve path, pair workload)
     rb = reg.get()
     rb.drain()
@@ -154,7 +181,12 @@ def run() -> Dict[str, float]:
 def main(json_path=None):
     out = run()
     for k, v in out.items():
-        print(f"  {k:28s} {v:,.1f}")
+        if isinstance(v, dict):
+            print(f"  {k}:")
+            for kk, vv in v.items():
+                print(f"    {kk:30s} {vv:,.3f}")
+        else:
+            print(f"  {k:28s} {v:,.1f}")
     print(
         f"  -> pair workload speedup (net): {out['speedup_pair']:.2f}x, "
         f"single record: {out['speedup_single']:.2f}x"

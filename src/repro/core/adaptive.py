@@ -178,6 +178,23 @@ class AdaptiveContext:
         tr.registry.set_capacity(int(nbytes))
         self._act("ring_bytes", str(int(nbytes)), reason)
 
+    def set_mode(self, mode: str, reason: str = "") -> None:
+        """Move the session along the fidelity ladder mid-run
+        (``"full" | "sampled" | "tally-only" | "off"``) — the
+        escalate-on-trouble lever.  No-op when already on that rung."""
+        tr = self._controller._tracer
+        if tr is None:
+            return
+        prev = tr.set_mode(mode)
+        if prev != mode:
+            self._act("fidelity", mode, reason)
+
+    @property
+    def mode(self) -> str:
+        """Current fidelity rung of the attached session ("full" unbound)."""
+        tr = self._controller._tracer
+        return tr.fidelity if tr is not None else "full"
+
     def advise(self, knob: str, value: str, reason: str = "") -> None:
         """Record an advisory-only action (no knob turned): it lands in the
         controller log and as an ``ust_repro:advisory`` trace event."""
@@ -319,6 +336,86 @@ class RingPressurePolicy(AdaptivePolicy):
             min(self.max_bytes, int(cur * self.factor)),
             f"{dropped} events dropped in window",
         )
+
+
+class EscalateFidelity(AdaptivePolicy):
+    """Walk the fidelity ladder on evidence: cheap by default, full on trouble.
+
+    The run sits at ``floor`` (default ``tally-only`` — counts but no stream
+    files).  Each window that shows trouble — the watched API's mean latency
+    at or above ``latency_high_ns``, or (``on_drops``) ring-buffer discards —
+    climbs one rung toward ``ceiling``; ``healthy_windows`` consecutive calm
+    windows step one rung back down toward ``floor``.  Every transition goes
+    through the torn-free :meth:`~repro.core.tracer.Tracer.set_mode` handoff
+    and is logged as an ``AdaptiveAction`` + advisory event, so the trace
+    records *when* and *why* its own fidelity changed.
+
+    ``floor`` should stay at ``tally-only`` or higher: on the ``off`` rung
+    nothing is recorded, so no evidence can ever trigger re-escalation
+    (drops excepted — rings are idle too, so there are none).
+    """
+
+    name = "escalate-fidelity"
+
+    #: rung order, cheapest first
+    LADDER = ("off", "tally-only", "sampled", "full")
+
+    def __init__(
+        self,
+        provider: str,
+        api: str,
+        latency_high_ns: float,
+        floor: str = "tally-only",
+        ceiling: str = "full",
+        healthy_windows: int = 3,
+        on_drops: bool = True,
+        device: bool = False,
+    ):
+        if floor not in self.LADDER or ceiling not in self.LADDER:
+            raise ValueError(f"floor/ceiling must be one of {self.LADDER}")
+        if self.LADDER.index(floor) > self.LADDER.index(ceiling):
+            raise ValueError(f"floor {floor!r} above ceiling {ceiling!r}")
+        self.provider = provider
+        self.api = api
+        self.latency_high_ns = latency_high_ns
+        self.floor = floor
+        self.ceiling = ceiling
+        self.healthy_windows = max(1, int(healthy_windows))
+        self.on_drops = on_drops
+        self.device = device
+        self._calm = 0
+
+    def _step(self, mode: str, up: bool) -> str:
+        i = self.LADDER.index(mode) + (1 if up else -1)
+        i = min(max(i, self.LADDER.index(self.floor)), self.LADDER.index(self.ceiling))
+        return self.LADDER[i]
+
+    def tick(self, ctx: AdaptiveContext) -> None:
+        lat = ctx.window_latency_ns(self.provider, self.api, self.device)
+        dropped = ctx.dropped_in_window() if self.on_drops else 0
+        trouble = lat >= self.latency_high_ns or dropped > 0
+        cur = ctx.mode
+        if cur not in self.LADDER:
+            return
+        if trouble:
+            self._calm = 0
+            nxt = self._step(cur, up=True)
+            if nxt != cur:
+                why = (
+                    f"{self.provider}:{self.api} latency {lat:.0f}ns≥{self.latency_high_ns:.0f}ns"
+                    if lat >= self.latency_high_ns
+                    else f"{dropped} events dropped in window"
+                )
+                ctx.set_mode(nxt, why)
+        else:
+            self._calm += 1
+            if self._calm >= self.healthy_windows:
+                nxt = self._step(cur, up=False)
+                if nxt != cur:
+                    self._calm = 0
+                    ctx.set_mode(
+                        nxt, f"{self.healthy_windows} healthy windows, stepping down"
+                    )
 
 
 class ThresholdAdvisoryPolicy(AdaptivePolicy):

@@ -513,6 +513,32 @@ def telemetry_model() -> APIModel:
     )
 
 
+def user_model() -> APIModel:
+    """ust_user — application-visible user API (≙ Extrae's user events).
+
+    ``annotate`` is a one-shot marker with a JSON-encoded payload;
+    ``phase`` is an entry/exit pair bracketing an application phase, so
+    user phases tally and fold exactly like traced API calls.  Appended
+    *last* in :func:`builtin_models` so every pre-existing event id is
+    unchanged (trace-format stability across the PR sequence).
+    """
+    return APIModel(
+        provider="ust_user",
+        apis=(
+            APISpec(
+                "annotate",
+                params=(P("name", "str"), P("payload", "str")),
+                counter=True,
+            ),
+            APISpec(
+                "phase",
+                params=(P("name", "str"),),
+                meta=(("OutScalar", P("name", "str")),),
+            ),
+        ),
+    )
+
+
 def builtin_models() -> Tuple[APIModel, ...]:
     return (
         framework_model(),
@@ -520,6 +546,7 @@ def builtin_models() -> Tuple[APIModel, ...]:
         kernel_model(),
         collective_model(),
         telemetry_model(),
+        user_model(),  # must stay last: appending keeps earlier eids stable
     )
 
 

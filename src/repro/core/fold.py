@@ -342,6 +342,28 @@ class FoldEngine:
                             row[3] = dur
                     touched = True
                 # K_SKIP (samples, unknown phases): header-only cost
+            else:
+                # eid beyond this model: a record from a newer writer (e.g. a
+                # user annotate event this reader's model predates).  Never
+                # raise; when the payload opens with a plausible length-
+                # prefixed name (the ust_user wire shape), surface it as a
+                # name-keyed calls-only passthrough row — otherwise skip on
+                # the header alone, the historical behavior.
+                poff = off + RECORD_HEADER_SIZE
+                rec_end = off + total
+                if poff + 4 <= rec_end:
+                    (ln,) = len_unpack(buf, poff)
+                    if 1 <= ln <= 255 and poff + 4 + ln <= rec_end:
+                        name = bytes(buf[poff + 4 : poff + 4 + ln]).decode(
+                            errors="replace"
+                        )
+                        key = intern_key("unknown", name)
+                        row = rows.get(key)
+                        if row is None:
+                            rows[key] = [1, 0, 0, 0]
+                        else:
+                            row[0] += 1
+                        touched = True
             off += total
         state.events_seen += events
         if touched:
@@ -508,4 +530,15 @@ def fold_trace(trace_dir: str, jobs: int = 1, use_sidecar: bool = True) -> Tally
     host = meta.env.get("hostname", "")
     if host:
         tally.hostnames.add(host)
+    # sampled-session estimator: a trace recorded *entirely* on the
+    # "sampled" fidelity rung carries exact 1/N semantics — scale the host
+    # rows into unbiased estimates.  Mixed-fidelity sessions (mid-run rung
+    # flips) keep their raw conservative counts: a uniform scale would be
+    # wrong for the windows recorded at other rungs, and the advisory
+    # records in the trace mark exactly when the rungs changed.
+    fid = meta.env.get("fidelity")
+    if isinstance(fid, dict) and fid.get("modes_used") == ["sampled"]:
+        interval = int(fid.get("interval", 1))
+        if interval > 1:
+            tally.scale(interval)
     return tally

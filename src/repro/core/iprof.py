@@ -30,6 +30,7 @@ from .plugins import pretty as pretty_plugin
 from .plugins import tally as tally_plugin
 from .plugins import timeline as timeline_plugin
 from .plugins import validate as validate_plugin
+from .tracepoints import FIDELITY_MODES
 from .tracer import MODES, TraceConfig, Tracer
 
 
@@ -55,6 +56,9 @@ def _run(args) -> int:
         legacy_graph=args.legacy_graph,
         ring_reserve=not args.no_ring_reserve,
         columnar=args.columnar,
+        fidelity=args.fidelity,
+        sampling_interval=args.sampling_interval,
+        sampling_seed=args.sampling_seed,
     )
     old_argv = sys.argv
     sys.argv = [target] + list(args.args)
@@ -68,6 +72,10 @@ def _run(args) -> int:
         f"[iprof] trace: {h.trace_dir} mode={h.mode} events={h.events} "
         f"dropped={h.dropped} bytes={h.size_bytes}"
     )
+    if h.fidelity != "full":
+        line += f" fidelity={h.fidelity}"
+        if h.fidelity == "sampled":
+            line += f" (1/{cfg.sampling_interval} systematic, tallies estimated)"
     if args.stream_to:
         line += f" streamed={h.streamed} stream_dropped={h.stream_dropped}"
     print(line)
@@ -287,6 +295,28 @@ def build_parser() -> argparse.ArgumentParser:
 
     r = sub.add_parser("run", help="launch a traced entry point")
     r.add_argument("-m", "--mode", choices=MODES, default="default")
+    r.add_argument(
+        "--fidelity",
+        choices=FIDELITY_MODES,
+        default="full",
+        help="fidelity ladder rung: full records everything enabled, sampled "
+        "keeps 1/N of entry/exit pairs (tallies report unbiased ~estimates), "
+        "tally-only folds in-process without writing streams, off disables "
+        "collection (repro.trace.set_mode can move the run mid-flight)",
+    )
+    r.add_argument(
+        "--sampling-interval",
+        type=int,
+        default=64,
+        metavar="N",
+        help="keep 1 of every N entry/exit pairs on the sampled rung",
+    )
+    r.add_argument(
+        "--sampling-seed",
+        type=int,
+        default=None,
+        help="seed the per-thread sampling phase for reproducible sampled runs",
+    )
     r.add_argument("--sample", action="store_true", help="enable device telemetry (§3.5)")
     r.add_argument("--sample-period", type=float, default=0.05)
     r.add_argument("-o", "--out", required=True)

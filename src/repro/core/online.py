@@ -73,6 +73,27 @@ class OnlineAnalyzer:
         with self._lock:
             self._engine.fold_chunk(self._state, chunk, pid, tid)
 
+    def note_discarded(self, n: int) -> None:
+        """Account ring drops observed by the consumer directly (tally-only
+        fidelity: there is no stream file to carry a discard record)."""
+        if n > 0:
+            with self._lock:
+                self._state.discarded += n
+
+    def finish(self, scale: int = 1) -> Tally:
+        """Final tally at session stop: flush unmatched entries as
+        zero-duration calls (exactly :meth:`FoldEngine.finish`, so a
+        tally-only session's aggregate matches what the offline fold of the
+        same records would produce) and, when ``scale > 1``, apply the
+        1/N sampling estimator (calls and total durations scale by N; the
+        tally is marked estimated).  Terminal: the state has been mutated by
+        the flush, so ``feed`` must not be called afterwards."""
+        with self._lock:
+            t = self._engine.finish(self._state)
+        if scale > 1:
+            t.scale(scale)
+        return t
+
     def snapshot(self) -> Tally:
         """Copy-on-read live tally (safe to render while tracing continues).
 

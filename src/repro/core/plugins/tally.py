@@ -74,6 +74,28 @@ class Tally:
     #: device-side totals (kernel/transfer spans) kept separately, like the
     #: paper's host vs device timeline rows
     device_apis: Dict[Tuple[str, str], ApiStat] = dataclasses.field(default_factory=dict)
+    #: host rows are scaled 1/N-sampling estimates (see :meth:`scale`) — the
+    #: renderer marks them, merges propagate the flag
+    estimated: bool = False
+    #: sampling interval behind the estimates (display only; 1 = exact)
+    sample_interval: int = 1
+
+    def scale(self, n: int) -> "Tally":
+        """Apply the 1/N systematic-sampling estimator to the host rows.
+
+        Every host ``apis`` row originates from an entry/exit pair, and the
+        sampled tier gates exactly those — so scaling calls and total
+        durations by N yields the unbiased estimate (uniform random phase ⇒
+        each call is selected with probability exactly 1/N).  ``min``/``max``
+        are observed extrema of the sample and stay unscaled; device spans
+        and counter samples are never gated, so ``device_apis`` stays exact.
+        """
+        for st in self.apis.values():
+            st.calls *= n
+            st.total_ns *= n
+        self.estimated = True
+        self.sample_interval = n
+        return self
 
     def add_interval(self, iv: Interval) -> None:
         table = self.device_apis if iv.device else self.apis
@@ -106,6 +128,9 @@ class Tally:
         self.processes |= other.processes
         self.threads |= other.threads
         self.discarded += other.discarded
+        if other.estimated:
+            self.estimated = True
+            self.sample_interval = max(self.sample_interval, other.sample_interval)
         return self
 
     # -- (de)serialization for the aggregation tree --------------------------
@@ -115,7 +140,7 @@ class Tally:
                 [p, a, s.calls, s.total_ns, s.min_ns, s.max_ns] for (p, a), s in t.items()
             ]
 
-        return {
+        out = {
             "apis": enc(self.apis),
             "device_apis": enc(self.device_apis),
             "hostnames": sorted(self.hostnames),
@@ -123,6 +148,10 @@ class Tally:
             "threads": sorted(list(t) for t in self.threads),
             "discarded": self.discarded,
         }
+        if self.estimated:  # omitted when exact: wire compat with old readers
+            out["estimated"] = True
+            out["sample_interval"] = self.sample_interval
+        return out
 
     @staticmethod
     def from_obj(d: dict) -> "Tally":
@@ -139,6 +168,8 @@ class Tally:
             processes=set(d["processes"]),
             threads={tuple(t) for t in d["threads"]},
             discarded=int(d["discarded"]),
+            estimated=bool(d.get("estimated", False)),
+            sample_interval=int(d.get("sample_interval", 1)),
         )
 
     # -- delta encoding for the streaming protocol (v2) -----------------------
@@ -180,7 +211,7 @@ class Tally:
         ):
             if old_set - cur_set:
                 raise ValueError(f"delta cannot express removed {label}")
-        return {
+        out = {
             "apis": enc_changed(self.apis, prev.apis, "apis"),
             "device_apis": enc_changed(self.device_apis, prev.device_apis, "device_apis"),
             "hostnames": sorted(self.hostnames - prev.hostnames),
@@ -188,6 +219,10 @@ class Tally:
             "threads": sorted(list(t) for t in self.threads - prev.threads),
             "discarded": self.discarded,
         }
+        if self.estimated:
+            out["estimated"] = True
+            out["sample_interval"] = self.sample_interval
+        return out
 
     def apply_delta(self, d: dict) -> "Tally":
         """Apply a delta produced by :meth:`delta_to` against this tally.
@@ -210,6 +245,9 @@ class Tally:
         self.processes |= set(d["processes"])
         self.threads |= {tuple(t) for t in d["threads"]}
         self.discarded = int(d["discarded"])
+        if d.get("estimated"):
+            self.estimated = True
+            self.sample_interval = max(self.sample_interval, int(d.get("sample_interval", 1)))
         return self
 
 
@@ -252,6 +290,13 @@ def tally_trace(
     host = src.meta.env.get("hostname", "")
     if host:
         t.hostnames.add(host)
+    # mirror fold_trace's sampled-session estimator so every analysis path
+    # reports the same (scaled) tally for a pure-sampled trace
+    fid = src.meta.env.get("fidelity")
+    if isinstance(fid, dict) and fid.get("modes_used") == ["sampled"]:
+        interval = int(fid.get("interval", 1))
+        if interval > 1:
+            t.scale(interval)
     return t
 
 
@@ -275,6 +320,7 @@ _BACKEND_LABEL = {
     "ust_kernel": "BACKEND_KERNEL",
     "ust_collective": "BACKEND_COLL",
     "ust_thapi": "BACKEND_THAPI",
+    "ust_user": "BACKEND_USER",
 }
 
 
@@ -354,17 +400,21 @@ def render(t: Tally, top: Optional[int] = None, device: bool = False) -> str:
             f"{len(t.threads)} Threads",
         ]
     )
+    #: host rows of a sampled session are scaled estimates — call counts and
+    #: times get a "~" prefix, and the banner says what they are
+    est = t.estimated and not device
     total = sum(s.total_ns for s in table.values()) or 1
     rows: List[Tuple] = sorted(table.items(), key=lambda kv: -kv[1].total_ns)
     if top is not None:
         rows = rows[:top]
     header = ("Name", "Time", "Time(%)", "Calls", "Average", "Min", "Max")
+    tilde = "~" if est else ""
     body = [
         (
             api,
-            fmt_ns(s.total_ns),
+            tilde + fmt_ns(s.total_ns),
             f"{100.0 * s.total_ns / total:.2f}%",
-            str(s.calls),
+            tilde + str(s.calls),
             fmt_ns(s.avg_ns),
             fmt_ns(s.min_ns if s.calls else 0),
             fmt_ns(s.max_ns),
@@ -372,6 +422,11 @@ def render(t: Tally, top: Optional[int] = None, device: bool = False) -> str:
         for (prov, api), s in rows
     ]
     out = [banner]
+    if est:
+        out.append(
+            f"[estimated] host rows scaled from 1/{t.sample_interval} "
+            "systematic sampling (~ marks unbiased estimates)"
+        )
     out.extend(_table(header, body))
     if t.discarded:
         out.append(f"[warning] {t.discarded} events discarded (ring-buffer pressure)")

@@ -271,3 +271,20 @@ class RingRegistry:
     @property
     def total_events(self) -> int:
         return sum(r.events for r in self.rings())
+
+    def counters(self) -> dict:
+        """One consistent snapshot of collection-side counters.
+
+        ``events``/``dropped`` are cumulative producer counts; ``used`` is
+        the bytes currently buffered (un-drained) across rings.  Cheap —
+        one lock acquisition for the ring list, then plain reads — so mode
+        conformance checks (e.g. "the off rung wrote nothing") and adaptive
+        policies can poll it without perturbing producers.
+        """
+        rings = self.rings()
+        return {
+            "rings": len(rings),
+            "events": sum(r.events for r in rings),
+            "dropped": sum(r.dropped for r in rings),
+            "used": sum(r.used() for r in rings),
+        }

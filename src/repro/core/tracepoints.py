@@ -56,6 +56,7 @@ active session every entry is 0 and tracepoints cost one list index + branch.
 
 from __future__ import annotations
 
+import random
 import struct
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -65,6 +66,23 @@ from .clock import now
 from .ringbuffer import RECORD_HEADER, RECORD_HEADER_SIZE, RingRegistry
 
 _LEN = struct.Struct("<I")
+
+#: the fidelity ladder (instrumentation-mode axis, orthogonal to the §5.2
+#: *content* modes minimal/default/full): how much each tracepoint costs.
+#:   full       — every enabled event is recorded (the historical behavior)
+#:   sampled    — 1/N systematic sampling of entry/exit *pairs* (uniform
+#:                random initial phase → exactly unbiased scaled estimates)
+#:   tally-only — record as usual, but the consumer folds in-process and no
+#:                .ctf stream is ever written (tracer.py's drain policy)
+#:   off        — every enablement flag is zeroed in place: recorders cost
+#:                one list index + branch, rings see zero writes
+FIDELITY_MODES = ("full", "sampled", "tally-only", "off")
+
+#: cap on the per-pair sampling-decision stacks: entries recorded without a
+#: matching exit (or across a mid-run fidelity flip) must not grow the
+#: per-thread state without bound.  Deeper nesting than this of one API on
+#: one thread is degenerate; beyond it exits fall back to "record".
+_SAMPLE_STACK_MAX = 1024
 
 
 def _segments(fields) -> List:
@@ -288,7 +306,57 @@ def _reserve_body(
             defaults.append("_str=_str")
     defaults.extend(["_tls=_tls", "_bind=_bind", "_now=_now"])
     defaults.extend(f"_pk{i}=_PK{i}" for i in range(len(fmts)))
+    # sampling helpers ride in EVERY variant's defaults (used only by the
+    # sampled codes): all four codes of one recorder share one parameter
+    # list, so a fidelity flip is a single atomic __code__ store — no
+    # __defaults__ rewrite racing concurrent callers
+    defaults.extend(["_sn=_SN", "_qi=_QI"])
     return lines, defaults, fmts
+
+
+def _sample_gate_lines(role: str, pair_idx: int) -> List[str]:
+    """Systematic-sampling gate prepended to a recorder body (sampled tier).
+
+    ``_q`` is the per-thread sampling state at ``_tls.q``: one list per
+    entry/exit pair, ``_q[pair_idx][0]`` that pair's call counter
+    (initialized to a uniform random phase in ``[0, N)`` by ``_qi``) and the
+    remaining elements its decision stack, so an exit follows its own
+    entry's decision under nesting.  Counters are *per pair*, not shared:
+    each API keeps 1 of every N of *its own* calls, so periodic workloads
+    (the common case — the same event sequence every step) cannot alias one
+    API onto "always selected" and another onto "never selected"; every
+    API's sampled count converges to calls/N.  The gate runs *before* the
+    enablement check: the counter indexes call attempts, so entry singles,
+    exit singles, and fused pair recorders stay mutually consistent
+    regardless of per-event enablement overrides.
+    """
+    lines = [
+        "    try:",
+        "        _q = _tls.q",
+        "    except AttributeError:",
+        "        _q = _qi(_tls)",
+        f"    _qp = _q[{pair_idx}]",
+    ]
+    if role == "pair":
+        lines += [
+            "    _c = _qp[0]",
+            "    _qp[0] = _c + 1",
+            "    if _c % _sn[0]: return",
+        ]
+    elif role == "entry":
+        lines += [
+            "    _c = _qp[0]",
+            "    _qp[0] = _c + 1",
+            "    _sel = 0 if _c % _sn[0] else 1",
+            f"    if len(_qp) < {_SAMPLE_STACK_MAX}: _qp.append(_sel)",
+            "    if not _sel: return",
+        ]
+    else:  # exit: follow the matching entry's decision; empty stack (entry
+        # recorded before a flip into sampled mode) falls back to "record"
+        lines += [
+            "    if len(_qp) > 1 and not _qp.pop(): return",
+        ]
+    return lines
 
 
 # ---------------------------------------------------------------------------
@@ -327,16 +395,29 @@ def _legacy_payload_lines(
 # ---------------------------------------------------------------------------
 
 
-def codegen_recorder(ev: EventType, reserve: bool = True) -> str:
-    """Source for one tracepoint function (≙ one TRACEPOINT_EVENT of Fig 3)."""
+def codegen_recorder(
+    ev: EventType,
+    reserve: bool = True,
+    sampled_pair: Optional[Tuple[int, str]] = None,
+) -> str:
+    """Source for one tracepoint function (≙ one TRACEPOINT_EVENT of Fig 3).
+
+    ``sampled_pair=(pair_idx, role)`` emits the statistical-sampling variant:
+    the systematic 1/N gate of :func:`_sample_gate_lines` runs first, then
+    the normal enablement check and record body.
+    """
     args = [p.name for p in ev.fields]
     fname = ev.name.replace(":", "__")
+    gate = (
+        _sample_gate_lines(sampled_pair[1], sampled_pair[0]) if sampled_pair else []
+    )
     if reserve:
         body, defaults, _ = _reserve_body(
             [_RecordPlan(ev, "_now()")], nrecords=1, extra_drop=0
         )
         sig = ", ".join(args + defaults)
         lines = [f"def {fname}({sig}):"]
+        lines.extend(gate)
         lines.append(f"    if not _e[{ev.eid}]: return")
         lines.extend(body)
         return "\n".join(lines)
@@ -345,6 +426,7 @@ def codegen_recorder(ev: EventType, reserve: bool = True) -> str:
     _, defaults, _ = _reserve_body([_RecordPlan(ev, "_now()")], 1, 0)
     sig = ", ".join(args + defaults)
     lines = [f"def {fname}({sig}):"]
+    lines.extend(gate)
     lines.append(f"    if not _enabled[{ev.eid}]: return")
     pay_lines, payload = _legacy_payload_lines(ev, "_S", "_p")
     lines.extend(pay_lines)
@@ -356,7 +438,11 @@ def codegen_recorder(ev: EventType, reserve: bool = True) -> str:
 
 
 def codegen_pair_recorder(
-    entry_ev: EventType, exit_ev: EventType, pair_idx: int, reserve: bool = True
+    entry_ev: EventType,
+    exit_ev: EventType,
+    pair_idx: int,
+    reserve: bool = True,
+    sampled: bool = False,
 ) -> str:
     """Source for a fused entry/exit recorder: two framed records, one call.
 
@@ -375,6 +461,7 @@ def codegen_pair_recorder(
     e_args = [p.name for p in entry_ev.fields]
     x_args = ["x_" + p.name for p in exit_ev.fields]
     fname = entry_ev.name.replace(":", "__").replace("_entry", "_pair")
+    gate = _sample_gate_lines("pair", pair_idx) if sampled else []
 
     def fallback(flag_expr):
         fa_lines, fa_payload = _legacy_payload_lines(
@@ -399,12 +486,14 @@ def codegen_pair_recorder(
         body, defaults, _ = _reserve_body(records, nrecords=2, extra_drop=1)
         sig = ", ".join(e_args + ["_ts_entry"] + x_args + defaults)
         lines = [f"def {fname}({sig}):"]
+        lines.extend(gate)
         lines.extend(fallback(f"_e2[{pair_idx}]"))
         lines.extend(body)
         return "\n".join(lines)
     _, defaults, _ = _reserve_body(records, 2, 1)
     sig = ", ".join(e_args + ["_ts_entry"] + x_args + defaults)
     lines = [f"def {fname}({sig}):"]
+    lines.extend(gate)
     lines.extend(fallback(f"_enabled2[{pair_idx}]"))
     pay_a, payload_a = _legacy_payload_lines(entry_ev, "_SA", "_pa")
     lines.extend(pay_a)
@@ -460,21 +549,54 @@ class Tracepoints:
     def __init__(self, model: TraceModel, clock: Optional[Callable[[], int]] = None):
         self.model = model
         self.enabled: List[int] = [0] * len(model.events)
+        #: the session's *wanted* enablement, as handed to attach()/set_event:
+        #: the source of truth that "off" zeroes `enabled` against and that
+        #: leaving "off" restores from
+        self._session_enabled: List[int] = [0] * len(model.events)
         #: derived per-pair flags: enabled[entry] & enabled[exit], so the
         #: fused recorders pay one list index instead of two
         self.enabled_pair: List[int] = []
         self._pair_eids: List[Tuple[int, int]] = []
         self.clock = clock or now
         self.ring_reserve = True
+        #: current rung of the fidelity ladder (see FIDELITY_MODES)
+        self.fidelity = "full"
+        self._sampled = False
+        #: 1/N sampling interval, in a one-element list so the live value is
+        #: readable through the recorders' `_sn` default without a rebind
+        self._sample_interval: List[int] = [64]
+        self._sample_rng = random.Random()
+        #: forced initial counter phase (tests/ensemble enumeration); None
+        #: draws uniformly from [0, N) per thread — the unbiasedness source
+        self._sample_phase: Optional[int] = None
+        self._qinit = self._make_qinit()
         self._registry_holder = _RegistryHolder()
         self._binder = self._make_binder(self._registry_holder)
         self.record: Dict[str, Callable] = {}
         self.record_pair: Dict[str, Callable] = {}
         self.unpack: Dict[int, Callable] = {}
         self._namespaces: List[dict] = []
-        #: recorder → (reserve code, legacy code, ns, default names);
-        #: attach() swaps __code__ and refreshes __defaults__ from ns
+        #: recorder → ((sampled, reserve) → code, ns, default names); attach()
+        #: picks a code and refreshes __defaults__ from ns, set_fidelity()
+        #: swaps codes alone (one atomic store per recorder)
         self._variants: Dict[Callable, Tuple] = {}
+
+        # entry/exit pairing must precede single-recorder codegen: the
+        # sampled variants of entry/exit singles address their pair's
+        # decision stack by pair index
+        by_key: Dict[Tuple[str, str], Dict[str, EventType]] = {}
+        for ev in model.events:
+            if ev.phase in ("entry", "exit"):
+                by_key.setdefault((ev.provider, ev.api), {})[ev.phase] = ev
+        pair_role: Dict[int, Tuple[int, str]] = {}  # eid → (pair_idx, role)
+        for (provider, api), phases in by_key.items():
+            if "entry" not in phases or "exit" not in phases:
+                continue
+            pair_idx = len(self._pair_eids)
+            self._pair_eids.append((phases["entry"].eid, phases["exit"].eid))
+            self.enabled_pair.append(0)
+            pair_role[phases["entry"].eid] = (pair_idx, "entry")
+            pair_role[phases["exit"].eid] = (pair_idx, "exit")
 
         for ev in model.events:
             ns = self._base_ns()
@@ -482,13 +604,18 @@ class Tracepoints:
                 if seg[0] == "fixed":
                     ns[f"_S{i}"] = seg[2]
             names = self._install_structs(ns, [_RecordPlan(ev, "_now()")], 1, 0)
+            sp = pair_role.get(ev.eid)
+            sources = [
+                ((False, True), codegen_recorder(ev, reserve=True)),
+                ((False, False), codegen_recorder(ev, reserve=False)),
+            ]
+            if sp is not None:  # only entry/exit pairs get a sampled tier
+                sources += [
+                    ((True, True), codegen_recorder(ev, reserve=True, sampled_pair=sp)),
+                    ((True, False), codegen_recorder(ev, reserve=False, sampled_pair=sp)),
+                ]
             fn = self._compile_variants(
-                ns,
-                ev.name.replace(":", "__"),
-                codegen_recorder(ev, reserve=True),
-                codegen_recorder(ev, reserve=False),
-                ev.name,
-                names,
+                ns, ev.name.replace(":", "__"), sources, ev.name, names
             )
             self.record[ev.name] = fn
 
@@ -500,18 +627,12 @@ class Tracepoints:
             exec(compile(usrc, f"<unpacker {ev.name}>", "exec"), uns)
             self.unpack[ev.eid] = uns["unpack_" + ev.name.replace(":", "__")]
 
-        # fused entry/exit pair recorders
-        by_key: Dict[Tuple[str, str], Dict[str, EventType]] = {}
-        for ev in model.events:
-            if ev.phase in ("entry", "exit"):
-                by_key.setdefault((ev.provider, ev.api), {})[ev.phase] = ev
+        # fused entry/exit pair recorders (same pair order as the precompute)
         for (provider, api), phases in by_key.items():
             if "entry" not in phases or "exit" not in phases:
                 continue
             entry_ev, exit_ev = phases["entry"], phases["exit"]
-            pair_idx = len(self._pair_eids)
-            self._pair_eids.append((entry_ev.eid, exit_ev.eid))
-            self.enabled_pair.append(0)
+            pair_idx = pair_role[entry_ev.eid][0]
             ns = self._base_ns()
             for i, seg in enumerate(_segments(entry_ev.fields)):
                 if seg[0] == "fixed":
@@ -526,11 +647,16 @@ class Tracepoints:
                 _RecordPlan(exit_ev, "_now()", arg_prefix="x_"),
             ]
             names = self._install_structs(ns, records, 2, 1)
+            sources = [
+                ((False, True), codegen_pair_recorder(entry_ev, exit_ev, pair_idx, reserve=True)),
+                ((False, False), codegen_pair_recorder(entry_ev, exit_ev, pair_idx, reserve=False)),
+                ((True, True), codegen_pair_recorder(entry_ev, exit_ev, pair_idx, reserve=True, sampled=True)),
+                ((True, False), codegen_pair_recorder(entry_ev, exit_ev, pair_idx, reserve=False, sampled=True)),
+            ]
             fn = self._compile_variants(
                 ns,
                 entry_ev.name.replace(":", "__").replace("_entry", "_pair"),
-                codegen_pair_recorder(entry_ev, exit_ev, pair_idx, reserve=True),
-                codegen_pair_recorder(entry_ev, exit_ev, pair_idx, reserve=False),
+                sources,
                 f"{provider}:{api}",
                 names,
             )
@@ -555,9 +681,33 @@ class Tracepoints:
             # can never alias a dead thread's binding.
             "_tls": threading.local(),
             "_bind": self._binder,
+            "_SN": self._sample_interval,
+            "_QI": self._qinit,
         }
         self._namespaces.append(ns)
         return ns
+
+    def _make_qinit(self) -> Callable:
+        """Cold-path sampling-state init: build this thread's ``_tls.q`` —
+        one ``[counter, *decision_stack]`` list per entry/exit pair, each
+        counter starting at a (random or forced) phase in ``[0, N)``.
+        Random phases are drawn independently per pair; a forced phase
+        (tests enumerating the ensemble) applies to every pair."""
+
+        def qinit(tls):
+            n = self._sample_interval[0]
+            ph = self._sample_phase
+            q: list = []
+            for _ in range(len(self._pair_eids)):
+                if ph is not None:
+                    p = ph
+                else:
+                    p = self._sample_rng.randrange(n) if n > 1 else 0
+                q.append([p])
+            tls.q = q
+            return q
+
+        return qinit
 
     @staticmethod
     def _make_binder(holder) -> Callable:
@@ -583,13 +733,25 @@ class Tracepoints:
             ns[f"_PK{i}"] = struct.Struct(fmt).pack_into
         return [d.split("=", 1)[1] for d in defaults]
 
-    def _compile_variants(self, ns, pyname, src_reserve, src_legacy, label, default_names):
-        exec(compile(src_reserve, f"<tracepoint {label}>", "exec"), ns)
-        fn = ns[pyname]
-        exec(compile(src_legacy, f"<tracepoint legacy {label}>", "exec"), ns)
-        legacy_fn = ns.pop(pyname)
+    def _compile_variants(self, ns, pyname, sources, label, default_names):
+        """Compile every (sampled, reserve) source into one namespace; the
+        first source's function object is the installed callable, the rest
+        contribute only their code objects.  Recorders with no sampled tier
+        (spans, counters, samples) alias the full codes — a fidelity flip
+        still swaps them, to the code they already run."""
+        codes: Dict[Tuple[bool, bool], object] = {}
+        fn = None
+        for key, src in sources:
+            tag = f"{'sampled ' if key[0] else ''}{'reserve' if key[1] else 'legacy'}"
+            exec(compile(src, f"<tracepoint {tag} {label}>", "exec"), ns)
+            f = ns.pop(pyname)
+            if fn is None:
+                fn = f
+            codes[key] = f.__code__
+        for r in (True, False):
+            codes.setdefault((True, r), codes[(False, r)])
         ns[pyname] = fn
-        self._variants[fn] = (fn.__code__, legacy_fn.__code__, ns, default_names)
+        self._variants[fn] = (codes, ns, default_names)
         return fn
 
     # -- session binding -----------------------------------------------------
@@ -598,13 +760,31 @@ class Tracepoints:
         """Point every recorder's ``_tls`` default at the session's
         thread-local.  A fresh local has no ``c`` attribute anywhere, so all
         threads fall to the bind path on first touch — cache invalidation
-        across sessions comes for free."""
-        for fn, (rcode, lcode, ns, names) in self._variants.items():
+        across sessions comes for free (the sampling state ``_tls.q`` rides
+        the same object and is invalidated the same way)."""
+        key = (self._sampled, self.ring_reserve)
+        for fn, (codes, ns, names) in self._variants.items():
             ns["_tls"] = tls
-            code = rcode if self.ring_reserve else lcode
+            code = codes[key]
             if fn.__code__ is not code:
                 fn.__code__ = code
             fn.__defaults__ = tuple(ns[n] for n in names)
+
+    def _swap_codes(self) -> None:
+        """Flip every recorder to the current (sampled, reserve) code.
+
+        The mode-switch handoff invariant: all variants of one recorder share
+        one parameter list and one defaults tuple, so this is a single atomic
+        ``__code__`` store per recorder under the GIL — a concurrent caller
+        runs either the old or the new code in full, and both publish whole
+        framed records (pack first, then one atomic ``head`` store), so no
+        torn or reordered records can exist across the flip.
+        """
+        key = (self._sampled, self.ring_reserve)
+        for fn, (codes, _ns, _names) in self._variants.items():
+            code = codes[key]
+            if fn.__code__ is not code:
+                fn.__code__ = code
 
     def attach(
         self,
@@ -614,24 +794,71 @@ class Tracepoints:
     ) -> None:
         self._registry_holder.registry = registry
         self.ring_reserve = bool(ring_reserve)
+        self.fidelity = "full"  # every session starts at the top rung
+        self._sampled = False
         self._rebind_session(registry._tls)
         for eid in range(len(self.enabled)):
             self.enabled[eid] = 0
+            self._session_enabled[eid] = 0
         for eid in enabled_eids:
             self.enabled[eid] = 1
+            self._session_enabled[eid] = 1
         self._recompute_pairs()
 
     def detach(self) -> None:
         for eid in range(len(self.enabled)):
             self.enabled[eid] = 0
+            self._session_enabled[eid] = 0
+        self.fidelity = "full"
+        self._sampled = False
         self._recompute_pairs()
         self._rebind_session(threading.local())  # drop all ring bindings
         self._registry_holder.registry = None
 
     def set_event(self, name: str, on: bool) -> None:
         ev = self.model.by_name()[name]
-        self.enabled[ev.eid] = 1 if on else 0
+        self._session_enabled[ev.eid] = 1 if on else 0
+        if self.fidelity != "off":  # "off" keeps the live flags zeroed
+            self.enabled[ev.eid] = 1 if on else 0
         self._recompute_pairs()
+
+    def set_fidelity(
+        self,
+        mode: str,
+        interval: Optional[int] = None,
+        phase: Optional[int] = None,
+        seed: Optional[int] = None,
+    ) -> str:
+        """Move to a rung of the fidelity ladder; returns the previous rung.
+
+        ``interval`` updates the 1/N sampling interval (in place: already
+        bound threads see it on their next draw).  ``phase`` forces the
+        per-thread initial counter phase (tests enumerate the ensemble with
+        it); ``seed`` reseeds the phase RNG.  Safe mid-run: see _swap_codes.
+        """
+        if mode not in FIDELITY_MODES:
+            raise ValueError(f"unknown fidelity {mode!r} (want one of {FIDELITY_MODES})")
+        if interval is not None:
+            if int(interval) < 1:
+                raise ValueError("sampling interval must be >= 1")
+            self._sample_interval[0] = int(interval)
+        if seed is not None:
+            self._sample_rng = random.Random(seed)
+        self._sample_phase = phase
+        prev = self.fidelity
+        self.fidelity = mode
+        want_sampled = mode == "sampled"
+        if want_sampled != self._sampled:
+            self._sampled = want_sampled
+            self._swap_codes()
+        if mode == "off":
+            for eid in range(len(self.enabled)):
+                self.enabled[eid] = 0
+        else:
+            for eid in range(len(self.enabled)):
+                self.enabled[eid] = self._session_enabled[eid]
+        self._recompute_pairs()
+        return prev
 
     def _recompute_pairs(self) -> None:
         enabled = self.enabled

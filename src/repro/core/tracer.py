@@ -37,7 +37,7 @@ from .api_model import TraceModel, builtin_trace_model
 from .clock import ClockInfo, now
 from .ctf import StreamWriter, trace_size_bytes, write_metadata
 from .ringbuffer import RingRegistry
-from .tracepoints import Tracepoints
+from .tracepoints import FIDELITY_MODES, Tracepoints
 
 MODES = ("minimal", "default", "full")
 
@@ -111,10 +111,24 @@ class TraceConfig:
     #: process's in-process master forwards upstream — keeps rank identity
     #: visible at every level of the aggregation tree
     stream_ranks: bool = True
+    #: starting rung of the fidelity ladder (orthogonal to ``mode``, which
+    #: selects *what* is traced): "full" | "sampled" | "tally-only" | "off".
+    #: Switchable mid-run via Tracer.set_mode / repro.trace.set_mode.
+    fidelity: str = "full"
+    #: 1/N systematic-sampling interval for the "sampled" rung
+    sampling_interval: int = 64
+    #: seed for the per-thread sampling phase RNG (None = nondeterministic)
+    sampling_seed: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.fidelity not in FIDELITY_MODES:
+            raise ValueError(
+                f"fidelity must be one of {FIDELITY_MODES}, got {self.fidelity!r}"
+            )
+        if self.sampling_interval < 1:
+            raise ValueError("sampling_interval must be >= 1")
         if self.cluster_adaptive is not None and self.serve_port is None:
             raise ValueError(
                 "cluster_adaptive requires serve_port: the in-process master "
@@ -190,12 +204,22 @@ class TraceHandle:
     #: snapshots delivered / undeliverable to the stream_to master
     streamed: int = 0
     stream_dropped: int = 0
+    #: fidelity rung at stop time (see TraceConfig.fidelity)
+    fidelity: str = "full"
 
 
 class Tracer:
-    def __init__(self, cfg: TraceConfig, model: Optional[TraceModel] = None):
+    def __init__(
+        self,
+        cfg: TraceConfig,
+        model: Optional[TraceModel] = None,
+        clock=None,
+    ):
         self.cfg = cfg
-        self.tp = get_tracepoints() if model is None else Tracepoints(model)
+        #: ``clock`` (injectable timestamp source, tests only) is honored when
+        #: a private model is supplied — the global recorder singleton always
+        #: runs on the trace clock
+        self.tp = get_tracepoints() if model is None else Tracepoints(model, clock=clock)
         self.model = self.tp.model
         self.clock: Optional[ClockInfo] = None
         self.registry: Optional[RingRegistry] = None
@@ -217,6 +241,17 @@ class Tracer:
         self._stream_next = 0.0
         #: rank selected for tracing? (§3.2 selective rank tracing)
         self.selected = cfg.ranks is None or cfg.rank in set(cfg.ranks)
+        #: fidelity-ladder state: current rung, rungs visited this session
+        #: (in first-visit order — stamped into the trace metadata so the
+        #: analysis side knows whether scaled estimates are exact), and the
+        #: lock serializing drains against mid-run rung flips
+        self._fidelity = cfg.fidelity
+        self._modes_used = [cfg.fidelity]
+        self._drain_lock = threading.Lock()
+        self._seen_drops: Dict[Tuple[int, int], int] = {}
+        #: final in-process folded tally (set at stop() when an online
+        #: analyzer ran — always the case for tally-only sessions)
+        self.final_tally = None
 
     # -- properties used by the interception layer ---------------------------
     @property
@@ -224,8 +259,59 @@ class Tracer:
         return self.cfg.mode
 
     @property
+    def fidelity(self) -> str:
+        return self._fidelity
+
+    @property
     def full(self) -> bool:
-        return self.cfg.mode == "full" and self.selected and self._started
+        return (
+            self.cfg.mode == "full"
+            and self._fidelity != "off"
+            and self.selected
+            and self._started
+        )
+
+    # -- fidelity ladder ------------------------------------------------------
+    def set_mode(self, mode: str) -> str:
+        """Move the session to another rung of the fidelity ladder mid-run;
+        returns the previous rung.
+
+        Handoff protocol (the conformance suite's mode-switch invariant):
+        records already published are drained under the *outgoing* rung's
+        policy before the recorders flip, the flip itself is one atomic
+        ``__code__`` store per recorder (all variants share one signature and
+        defaults tuple), and records are published whole (pack first, one
+        atomic ``head`` store) — so no drain ever observes a torn or
+        reordered record, in either rung's policy.
+        """
+        if mode not in FIDELITY_MODES:
+            raise ValueError(f"unknown fidelity {mode!r} (want one of {FIDELITY_MODES})")
+        if not self._started:
+            raise RuntimeError("tracer not started")
+        if not self.selected:  # untraced rank: track the rung, nothing to flip
+            prev, self._fidelity = self._fidelity, mode
+            return prev
+        with self._drain_lock:
+            prev = self._fidelity
+            if mode == prev:
+                return prev
+            self._drain_unlocked()  # pending records leave under the old policy
+            if mode == "tally-only" and self.online is None:
+                from .online import OnlineAnalyzer
+
+                self.online = OnlineAnalyzer(self.model, hostname=socket.gethostname())
+            self.tp.set_fidelity(mode, interval=self.cfg.sampling_interval)
+            self._fidelity = mode
+            if mode not in self._modes_used:
+                self._modes_used.append(mode)
+        # one advisory per rung change, recorded into the trace itself (the
+        # same channel adaptive policies use) — post-mortem analysis sees
+        # when the session reconfigured; a flip to "off" records nothing by
+        # construction (every enablement flag is already zero)
+        rec = self.tp.record.get("ust_repro:advisory")
+        if rec is not None:
+            rec("fidelity", "set_mode", f"{prev}->{mode}")
+        return prev
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "Tracer":
@@ -246,7 +332,21 @@ class Tracer:
                 eid = name2ev[name].eid
                 (enabled.add if on else enabled.discard)(eid)
         self.tp.attach(self.registry, sorted(enabled), ring_reserve=self.cfg.ring_reserve)
-        if self.cfg.online:
+        if self.cfg.fidelity != "full":
+            self.tp.set_fidelity(
+                self.cfg.fidelity,
+                interval=self.cfg.sampling_interval,
+                seed=self.cfg.sampling_seed,
+            )
+        elif self.cfg.sampling_seed is not None:
+            # seed up front so a later mid-run flip into "sampled" is
+            # deterministic too
+            self.tp.set_fidelity(
+                "full", interval=self.cfg.sampling_interval, seed=self.cfg.sampling_seed
+            )
+        # tally-only folds in-process via the online analyzer even when the
+        # live-tally feature itself wasn't requested
+        if self.cfg.online or self.cfg.fidelity == "tally-only":
             from .online import OnlineAnalyzer
 
             self.online = OnlineAnalyzer(self.model, hostname=socket.gethostname())
@@ -311,7 +411,9 @@ class Tracer:
         if not self.selected:
             _ACTIVE = None
             self._started = False
-            self.handle = TraceHandle(self.cfg.out_dir, self.cfg.mode, 0, 0, 0)
+            self.handle = TraceHandle(
+                self.cfg.out_dir, self.cfg.mode, 0, 0, 0, fidelity=self._fidelity
+            )
             return self.handle
         try:
             if self._sampler is not None:
@@ -333,6 +435,9 @@ class Tracer:
                 # stream writer must be closed (flushed) first
                 cw.close(os.path.getsize(self._writers[key].path))
             assert self.registry is not None and self.clock is not None
+            #: pure-sampled sessions carry exact estimator semantics; mixed-
+            #: fidelity sessions stamp every rung visited so the fold knows
+            #: scaled counts would NOT be exact and reports raw ones instead
             write_metadata(
                 self.cfg.out_dir,
                 self.model,
@@ -343,14 +448,41 @@ class Tracer:
                     "argv": sys.argv,
                     "rank": self.cfg.rank,
                     "sample": self.cfg.sample,
+                    "fidelity": {
+                        "final": self._fidelity,
+                        "interval": self.cfg.sampling_interval,
+                        "modes_used": list(self._modes_used),
+                    },
                 },
                 mode=self.cfg.mode,
             )
             events = self.registry.total_events
             dropped = self.registry.total_dropped
+            if self.online is not None:
+                # flush unmatched entries exactly like the offline fold's
+                # finish(), and scale when the estimator semantics are exact
+                scale = (
+                    self.cfg.sampling_interval
+                    if self._modes_used == ["sampled"]
+                    else 1
+                )
+                self.final_tally = self.online.finish(scale=scale)
             agg_path = None
             if self.cfg.aggregate_only:
                 agg_path = self._write_aggregate_and_prune()
+            elif (
+                "tally-only" in self._modes_used
+                and not self._writers
+                and self.final_tally is not None
+            ):
+                # a session that never streamed still leaves its kilobyte
+                # aggregate behind (§3.7 shape, producer-side fold)
+                from .aggregate import save_tally
+
+                agg_path = os.path.join(
+                    self.cfg.out_dir, f"aggregate_rank{self.cfg.rank}.tally"
+                )
+                save_tally(self.final_tally, agg_path)
             # upstream delivery counters live on the leaf streamer, or on the
             # in-process master's forwarder when this rank is a local master
             pusher = self.streamer
@@ -365,6 +497,7 @@ class Tracer:
                 aggregate_path=agg_path,
                 streamed=pusher.pushed if pusher else 0,
                 stream_dropped=pusher.dropped if pusher else 0,
+                fidelity=self._fidelity,
             )
         finally:
             # a failed teardown must never leave the process un-traceable
@@ -380,20 +513,45 @@ class Tracer:
 
     # -- consumer daemon -------------------------------------------------------
     def _drain_once(self) -> None:
+        with self._drain_lock:
+            self._drain_unlocked()
+
+    def _drain_unlocked(self) -> None:
         """Drain every ring zero-copy: stream + online analysis read the ring
         storage through ``drain_view`` memoryviews and the region is released
         only after both consumed it — no intermediate ``bytes`` on the common
         (single-region) path.  A ring that has produced nothing (an idle
         thread) gets no ``StreamWriter`` — and so no empty ``stream_*.ctf``
         file — until its first record or drop shows up; the ``now()`` stamp
-        for discard records is only taken when the drop counter advanced."""
+        for discard records is only taken when the drop counter advanced.
+
+        On the "tally-only" fidelity rung the stream path is bypassed
+        entirely — records fold straight into the online analyzer (producer-
+        side FoldEngine) and no ``.ctf`` file is created or appended; ring
+        drops are accounted into the online tally instead of a stream
+        discard record.  Caller holds ``_drain_lock`` (drains serialize
+        against mid-run rung flips)."""
         assert self.registry is not None
         writers = self._writers
         online = self.online
+        tally_only = self._fidelity == "tally-only"
         for ring in self.registry.rings():
             regions = ring.drain_view()
             dropped = ring.dropped
             key = (ring.pid, ring.tid)
+            if tally_only:
+                if regions:
+                    chunk = regions[0] if len(regions) == 1 else b"".join(regions)
+                    online.feed(chunk, ring.pid, ring.tid)
+                    ring.release()
+                seen = self._seen_drops.get(key)
+                if seen is None:
+                    w = writers.get(key)
+                    seen = w.seen_dropped if w is not None else 0
+                if dropped != seen:
+                    online.note_discarded(dropped - seen)
+                    self._seen_drops[key] = dropped
+                continue
             w = writers.get(key)
             if w is None:
                 if not regions and not dropped:
@@ -402,6 +560,12 @@ class Tracer:
                 w = writers[key] = StreamWriter(
                     path, ring.pid, ring.tid, compress=self.cfg.compress
                 )
+                # drops already accounted to the online tally during a
+                # tally-only window must not re-emit as stream discards
+                if key in self._seen_drops:
+                    w.seen_dropped = self._seen_drops.pop(key)
+            elif key in self._seen_drops:
+                w.seen_dropped = max(w.seen_dropped, self._seen_drops.pop(key))
             cw = self._colwriters.get(key)
             if cw is None and self.cfg.columnar:
                 cw = self._colwriters[key] = self._new_colwriter(w)

@@ -1,0 +1,439 @@
+"""Cross-mode conformance suite for the fidelity ladder (repro.trace API).
+
+One deterministic workload (private model + injected ticking clock, so every
+run is byte-reproducible) executed under every fidelity rung × both recorder
+paths (ring_reserve on/off) × compressed/uncompressed streams.  The
+invariants locked down here:
+
+  * ``full`` is byte-identical across the reserve/commit and legacy write
+    recorder paths — the rung must not perturb the existing contract;
+  * ``tally-only`` produces NO stream files yet its in-process folded tally
+    equals the offline fold of a ``full`` run of the same workload *exactly*
+    (same fold engine, same records, no stream round-trip drift);
+  * ``off`` emits zero streams and zero ring writes — not "empty streams",
+    literally no producer-side activity;
+  * ``sampled`` records a subset: its tally's key set is contained in the
+    full run's, counts are scaled (estimated) and exact when the sampling
+    interval divides the per-API call count;
+  * the rungs are live: a mid-run ``set_mode`` walk through all four rungs
+    keeps drains consistent and merges post-flip tallies cleanly.
+
+Plus the unknown-eid passthrough regression: folds and timelines over traces
+containing events the local model does not know (e.g. a newer producer's
+user events) must tolerate them — name-keyed passthrough rows in the fold,
+silent skip in the timeline — instead of crashing or silently corrupting.
+"""
+
+import json
+import os
+import struct
+
+import pytest
+
+import repro.trace as trace
+from repro.core.api_model import APIModel, APISpec, P, build_trace_model
+from repro.core.clock import ClockInfo
+from repro.core.ctf import StreamReader, StreamWriter, stream_files, write_metadata
+from repro.core.plugins.tally import tally_trace
+from repro.core.plugins.timeline import timeline_events
+from repro.core.tracepoints import FIDELITY_MODES
+from repro.core.tracer import TraceConfig, Tracer
+from tests.test_ring_reserve import frame, ticking_clock
+
+_MODEL = build_trace_model(
+    [
+        APIModel(
+            provider="ust_m",
+            apis=(
+                APISpec("alpha", params=(P("a", "u32"),), result=P("rc", "i32")),
+                APISpec(
+                    "beta",
+                    params=(P("n", "u64"), P("s", "str")),
+                    result=P("rc", "u32"),
+                ),
+                APISpec("launch", params=(P("name", "str"), P("flops", "u64")), span=True),
+            ),
+        )
+    ]
+)
+
+REPS = 40  # divisible by every interval used below → exact scaled counts
+
+
+def _drive(tp, reps=REPS):
+    """Deterministic op mix: two host pairs + one device span per rep."""
+    alpha = tp.record["ust_m:alpha_entry"]
+    alpha_x = tp.record["ust_m:alpha_exit"]
+    beta = tp.record_pair["ust_m:beta"]
+    span = tp.record["ust_m:launch_span"]
+    for i in range(reps):
+        alpha(i)
+        alpha_x(-i)
+        beta(i, "s" * (i % 7), 10_000 + i, 0)
+        span(i * 10, i * 10 + 5, "k", 99)
+
+
+def _run(tmp_path, fidelity, ring_reserve=True, compress=False, interval=4, reps=REPS):
+    d = str(tmp_path / f"{fidelity}_{int(ring_reserve)}_{int(compress)}")
+    cfg = TraceConfig(
+        out_dir=d,
+        mode="full",
+        fidelity=fidelity,
+        sampling_interval=interval,
+        ring_reserve=ring_reserve,
+        compress=compress,
+    )
+    tr = Tracer(cfg, model=_MODEL, clock=ticking_clock()).start()
+    try:
+        _drive(tr.tp, reps)
+    finally:
+        tr.stop()
+    return d, tr
+
+
+VARIANTS = [(rr, comp) for rr in (True, False) for comp in (False, True)]
+
+
+def _variant_id(v):
+    rr, comp = v
+    return f"{'reserve' if rr else 'legacy'}-{'zst' if comp else 'raw'}"
+
+
+# ---------------------------------------------------------------------------
+# full ≡ legacy byte path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("compress", [False, True], ids=["raw", "zst"])
+def test_full_byte_identical_across_recorder_paths(tmp_path, compress):
+    streams = {}
+    for rr in (True, False):
+        d, _ = _run(tmp_path, "full", ring_reserve=rr, compress=compress)
+        files = stream_files(d)
+        assert len(files) == 1
+        r = StreamReader(files[0])
+        region, release = r.records_region()
+        streams[rr] = bytes(region)
+        release()
+    assert streams[True] == streams[False]
+
+
+# ---------------------------------------------------------------------------
+# every rung × every variant: the conformance matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", VARIANTS, ids=_variant_id)
+def test_tally_only_equals_full_fold_exactly(tmp_path, variant):
+    rr, comp = variant
+    d_full, _ = _run(tmp_path, "full", ring_reserve=rr, compress=comp)
+    t_full = tally_trace(d_full)
+    d_to, tr = _run(tmp_path, "tally-only", ring_reserve=rr, compress=comp)
+    assert not stream_files(d_to)  # no .ctf streams at all
+    t_live = tr.final_tally
+    assert t_live is not None
+    assert t_live.apis == t_full.apis
+    assert t_live.device_apis == t_full.device_apis
+    assert not t_live.estimated
+    # the aggregate sidecar carries the same tally for offline merging
+    assert tr.handle.aggregate_path and os.path.exists(tr.handle.aggregate_path)
+    from repro.core.aggregate import load_tally
+
+    assert load_tally(tr.handle.aggregate_path).apis == t_full.apis
+
+
+@pytest.mark.parametrize("variant", VARIANTS, ids=_variant_id)
+def test_off_emits_nothing(tmp_path, variant):
+    rr, comp = variant
+    d = str(tmp_path / f"off_{_variant_id(variant)}")
+    cfg = TraceConfig(
+        out_dir=d, mode="full", fidelity="off", ring_reserve=rr, compress=comp
+    )
+    tr = Tracer(cfg, model=_MODEL, clock=ticking_clock()).start()
+    try:
+        _drive(tr.tp)
+        c = tr.registry.counters()
+        assert c["events"] == 0 and c["used"] == 0  # zero ring writes
+    finally:
+        tr.stop()
+    assert tr.handle.events == 0
+    assert tr.handle.fidelity == "off"
+    assert not stream_files(d)
+
+
+@pytest.mark.parametrize("variant", VARIANTS, ids=_variant_id)
+def test_sampled_subset_and_exact_scaling(tmp_path, variant):
+    rr, comp = variant
+    d_full, _ = _run(tmp_path, "full", ring_reserve=rr, compress=comp)
+    t_full = tally_trace(d_full)
+    d_s, _ = _run(tmp_path, "sampled", ring_reserve=rr, compress=comp, interval=4)
+    t_s = tally_trace(d_s)
+    assert t_s.estimated and t_s.sample_interval == 4
+    assert set(t_s.apis) <= set(t_full.apis)
+    # systematic per-pair sampling: interval | calls → scaled count is exact
+    for key in t_s.apis:
+        assert t_s.apis[key].calls == t_full.apis[key].calls
+    # device spans are never sampled: the device table is exact
+    assert t_s.device_apis == t_full.device_apis
+    meta = json.load(open(os.path.join(d_s, "metadata.json")))
+    assert meta["env"]["fidelity"] == {
+        "final": "sampled",
+        "interval": 4,
+        "modes_used": ["sampled"],
+    }
+
+
+def test_sampled_wire_roundtrip_keeps_estimated_flag(tmp_path):
+    d_s, _ = _run(tmp_path, "sampled", interval=4)
+    t = tally_trace(d_s)
+    from repro.core.plugins.tally import Tally
+
+    rt = Tally.from_obj(t.to_obj())
+    assert rt.estimated and rt.sample_interval == 4
+    assert rt.apis == t.apis
+    # rendering marks host rows as estimates
+    from repro.core.plugins.tally import render
+
+    out = render(t)
+    assert "estimated" in out and "~" in out
+
+
+# ---------------------------------------------------------------------------
+# the ladder is live: mid-run switching drains consistently
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rr", [True, False], ids=["reserve", "legacy"])
+def test_midrun_switch_walks_all_rungs(tmp_path, rr):
+    d = str(tmp_path / f"walk_{int(rr)}")
+    cfg = TraceConfig(out_dir=d, mode="full", online=True, ring_reserve=rr)
+    tr = Tracer(cfg, model=_MODEL, clock=ticking_clock()).start()
+    try:
+        _drive(tr.tp, reps=5)
+        assert tr.fidelity == "full"
+        assert tr.set_mode("tally-only") == "full"
+        _drive(tr.tp, reps=5)
+        assert tr.set_mode("off") == "tally-only"
+        _drive(tr.tp, reps=5)  # recorded nowhere
+        assert tr.set_mode("full") == "off"
+        _drive(tr.tp, reps=5)
+    finally:
+        tr.stop()
+    meta = json.load(open(os.path.join(d, "metadata.json")))
+    assert meta["env"]["fidelity"]["modes_used"] == ["full", "tally-only", "off"]
+    # streams carry the two full windows; the live tally carries full +
+    # tally-only windows; the off window appears nowhere
+    t_stream = tally_trace(d)
+    assert t_stream.apis[("ust_m", "alpha")].calls == 10
+    assert tr.final_tally.apis[("ust_m", "alpha")].calls == 15
+    assert not t_stream.estimated and not tr.final_tally.estimated
+
+
+def test_public_api_set_mode_and_annotate(tmp_path):
+    d = str(tmp_path / "api")
+    with Tracer(TraceConfig(out_dir=d, mode="full")):
+        assert trace.get_mode() == "full"
+        assert trace.annotate("marker", step=1)
+        with trace.phase("warm"):
+            pass
+        prev = trace.set_mode("sampled")
+        assert prev == "full" and trace.get_mode() == "sampled"
+        trace.set_mode("full")
+        with pytest.raises(ValueError):
+            trace.set_mode("bogus")
+    assert trace.get_mode() is None
+    assert not trace.annotate("no_session")  # silent no-op without a session
+    with pytest.raises(RuntimeError):
+        trace.set_mode("off")
+    t = tally_trace(d)
+    assert ("ust_user", "phase") in t.apis
+
+
+def test_fidelity_modes_exported():
+    assert trace.FIDELITY_MODES == FIDELITY_MODES
+    assert FIDELITY_MODES == ("full", "sampled", "tally-only", "off")
+
+
+def test_config_rejects_bad_fidelity(tmp_path):
+    with pytest.raises(ValueError):
+        TraceConfig(out_dir=str(tmp_path), fidelity="medium")
+    with pytest.raises(ValueError):
+        TraceConfig(out_dir=str(tmp_path), sampling_interval=0)
+
+
+# ---------------------------------------------------------------------------
+# unknown-eid passthrough (forward compatibility regression)
+# ---------------------------------------------------------------------------
+
+
+def _unknown_trace(tmp_path, payload):
+    d = str(tmp_path / "unk")
+    os.makedirs(d, exist_ok=True)
+    by = _MODEL.by_name()
+    chunks = b"".join(
+        [
+            frame(by["ust_m:alpha_entry"].eid, 100, struct.pack("<I", 1)),
+            frame(by["ust_m:alpha_exit"].eid, 200, struct.pack("<i", 0)),
+            frame(250, 300, payload),  # eid 250: not in the model
+        ]
+    )
+    w = StreamWriter(os.path.join(d, "stream_1_1.ctf"), 1, 1)
+    w.append(chunks)
+    w.close()
+    write_metadata(d, _MODEL, ClockInfo.capture(), env={}, mode="full")
+    return d
+
+
+def test_fold_unknown_eid_passthrough_row(tmp_path):
+    name = b"newer:event"
+    d = _unknown_trace(tmp_path, struct.pack("<I", len(name)) + name)
+    t = tally_trace(d)
+    assert t.apis[("ust_m", "alpha")].calls == 1
+    row = t.apis[("unknown", "newer:event")]
+    assert row.calls == 1 and row.total_ns == 0  # calls-only passthrough
+
+
+def test_fold_unknown_eid_garbage_payload_skipped(tmp_path):
+    # payload that cannot be a length-prefixed name: skipped, not crashed
+    d = _unknown_trace(tmp_path, b"\xff\xff\xff\xff")
+    t = tally_trace(d)
+    assert t.apis[("ust_m", "alpha")].calls == 1
+    assert not any(p == "unknown" for p, _ in t.apis)
+
+
+def test_timeline_tolerates_unknown_eid(tmp_path):
+    name = b"newer:event"
+    d = _unknown_trace(tmp_path, struct.pack("<I", len(name)) + name)
+    evs = timeline_events(d)  # must not raise
+    assert any(e.get("name") == "ust_m:alpha" for e in evs)
+
+
+# ---------------------------------------------------------------------------
+# mid-run mode-switch stress: the torn-free handoff under fire
+# ---------------------------------------------------------------------------
+
+
+def test_mode_switch_stress_spsc_no_torn_records():
+    """Producer hammers a recorder while another thread flips the fidelity
+    ladder thousands of times and a consumer drains concurrently (the
+    test_ring_reserve SPSC harness, plus the flipper).  Every surviving
+    record must be well-framed with a self-consistent payload and the kept
+    sequence numbers strictly increasing — a torn ``__code__`` swap or a
+    mid-record drain would break one or the other."""
+    import threading
+
+    from repro.core.ringbuffer import RingRegistry
+    from repro.core.tracepoints import Tracepoints
+    from tests.test_ring_reserve import _MODEL as RMODEL
+    from tests.test_ring_reserve import unframe
+
+    tp = Tracepoints(RMODEL)
+    reg = RingRegistry(1 << 13, pid=1)
+    tp.attach(reg, range(len(RMODEL.events)))
+    rec = tp.record["ust_r:seq_entry"]
+    FLIPS = 3_000  # the flipper paces the test: producer runs until done
+    chunks = []
+    stop = threading.Event()
+    ring_ready = threading.Event()
+    produced = [0]
+
+    def producer():
+        i = 0
+        while not stop.is_set():
+            rec(i, b"x" * (i % 33))
+            if i == 0:
+                ring_ready.set()
+            i += 1
+        produced[0] = i
+
+    def consumer():
+        ring_ready.wait(5)
+        ring = reg.rings()[0]
+        while not stop.is_set() or ring.used:
+            regions = ring.drain_view()
+            if regions:
+                chunks.append(b"".join(regions))
+                ring.release()
+
+    def flipper():
+        cycle = ("sampled", "full", "tally-only", "off", "full")
+        for k in range(FLIPS):
+            tp.set_fidelity(cycle[k % len(cycle)], interval=4)
+        stop.set()
+
+    threads = [threading.Thread(target=t) for t in (producer, consumer, flipper)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    tp.set_fidelity("full")
+    ring = reg.rings()[0]
+    chunks.append(b"".join(ring.drain_view()))
+    ring.release()
+    assert produced[0] > 0
+    seq_eid = RMODEL.by_name()["ust_r:seq_entry"].eid
+    unpack = tp.unpack[seq_eid]
+    seqs = []
+    for eid, _, payload in unframe(b"".join(chunks)):
+        assert eid == seq_eid
+        n, fill, _rc = *unpack(memoryview(payload)), None
+        assert fill == b"x" * (n % 33), "torn record"
+        seqs.append(n)
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    assert 0 < len(seqs) <= produced[0]
+    tp.detach()
+
+
+def test_mode_switch_stress_tracer_tallies_merge(tmp_path):
+    """Tracer-level flips while producer threads record: each set_mode drains
+    under the handoff lock, so stream windows and the live tally must stay
+    mutually consistent and merge cleanly after hundreds of flips."""
+    import threading
+
+    from repro.core.plugins.tally import Tally
+
+    d = str(tmp_path / "stress")
+    cfg = TraceConfig(out_dir=d, mode="full", online=True, sampling_interval=4)
+    tr = Tracer(cfg, model=_MODEL).start()
+    stop = threading.Event()
+    counts = [0, 0]
+
+    def producer(slot):
+        alpha = tr.tp.record["ust_m:alpha_entry"]
+        alpha_x = tr.tp.record["ust_m:alpha_exit"]
+        i = 0
+        while not stop.is_set():
+            alpha(i)
+            alpha_x(0)
+            i += 1
+        counts[slot] = i
+
+    threads = [threading.Thread(target=producer, args=(s,)) for s in (0, 1)]
+    for t in threads:
+        t.start()
+    cycle = ("sampled", "tally-only", "off", "full")
+    nflips = 0
+    try:
+        for _ in range(75):
+            for mode in cycle:
+                assert tr.set_mode(mode) in FIDELITY_MODES
+                nflips += 1
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+        tr.stop()
+    assert nflips == 300
+    attempts = sum(counts)
+    t_stream = tally_trace(d)
+    t_live = tr.final_tally
+    key = ("ust_m", "alpha")
+    # ends on "full": both views saw events; the live tally folds a superset
+    # of the stream windows (it also saw the tally-only windows)
+    assert 0 < t_stream.apis[key].calls <= t_live.apis[key].calls <= attempts
+    # mixed-fidelity session: nothing may claim estimation
+    assert not t_stream.estimated and not t_live.estimated
+    merged = Tally().merge(t_stream).merge(t_live)  # must merge cleanly
+    assert merged.apis[key].calls == t_stream.apis[key].calls + t_live.apis[key].calls
+    meta = json.load(open(os.path.join(d, "metadata.json")))
+    assert set(meta["env"]["fidelity"]["modes_used"]) == set(FIDELITY_MODES)

@@ -1,0 +1,211 @@
+"""Statistical correctness of the "sampled" fidelity rung.
+
+The sampled rung keeps 1 of every N entry/exit pairs per API (systematic
+sampling with a uniform random initial phase per pair) and the analysis side
+multiplies calls and total durations by N.  Two kinds of guarantees are
+locked down here:
+
+  * **exact unbiasedness** — systematic sampling with a uniform phase in
+    ``[0, N)`` selects every call in exactly one of the N phase offsets, so
+    the *ensemble mean* of the scaled estimates over all N phases equals the
+    full-fidelity ground truth as an integer identity, not approximately.
+    ``Tracepoints.set_fidelity(..., phase=p)`` forces the phase, making the
+    whole ensemble enumerable in-process;
+  * **convergence** — with the phase drawn randomly (the production path),
+    estimates across many seeds stay within tight deterministic bounds
+    (|error| < N per API for counts) and their average converges on the
+    truth across sampling rates.
+
+Deterministic-clock tests run everywhere; the ``statistical`` marker tags
+the ensemble sweeps that are meaningless without numpy-style repetition
+budgets — CI's minimal-deps leg deselects them with ``-m "not statistical"``.
+"""
+
+import pytest
+
+from repro.core.api_model import APIModel, APISpec, P, build_trace_model
+from repro.core.online import OnlineAnalyzer
+from repro.core.ringbuffer import RingRegistry
+from repro.core.tracepoints import Tracepoints
+from tests.hypothesis_optional import given, settings, st
+
+_MODEL = build_trace_model(
+    [
+        APIModel(
+            provider="ust_s",
+            apis=(
+                APISpec(
+                    "work",
+                    params=(P("n", "u64"), P("s", "str")),
+                    result=P("rc", "u32"),
+                ),
+            ),
+        )
+    ]
+)
+
+_EXIT_TS = 1_000_000  # constant clock: durations depend only on the entry ts
+
+
+def _run_sampled(interval, reps, phase=None, seed=None, durations=None):
+    """Drive ``reps`` explicit-timestamp pairs through one sampled session.
+
+    The clock is *constant*, so call ``i``'s duration is exactly
+    ``durations[i]`` no matter which other calls the gate kept — selection
+    cannot perturb the measurements it samples (the property the ensemble
+    identity needs).  Returns the scaled (estimated) tally.
+    """
+    durations = durations or [100 * (i + 1) for i in range(reps)]
+    tp = Tracepoints(_MODEL, clock=lambda: _EXIT_TS)
+    reg = RingRegistry(1 << 20, pid=1)
+    tp.attach(reg, range(len(_MODEL.events)))
+    tp.set_fidelity("sampled", interval=interval, phase=phase, seed=seed)
+    pair = tp.record_pair["ust_s:work"]
+    for i in range(reps):
+        pair(i, "", _EXIT_TS - durations[i], 0)
+    online = OnlineAnalyzer(_MODEL)
+    for ring in reg.rings():
+        online.feed(ring.drain(), pid=1, tid=1)
+    tp.detach()
+    return online.finish(scale=interval)
+
+
+def _ground_truth(reps, durations=None):
+    durations = durations or [100 * (i + 1) for i in range(reps)]
+    return reps, sum(durations)
+
+
+KEY = ("ust_s", "work")
+
+
+# ---------------------------------------------------------------------------
+# exact unbiasedness over the phase ensemble (integer identity, always runs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("interval", [2, 3, 5, 8])
+@pytest.mark.parametrize("reps", [1, 7, 40])
+def test_phase_ensemble_mean_is_exactly_unbiased(interval, reps):
+    true_calls, true_total = _ground_truth(reps)
+    sum_calls = sum_total = 0
+    for phase in range(interval):
+        t = _run_sampled(interval, reps, phase=phase)
+        row = t.apis.get(KEY)
+        if row is not None:
+            sum_calls += row.calls
+            sum_total += row.total_ns
+        assert t.estimated and t.sample_interval == interval
+    # every call is selected in exactly one phase, scaled by N → the sum of
+    # the N estimates is N × truth, i.e. the ensemble mean is exactly truth
+    assert sum_calls == interval * true_calls
+    assert sum_total == interval * true_total
+
+
+def test_interval_one_is_full_fidelity():
+    t = _run_sampled(1, 25, phase=0)
+    assert t.apis[KEY].calls == 25
+    assert not t.estimated or t.sample_interval == 1
+
+
+def test_forced_phase_count_formula():
+    # the counter starts AT the phase and a call is kept when its counter
+    # value is ≡ 0 (mod N): call i is kept iff (p + i) % N == 0
+    reps, N = 23, 5
+    for p in range(N):
+        t = _run_sampled(N, reps, phase=p)
+        kept = sum(1 for c in range(p, p + reps) if c % N == 0)
+        got = t.apis[KEY].calls if KEY in t.apis else 0
+        assert got == N * kept
+
+
+# ---------------------------------------------------------------------------
+# deterministic error bounds (always run)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("interval", [2, 4, 16])
+def test_count_error_bounded_by_interval(interval):
+    reps = 50
+    for seed in range(10):
+        t = _run_sampled(interval, reps, seed=seed)
+        got = t.apis[KEY].calls if KEY in t.apis else 0
+        assert abs(got - reps) < interval  # systematic sampling's hard bound
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    reps=st.integers(min_value=0, max_value=200),
+    interval=st.integers(min_value=1, max_value=32),
+    phase=st.integers(min_value=0, max_value=31),
+)
+def test_property_scaled_count_identity(reps, interval, phase):
+    """Property: the forced-phase estimate obeys the closed form and the
+    whole-ensemble sum telescopes to N × reps for every (reps, N)."""
+    phase %= interval
+    t = _run_sampled(interval, reps, phase=phase)
+    got = t.apis[KEY].calls if KEY in t.apis else 0
+    kept = sum(1 for c in range(phase, phase + reps) if c % interval == 0)
+    assert got == interval * kept
+    assert abs(got - reps) <= interval  # bias bound (ties at the boundary)
+
+
+# ---------------------------------------------------------------------------
+# statistical sweeps (excluded from the minimal-deps CI leg)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.statistical
+@pytest.mark.parametrize("interval", [2, 8, 64])
+def test_random_phase_estimates_converge(interval):
+    """Across many seeded runs the mean estimate converges on the truth —
+    counts AND duration totals — at every sampling rate."""
+    import random
+
+    reps = 256
+    rng = random.Random(1234)
+    durations = [rng.randrange(50, 5000) for _ in range(reps)]
+    true_calls, true_total = _ground_truth(reps, durations)
+    runs = 48
+    est_calls = []
+    est_total = []
+    for seed in range(runs):
+        t = _run_sampled(interval, reps, seed=seed, durations=durations)
+        row = t.apis.get(KEY)
+        est_calls.append(row.calls if row else 0)
+        est_total.append(row.total_ns if row else 0)
+    mean_calls = sum(est_calls) / runs
+    mean_total = sum(est_total) / runs
+    # counts: systematic sampling bounds every estimate within ±N of truth,
+    # so the sample mean sits well inside ±N/2 with 48 draws
+    assert abs(mean_calls - true_calls) <= interval
+    # durations: the estimator's per-run spread is bounded by N × max(dur);
+    # a generous 5σ-style envelope that still catches a biased estimator
+    tol = 5 * interval * max(durations) / (runs ** 0.5)
+    assert abs(mean_total - true_total) <= tol
+
+
+@pytest.mark.statistical
+def test_min_max_are_observed_not_scaled():
+    """Scaling multiplies calls/total_ns only: min/max stay raw observations
+    (an estimated min would be a lie — we *saw* that duration)."""
+    reps = 64
+    durations = [100 * (i + 1) for i in range(reps)]
+    t = _run_sampled(4, reps, phase=0, durations=durations)
+    row = t.apis[KEY]
+    assert row.min_ns in durations and row.max_ns in durations
+    assert row.min_ns >= min(durations) and row.max_ns <= max(durations)
+
+
+@pytest.mark.statistical
+@settings(max_examples=25, deadline=None)
+@given(
+    interval=st.integers(min_value=2, max_value=16),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_random_phase_bias_bound(interval, seed):
+    """Property (random production path): any single random-phase run's
+    count estimate is within one interval of the truth."""
+    reps = 100
+    t = _run_sampled(interval, reps, seed=seed)
+    got = t.apis[KEY].calls if KEY in t.apis else 0
+    assert abs(got - reps) < interval

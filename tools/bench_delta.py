@@ -66,6 +66,15 @@ METRICS = [
         "collection throughput ev/s",
         True,
     ),
+    ("BENCH_collection.json", "modes.full_ns_per_event", "fidelity full ns/ev", False),
+    ("BENCH_collection.json", "modes.sampled_ns_per_event", "fidelity sampled ns/ev", False),
+    (
+        "BENCH_collection.json",
+        "modes.tally_only_ns_per_event",
+        "fidelity tally-only ns/ev",
+        False,
+    ),
+    ("BENCH_collection.json", "modes.off_ns_per_event", "fidelity off ns/ev", False),
 ]
 
 

@@ -1,4 +1,5 @@
-"""Wide-tally streaming bandwidth: bytes-on-wire, full vs delta (protocol v2).
+"""Wide-tally streaming bandwidth: bytes-on-wire, full vs delta (protocol v2),
+plus the subscriber-fanout sweep of the broadcast hub.
 
 The exascale failure mode the delta protocol targets: a rank tracing a very
 wide API surface (thousands of tally rows) re-ships the *entire* cumulative
@@ -10,16 +11,32 @@ steady-state bytes-on-wire (the first full frame is excluded — both modes
 must pay it) plus the reduction factor.  Master-side composites are checked
 for equality so the saving is never bought with wrong numbers.
 
+The fanout sweep attaches 1 / 64 / 512 live subscribers and counts the
+composite serializations (``MasterServer.sub_encodes``) the hub spends per
+update: the shared-buffer hub encodes each delta **once per tenant**, so the
+encode count must stay flat as subscribers grow (``encode_flatness ≈ 1``) —
+the per-connection loop it replaced scaled encodes linearly.
+
     PYTHONPATH=src python -m benchmarks.stream_bw [--width 2000] [--rounds 40]
+        [--fanout-subs 1,64,512] [--json BENCH_stream.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import selectors
+import socket
 import time
 
 from repro.core.plugins.tally import ApiStat, Tally
-from repro.core.stream import MasterServer, SnapshotStreamer
+from repro.core.stream import (
+    PROTOCOL_VERSION,
+    MasterServer,
+    SnapshotStreamer,
+    pack_frame,
+    parse_addr,
+    recv_frame,
+)
 
 
 def make_wide_tally(width: int) -> Tally:
@@ -91,7 +108,124 @@ def run(width: int = 2000, rounds: int = 40, hot: int = 16) -> dict:
     }
 
 
-def main(width: int = 2000, rounds: int = 40, hot: int = 16) -> dict:
+def _raise_nofile_limit(need: int) -> None:
+    """Best-effort RLIMIT_NOFILE bump: 512 subscribers is >1k fds counting
+    both socket ends plus the master's per-connection plumbing."""
+    try:
+        import resource
+
+        soft, hard = resource.getrlimit(resource.RLIMIT_NOFILE)
+        if soft < need:
+            resource.setrlimit(resource.RLIMIT_NOFILE, (min(need, hard), hard))
+    except (ImportError, ValueError, OSError):
+        pass
+
+
+def _subscribe_socket(addr: str, period_s: float) -> socket.socket:
+    s = socket.create_connection(parse_addr(addr), timeout=5.0)
+    s.settimeout(5.0)
+    s.sendall(pack_frame({"type": "hello", "v": PROTOCOL_VERSION, "source": "bench-sub"}))
+    ack = recv_frame(s)
+    assert ack is not None and ack["type"] == "hello_ack"
+    s.sendall(
+        pack_frame({"type": "subscribe", "v": PROTOCOL_VERSION, "period_s": period_s})
+    )
+    s.setblocking(False)
+    return s
+
+
+def _drain(sel, counts, total, duration_s: float) -> int:
+    """Pump every readable subscriber for ``duration_s``; returns bytes.
+
+    epoll-backed (``selectors``): 512 subscribers blow past select()'s
+    FD_SETSIZE in a process that also owns the master's socket pairs."""
+    drained = 0
+    end = time.monotonic() + duration_s
+    while time.monotonic() < end:
+        for key, _ in sel.select(timeout=0.01):
+            s = key.fileobj
+            try:
+                b = s.recv(1 << 16)
+            except (BlockingIOError, InterruptedError):
+                continue
+            drained += len(b)
+            counts[key.fd] = counts.get(key.fd, 0) + len(b)
+    total[0] += drained
+    return drained
+
+
+def fanout_sweep(
+    width: int = 300,
+    updates: int = 8,
+    subscribers=(1, 64, 512),
+    period_s: float = 0.02,
+) -> dict:
+    """Live-subscriber fanout: encode count + bytes per delta per subscriber.
+
+    For each subscriber count N the sweep attaches N real subscription
+    connections, pushes ``updates`` composite updates, keeps every
+    subscriber drained (no eviction noise), and reads the master's hub
+    counters.  The figure of merit is ``encode_flatness`` — encodes per
+    update at the widest N over the narrowest — which stays ≈1 for the
+    shared hub and ≈N/1 for a per-subscriber encode loop.
+    """
+    _raise_nofile_limit(max(subscribers) * 2 + 512)
+    per_n = {}
+    with MasterServer(port=0) as m:
+        t = make_wide_tally(width)
+        m.submit("bench-src", t)
+        step = 0
+        for n in subscribers:
+            socks = [_subscribe_socket(m.addr, period_s) for _ in range(n)]
+            sel = selectors.DefaultSelector()
+            for s in socks:
+                sel.register(s, selectors.EVENT_READ)
+            counts: dict = {}
+            total = [0]
+            # snapshot-on-join: wait until every subscriber saw its first frame
+            deadline = time.monotonic() + 10.0
+            while len(counts) < n and time.monotonic() < deadline:
+                _drain(sel, counts, total, 0.05)
+            enc0, frames0, bytes0 = m.sub_encodes, m.sub_frames, total[0]
+            for _ in range(updates):
+                advance(t, step, hot=8)
+                step += 1
+                m.submit("bench-src", t)
+                _drain(sel, counts, total, max(0.1, period_s * 3))
+            _drain(sel, counts, total, 0.2)  # settle: flush trailing frames
+            encodes = m.sub_encodes - enc0
+            frames = m.sub_frames - frames0
+            drained = total[0] - bytes0
+            sel.close()
+            for s in socks:
+                s.close()
+            per_n[str(n)] = {
+                "encodes": encodes,
+                "encodes_per_update": encodes / updates,
+                "frames_out": frames,
+                "bytes_drained": drained,
+                "bytes_per_update_per_sub": drained / (updates * n),
+            }
+            evictions = m.sub_evictions
+    lo, hi = str(min(subscribers)), str(max(subscribers))
+    return {
+        "width": width,
+        "updates": updates,
+        "subscribers": per_n,
+        # ≈1.0 when the hub encodes once per update regardless of fanout
+        "encode_flatness": per_n[hi]["encodes"] / max(1, per_n[lo]["encodes"]),
+        "bytes_per_delta_per_sub": per_n[hi]["bytes_per_update_per_sub"],
+        "evictions": evictions,
+    }
+
+
+def main(
+    width: int = 2000,
+    rounds: int = 40,
+    hot: int = 16,
+    fanout_subs=(1, 64, 512),
+    fanout_updates: int = 8,
+) -> dict:
     r = run(width=width, rounds=rounds, hot=hot)
     print(
         f"  wide tally: {r['width']} host APIs, {r['hot']} hot, "
@@ -106,6 +240,23 @@ def main(width: int = 2000, rounds: int = 40, hot: int = 16) -> dict:
         f"({r['bytes_per_push_delta']:.0f} B/push)"
     )
     print(f"  reduction      : {r['ratio']:.1f}x  (target ≥ 5x)")
+    fan = fanout_sweep(
+        width=min(width, 300), updates=fanout_updates, subscribers=fanout_subs
+    )
+    r["fanout"] = fan
+    print(f"  fanout sweep   : {fan['updates']} updates per subscriber count")
+    for n, row in fan["subscribers"].items():
+        print(
+            f"    {n:>4s} subs: {row['encodes']:>3d} encodes "
+            f"({row['encodes_per_update']:.1f}/update), "
+            f"{row['frames_out']} frames out, "
+            f"{row['bytes_per_update_per_sub']:.0f} B/update/sub"
+        )
+    print(
+        f"  encode flatness: {fan['encode_flatness']:.2f}x "
+        f"(≈1 = one encode per update regardless of fanout; "
+        f"{fan['evictions']} evictions)"
+    )
     return r
 
 
@@ -115,10 +266,22 @@ if __name__ == "__main__":
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--hot", type=int, default=16)
     ap.add_argument(
+        "--fanout-subs",
+        default="1,64,512",
+        help="comma-separated subscriber counts for the hub fanout sweep",
+    )
+    ap.add_argument("--fanout-updates", type=int, default=8)
+    ap.add_argument(
         "--json", default=None, help="write the result dict to this JSON file"
     )
     a = ap.parse_args()
-    result = main(width=a.width, rounds=a.rounds, hot=a.hot)
+    result = main(
+        width=a.width,
+        rounds=a.rounds,
+        hot=a.hot,
+        fanout_subs=tuple(int(x) for x in a.fanout_subs.split(",")),
+        fanout_updates=a.fanout_updates,
+    )
     if a.json:
         import json
 

@@ -164,8 +164,7 @@ def run_live(args) -> int:
         ClusterAdaptiveController,
         MasterServer,
         StragglerRankPolicy,
-        query_composite,
-        query_ranks,
+        StreamClient,
     )
     from repro.core.aggregate import combine_aggregates, find_aggregates, merge_tallies
     from repro.core.babeltrace import CTFSource
@@ -183,6 +182,9 @@ def run_live(args) -> int:
         port=0, forward_to=global_m.addr, forward_period_s=0.1
     ).start()
     print(f"[live] global master {global_m.addr} ← local master {local_m.addr}")
+    # one authenticated-capable client, one pooled connection for every
+    # driver-side read of the global master (composite + per-rank breakdown)
+    gclient = StreamClient(global_m.addr)
 
     env = dict(os.environ)
     procs = []
@@ -239,7 +241,7 @@ def run_live(args) -> int:
         while any(p.poll() is None for p in procs):
             monitor.tick()
             time.sleep(0.2)
-            t, meta = query_composite(global_m.addr)
+            t, meta = gclient.composite()
             if t.apis or t.device_apis:
                 print(
                     f"\n[live] -- {meta['sources']} sources, "
@@ -259,11 +261,12 @@ def run_live(args) -> int:
     live = None
     while time.time() < deadline:
         local_m.flush(force=True)
-        live, _ = query_composite(global_m.addr)
+        live, _ = gclient.composite()
         if _api_totals(live) == want:
             break
         time.sleep(0.2)
-    ranks, _ = query_ranks(global_m.addr)
+    ranks, _ = gclient.ranks()
+    gclient.close()
     local_m.stop()
     global_m.stop()
 

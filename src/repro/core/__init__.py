@@ -10,7 +10,7 @@ Public API:
 
     from repro.core import TraceConfig, Tracer, trace_session       # collection
     from repro.core import traced_jit, kernel_span, collective_span # interception
-    from repro.core import MasterServer, query_composite, query_ranks  # streaming
+    from repro.core import MasterServer, ServeOptions, StreamClient    # streaming
     from repro.core import AdaptiveController, WidenSamplingPolicy  # §6 adaptive
     from repro.core import ClusterAdaptiveController, StragglerRankPolicy  # cluster scope
     from repro.core.plugins.tally import tally_trace, render        # analysis
@@ -55,7 +55,10 @@ from .fold import (  # noqa: F401
 )
 from .stream import (  # noqa: F401
     MasterServer,
+    ServeOptions,
+    ServerRejected,
     SnapshotStreamer,
+    StreamClient,
     live_snapshot,
     query_composite,
     query_groups,

@@ -896,6 +896,9 @@ class ClusterAdaptiveController(_ControllerCore):
         on_straggler: Optional[Callable[[str, str, str, float, str], None]] = None,
         clock: Callable[[], float] = time.monotonic,
         timeout_s: float = 2.0,
+        token: Optional[str] = None,
+        tls_ca: Optional[str] = None,
+        ssl_context=None,
     ):
         super().__init__(period_s, on_action)
         self.policies = list(policies)
@@ -904,6 +907,12 @@ class ClusterAdaptiveController(_ControllerCore):
         self.on_straggler = on_straggler
         self.clock = clock
         self.timeout_s = timeout_s
+        #: credentials for the remote (``addr``) fetch path: hardened
+        #: masters demand a token and may sit behind TLS (tls_ca pins them)
+        self.token = token
+        self.tls_ca = tls_ca
+        self.ssl_context = ssl_context
+        self._client = None  # persistent StreamClient for the addr path
         self._prev: Optional[Dict[str, Tally]] = None
         self._prev_t = 0.0
         self._attempt_t: Optional[float] = None  # last fetch attempt (any outcome)
@@ -916,6 +925,12 @@ class ClusterAdaptiveController(_ControllerCore):
             self.addr = addr
         return self
 
+    def close(self) -> None:
+        """Drop the remote connection (the addr path reuses one socket)."""
+        c, self._client = self._client, None
+        if c is not None:
+            c.close()
+
     def _fetch(self) -> Optional[Dict[str, Tally]]:
         if self.master is not None:
             # frozen snapshots (replaced wholesale on change, never mutated):
@@ -923,12 +938,21 @@ class ClusterAdaptiveController(_ControllerCore):
             # copy of every rank's table — O(changed) per adaptation window
             return self.master.ranks(copy=False)
         if self.addr is not None:
-            from .stream import ProtocolError, query_ranks
+            from .stream import ProtocolError, StreamClient
 
             try:
-                ranks, _ = query_ranks(self.addr, timeout_s=self.timeout_s)
+                if self._client is None:
+                    self._client = StreamClient(
+                        self.addr,
+                        timeout_s=self.timeout_s,
+                        token=self.token,
+                        tls_ca=self.tls_ca,
+                        ssl_context=self.ssl_context,
+                    )
+                ranks, _ = self._client.ranks()
                 return ranks
             except (OSError, ProtocolError, ValueError):
+                self.close()  # reconnect fresh on the next attempt
                 return None  # master absent: adaptation pauses, never raises
         return None
 

@@ -59,6 +59,8 @@ def _run(args) -> int:
         fidelity=args.fidelity,
         sampling_interval=args.sampling_interval,
         sampling_seed=args.sampling_seed,
+        stream_token=args.token,
+        stream_tls_ca=args.tls_ca,
     )
     old_argv = sys.argv
     sys.argv = [target] + list(args.args)
@@ -134,9 +136,22 @@ def _validate(args) -> int:
     return 0 if not any(f.severity == "error" for f in findings) else 2
 
 
+def _parse_tokens(specs) -> Optional[dict]:
+    """``--token TOK[=TENANT]`` (repeatable) → {token: tenant} or None."""
+    if not specs:
+        return None
+    tokens = {}
+    for spec in specs:
+        tok, sep, tenant = spec.partition("=")
+        if not tok:
+            raise ValueError(f"bad --token {spec!r}: empty token")
+        tokens[tok] = tenant if sep and tenant else "default"
+    return tokens
+
+
 def _serve(args) -> int:
     """Run a streaming master (local when --forward-to, else global)."""
-    from .stream import MasterServer
+    from .stream import MasterServer, ServeOptions
 
     rollup = args.rollup_groups
     if rollup is not None:
@@ -150,20 +165,43 @@ def _serve(args) -> int:
             )
             return 2
     try:
+        opts = ServeOptions(
+            fanout=args.fanout,
+            forward_ranks=not args.no_forward_ranks,
+            rollup_groups=rollup,
+            tls_cert=args.tls_cert,
+            tls_key=args.tls_key,
+            tls_ca=args.tls_ca,
+            auth_tokens=_parse_tokens(args.token),
+            max_sources=args.max_sources,
+            max_tally_rows=args.max_tally_rows,
+            max_subscribers=args.max_subscribers,
+            forward_token=args.forward_token,
+            forward_tls_ca=args.forward_tls_ca,
+        )
+    except ValueError as e:
+        print(f"[iprof] bad serving options: {e}", file=sys.stderr)
+        return 2
+    try:
         m = MasterServer(
             port=args.port,
             host=args.bind,
             forward_to=args.forward_to,
             forward_period_s=args.forward_period,
-            fanout=args.fanout,
-            forward_ranks=not args.no_forward_ranks,
-            rollup_groups=rollup,
+            options=opts,
         ).start()
     except OSError as e:
-        print(f"[iprof] cannot bind {args.bind}:{args.port}: {e}", file=sys.stderr)
+        # covers bind errors and ssl.SSLError loading a bad cert/key pair
+        print(f"[iprof] cannot start master on {args.bind}:{args.port}: {e}", file=sys.stderr)
         return 1
     role = f"local master → {args.forward_to}" if args.forward_to else "global master"
-    print(f"[iprof] {role} listening on {m.addr}", flush=True)
+    hardened = []
+    if opts.tls_cert:
+        hardened.append("tls")
+    if opts.auth_required:
+        hardened.append(f"auth[{len(opts.auth_tokens)} token(s)]")
+    suffix = f" ({', '.join(hardened)})" if hardened else ""
+    print(f"[iprof] {role} listening on {m.addr}{suffix}", flush=True)
     try:
         if args.duration is not None:
             time.sleep(args.duration)
@@ -175,11 +213,26 @@ def _serve(args) -> int:
     finally:
         m.stop()
         st = m.stats()
-        print(
+        line = (
             f"[iprof] master stopped: {st['sources']} sources, "
             f"{st['snapshots']} snapshots ({st['deltas']} deltas, "
             f"{st['resyncs']} resyncs), {st['queries']} queries"
         )
+        rejects = (
+            st["auth_failures"]
+            + st["tls_failures"]
+            + st["quota_src_rejects"]
+            + st["quota_row_rejects"]
+            + st["quota_sub_rejects"]
+        )
+        if rejects:
+            line += (
+                f"; rejects: {st['auth_failures']} auth, {st['tls_failures']} tls, "
+                f"{st['quota_src_rejects']}/{st['quota_row_rejects']}/"
+                f"{st['quota_sub_rejects']} quota(src/row/sub), "
+                f"{st['sub_evictions']} slow-subscriber evictions"
+            )
+        print(line)
     return 0
 
 
@@ -208,72 +261,105 @@ def _render_composite(args, t, meta, ranks=None, groups=None) -> None:
         )
 
 
+def _top_live(args, client_kw) -> int:
+    """``--live``: hold a subscription open, rendering pushed composites.
+
+    Survives master restarts: on disconnect after a successful attach the
+    loop reconnects with capped exponential backoff (starting at
+    min(1s, --interval), doubling to --reconnect-max-wait) and re-subscribes
+    on the fresh connection.  ``--no-reconnect`` restores one-shot semantics;
+    a first connect that never succeeds is still rc-1 "unreachable".
+    """
+    from .stream import ProtocolError, ServerRejected, StreamClient
+
+    shown = 0
+    ever_connected = False
+    wait = min(1.0, max(args.interval, 0.05))
+    while True:
+        try:
+            with StreamClient(args.addr, timeout_s=args.timeout, **client_kw) as c:
+                ever_connected = True
+                for t, meta in c.subscribe(period_s=args.interval, by_rank=args.by_rank):
+                    wait = min(1.0, max(args.interval, 0.05))  # healthy: reset backoff
+                    _render_composite(args, t, meta, ranks=meta.get("ranks"))
+                    shown += 1
+                    if args.iterations is not None and shown >= args.iterations:
+                        return 0
+            # generator exhausted: master closed the stream cleanly
+        except ServerRejected as e:
+            print(f"[iprof] master at {args.addr} rejected us: {e}", file=sys.stderr)
+            return 1
+        except (OSError, ProtocolError) as e:
+            if not ever_connected:
+                print(f"[iprof] master at {args.addr} unreachable: {e}", file=sys.stderr)
+                return 1
+            if args.no_reconnect:
+                print(f"[iprof] master at {args.addr} lost: {e}", file=sys.stderr)
+                return 1
+        if args.no_reconnect:
+            return 0
+        print(
+            f"[iprof] lost master at {args.addr}; retrying in {wait:.1f}s",
+            file=sys.stderr,
+        )
+        time.sleep(wait)
+        wait = min(wait * 2, args.reconnect_max_wait)
+
+
 def _top(args) -> int:
     """Attach to a master; render the live composite, refreshing.
 
-    Default mode polls with one query connection per refresh; ``--live``
-    holds a single connection open and renders composites as the master
-    pushes them (the v2 ``subscribe`` frame).  ``--by-rank`` appends the
-    per-rank breakdown table — the straggler/skew view.
+    Default mode polls one reused query connection per refresh; ``--live``
+    subscribes for pushed composites (the v2 ``subscribe`` frame) and
+    reconnects across master restarts.  ``--by-rank`` appends the per-rank
+    breakdown table — the straggler/skew view.
     """
     from .aggregate import merge_tallies
-    from .stream import (
-        ProtocolError,
-        query_composite,
-        query_groups,
-        query_ranks,
-        subscribe_composites,
-    )
+    from .stream import ProtocolError, ServerRejected, StreamClient
 
     if args.live and args.by_group:
         print(
             "[iprof] --by-group is poll-only; ignoring --live for this view",
             file=sys.stderr,
         )
+    client_kw = {"token": args.token, "tls_ca": args.tls_ca}
     try:
         if args.live and not args.by_group:  # group view is poll-only
+            return _top_live(args, client_kw)
+        with StreamClient(args.addr, timeout_s=args.timeout, **client_kw) as c:
             i = 0
-            for t, meta in subscribe_composites(
-                args.addr,
-                period_s=args.interval,
-                timeout_s=args.timeout,
-                by_rank=args.by_rank,
-            ):
-                _render_composite(args, t, meta, ranks=meta.get("ranks"))
+            while args.iterations is None or i < args.iterations:
+                if i:
+                    time.sleep(args.interval)
                 i += 1
-                if args.iterations is not None and i >= args.iterations:
-                    break
-            return 0
-        i = 0
-        while args.iterations is None or i < args.iterations:
-            if i:
-                time.sleep(args.interval)
-            i += 1
-            if args.by_group:
-                groups, meta = query_groups(args.addr, timeout_s=args.timeout)
-                if not meta.get("rollup"):
-                    print(
-                        f"[iprof] master at {args.addr} runs without "
-                        "--rollup-groups; no group breakdown to show",
-                        file=sys.stderr,
-                    )
-                    return 1
-                copies = [tally_plugin.Tally().merge(t) for t in groups.values()]
-                t = merge_tallies(copies)[0] if copies else tally_plugin.Tally()
-                _render_composite(args, t, meta, groups=groups)
-            elif args.by_rank:
-                ranks, meta = query_ranks(args.addr, timeout_s=args.timeout)
-                # merge_tallies folds in place: merge copies, keep ranks intact
-                copies = [tally_plugin.Tally().merge(t) for t in ranks.values()]
-                t = merge_tallies(copies)[0] if copies else tally_plugin.Tally()
-                _render_composite(args, t, meta, ranks=ranks)
-            else:
-                t, meta = query_composite(args.addr, timeout_s=args.timeout)
-                _render_composite(args, t, meta)
+                if args.by_group:
+                    groups, meta = c.groups()
+                    if not meta.get("rollup"):
+                        print(
+                            f"[iprof] master at {args.addr} runs without "
+                            "--rollup-groups; no group breakdown to show",
+                            file=sys.stderr,
+                        )
+                        return 1
+                    copies = [tally_plugin.Tally().merge(t) for t in groups.values()]
+                    t = merge_tallies(copies)[0] if copies else tally_plugin.Tally()
+                    _render_composite(args, t, meta, groups=groups)
+                elif args.by_rank:
+                    ranks, meta = c.ranks()
+                    # merge_tallies folds in place: merge copies, keep ranks intact
+                    copies = [tally_plugin.Tally().merge(t) for t in ranks.values()]
+                    t = merge_tallies(copies)[0] if copies else tally_plugin.Tally()
+                    _render_composite(args, t, meta, ranks=ranks)
+                else:
+                    t, meta = c.composite()
+                    _render_composite(args, t, meta)
         return 0
     except ValueError:
         print(f"[iprof] bad master address {args.addr!r} (want host:port)", file=sys.stderr)
         return 2
+    except ServerRejected as e:
+        print(f"[iprof] master at {args.addr} rejected us: {e}", file=sys.stderr)
+        return 1
     except (OSError, ProtocolError) as e:
         print(f"[iprof] master at {args.addr} unreachable: {e}", file=sys.stderr)
         return 1
@@ -338,6 +424,17 @@ def build_parser() -> argparse.ArgumentParser:
         type=int,
         default=32,
         help="full-snapshot resync frame every N delta pushes",
+    )
+    r.add_argument(
+        "--token",
+        default=None,
+        help="auth token sent in the stream hello (masters started with --token)",
+    )
+    r.add_argument(
+        "--tls-ca",
+        default=None,
+        metavar="PEM",
+        help="connect to the master over TLS, trusting this CA/cert bundle",
     )
     r.add_argument(
         "--serve-port",
@@ -440,6 +537,63 @@ def build_parser() -> argparse.ArgumentParser:
         "'host' groups by hostname, an integer N buckets ranks N-at-a-time "
         "(pre-aggregation for >1k-rank trees; query with iprof top --by-group)",
     )
+    s.add_argument(
+        "--tls-cert",
+        default=None,
+        metavar="PEM",
+        help="serve over TLS with this certificate (chain) file",
+    )
+    s.add_argument(
+        "--tls-key",
+        default=None,
+        metavar="PEM",
+        help="private key for --tls-cert (default: key is in the cert file)",
+    )
+    s.add_argument(
+        "--tls-ca",
+        default=None,
+        metavar="PEM",
+        help="with --tls-cert: require and verify client certificates against "
+        "this CA (mutual TLS); without it, also used as the CA for "
+        "--forward-to upstream TLS",
+    )
+    s.add_argument(
+        "--token",
+        action="append",
+        default=None,
+        metavar="TOK[=TENANT]",
+        help="require hello auth; repeatable — each token maps its clients "
+        "into TENANT's namespace (default tenant when omitted)",
+    )
+    s.add_argument(
+        "--max-sources",
+        type=int,
+        default=0,
+        help="per-tenant source quota (0 = unlimited)",
+    )
+    s.add_argument(
+        "--max-tally-rows",
+        type=int,
+        default=0,
+        help="per-source tally-row quota, host+device (0 = unlimited)",
+    )
+    s.add_argument(
+        "--max-subscribers",
+        type=int,
+        default=0,
+        help="per-tenant live-subscriber quota (0 = unlimited)",
+    )
+    s.add_argument(
+        "--forward-token",
+        default=None,
+        help="auth token for the --forward-to upstream master",
+    )
+    s.add_argument(
+        "--forward-tls-ca",
+        default=None,
+        metavar="PEM",
+        help="connect to --forward-to over TLS, trusting this CA/cert bundle",
+    )
     s.set_defaults(fn=_serve)
 
     tp = sub.add_parser("top", help="attach to a master and render the live composite")
@@ -468,6 +622,26 @@ def build_parser() -> argparse.ArgumentParser:
     tp.add_argument("--top", type=int, default=None)
     tp.add_argument("--device", action="store_true")
     tp.add_argument("--no-clear", action="store_true", help="don't clear the screen between refreshes")
+    tp.add_argument(
+        "--token", default=None, help="auth token (masters started with --token)"
+    )
+    tp.add_argument(
+        "--tls-ca",
+        default=None,
+        metavar="PEM",
+        help="connect over TLS, trusting this CA/cert bundle",
+    )
+    tp.add_argument(
+        "--no-reconnect",
+        action="store_true",
+        help="--live: exit when the master goes away instead of reconnecting",
+    )
+    tp.add_argument(
+        "--reconnect-max-wait",
+        type=float,
+        default=15.0,
+        help="--live: cap for the exponential reconnect backoff (seconds)",
+    )
     tp.set_defaults(fn=_top)
     return p
 

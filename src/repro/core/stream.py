@@ -64,12 +64,18 @@ state, so nothing is lost but latency.
 
 from __future__ import annotations
 
+import collections
+import dataclasses
+import hmac
+import logging
 import os
 import select
 import socket
+import ssl
 import struct
 import threading
 import time
+import warnings
 from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
 
 import msgpack
@@ -84,10 +90,26 @@ PROTOCOL_VERSION = 2
 DELTA_MIN_VERSION = 2
 MAX_FRAME = 64 << 20  # frames are tally snapshots: KBs in practice (§3.7)
 _HDR = struct.Struct("!I")
+#: tenant id used when auth is off, and for tokens mapped without a tenant
+DEFAULT_TENANT = "default"
+
+logger = logging.getLogger("repro.stream")
 
 
 class ProtocolError(RuntimeError):
     """Malformed or truncated frame on a stream connection."""
+
+
+class ServerRejected(ProtocolError):
+    """The server refused the request: auth failure or quota exceeded.
+
+    Carries the server's ``error`` code (``"auth"`` / ``"quota"``) so clients
+    can distinguish retryable transport trouble from a hard rejection."""
+
+    def __init__(self, code: str, detail: str = ""):
+        super().__init__(f"server rejected request ({code}): {detail or code}")
+        self.code = code
+        self.detail = detail
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +163,145 @@ def default_source(rank: int = 0) -> str:
 
 
 # ---------------------------------------------------------------------------
+# Hardened serving tier: TLS contexts, token auth, tenants, quotas
+# ---------------------------------------------------------------------------
+
+
+def server_ssl_context(
+    certfile: str, keyfile: Optional[str] = None, cafile: Optional[str] = None
+) -> ssl.SSLContext:
+    """Server-side TLS context for a master.
+
+    ``cafile`` additionally demands client certificates signed by that CA
+    (mutual TLS); without it any client may connect and token auth is the
+    identity layer."""
+    ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_SERVER)
+    ctx.load_cert_chain(certfile, keyfile)
+    if cafile:
+        ctx.load_verify_locations(cafile)
+        ctx.verify_mode = ssl.CERT_REQUIRED
+    return ctx
+
+
+def client_ssl_context(
+    cafile: Optional[str] = None,
+    certfile: Optional[str] = None,
+    keyfile: Optional[str] = None,
+) -> ssl.SSLContext:
+    """Client-side TLS context for streamers and :class:`StreamClient`.
+
+    ``cafile`` pins the master's (typically self-signed or fleet-internal)
+    CA; without it the system trust store applies.  Hostname checking is
+    disabled — masters live on ephemeral ports behind job schedulers, so
+    identity comes from the pinned CA (and tokens), not DNS names."""
+    ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_CLIENT)
+    ctx.check_hostname = False
+    if cafile:
+        ctx.load_verify_locations(cafile)
+    else:
+        ctx.load_default_certs()
+    if certfile:
+        ctx.load_cert_chain(certfile, keyfile)
+    return ctx
+
+
+@dataclasses.dataclass
+class ServeOptions:
+    """Every serving-tier knob for a :class:`MasterServer` in one object.
+
+    Shared by ``MasterServer``, ``ServeEngine``, ``TraceConfig`` and the
+    ``iprof serve`` flag parser, so server construction is one value instead
+    of ~10 scattered keywords.  All fields have working defaults: a default-
+    constructed ``ServeOptions()`` reproduces the historical open,
+    plaintext, single-tenant master.
+
+    Security knobs:
+
+    * ``tls_cert``/``tls_key`` enable TLS on the listening socket;
+      ``tls_ca`` additionally requires client certificates (mutual TLS).
+    * ``auth_tokens`` maps bearer token → tenant id.  When set, every
+      connection must open with a ``hello`` carrying a valid ``token``
+      before any other frame; failures are rejected, logged, and counted.
+      When ``None``, auth is off and every connection lands in the
+      ``"default"`` tenant.
+    * quotas (``max_sources``, ``max_tally_rows``, ``max_subscribers``) are
+      enforced per tenant at ingest and subscribe time; ``0`` = unlimited.
+
+    Forwarding credentials (``forward_token``/``forward_tls_ca``) are what
+    *this* master presents upstream; ``forward_tenant`` names the tenant
+    whose state is forwarded (interior tree hops are single-tenant
+    infrastructure — see docs/streaming.md §tenants).
+    """
+
+    fanout: int = 32
+    forward_ranks: bool = True
+    forward_delta: bool = True
+    forward_resync_every: int = 32
+    rollup_groups: Union[None, str, int, Callable[[str], str]] = None
+    composite_cache: bool = True
+    # -- TLS --
+    tls_cert: Optional[str] = None
+    tls_key: Optional[str] = None
+    tls_ca: Optional[str] = None
+    # -- auth / tenancy --
+    auth_tokens: Optional[Dict[str, str]] = None
+    # -- per-tenant quotas (0 = unlimited) --
+    max_sources: int = 0
+    max_tally_rows: int = 0
+    max_subscribers: int = 0
+    #: bounded per-subscriber frame queue; a subscriber whose queue overflows
+    #: (it is not draining what the hub fans out) is evicted, not waited on
+    hub_queue_frames: int = 16
+    # -- upstream credentials (local masters forwarding to a parent) --
+    forward_token: Optional[str] = None
+    forward_tls_ca: Optional[str] = None
+    forward_tenant: str = DEFAULT_TENANT
+
+    def __post_init__(self):
+        if self.tls_key and not self.tls_cert:
+            raise ValueError("tls_key requires tls_cert")
+        if self.tls_ca and not self.tls_cert:
+            raise ValueError("tls_ca (client-cert verification) requires tls_cert")
+        for name in ("max_sources", "max_tally_rows", "max_subscribers"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0 (0 = unlimited)")
+        if self.hub_queue_frames < 1:
+            raise ValueError("hub_queue_frames must be >= 1")
+
+    @property
+    def auth_required(self) -> bool:
+        return bool(self.auth_tokens)
+
+    def tenant_for(self, token: Optional[Union[str, bytes]]) -> Optional[str]:
+        """Token → tenant id; None means *rejected*.
+
+        Compares against every configured token with
+        :func:`hmac.compare_digest` (no early exit on the first mismatched
+        byte, and no dict-lookup timing channel on token existence).  With
+        auth off every caller maps to :data:`DEFAULT_TENANT`."""
+        if not self.auth_tokens:
+            return DEFAULT_TENANT
+        if not isinstance(token, (str, bytes)):
+            return None
+        tb = token.encode() if isinstance(token, str) else token
+        matched: Optional[str] = None
+        for tok, tenant in self.auth_tokens.items():
+            if hmac.compare_digest(tok.encode(), tb):
+                matched = tenant or DEFAULT_TENANT
+        return matched
+
+    def build_server_ssl(self) -> Optional[ssl.SSLContext]:
+        if self.tls_cert is None:
+            return None
+        return server_ssl_context(self.tls_cert, self.tls_key, self.tls_ca)
+
+    def build_forward_ssl(self) -> Optional[ssl.SSLContext]:
+        if self.forward_tls_ca is None:
+            return None
+        return client_ssl_context(cafile=self.forward_tls_ca)
+
+
+# ---------------------------------------------------------------------------
 # Rank side: snapshot push client
 # ---------------------------------------------------------------------------
 
@@ -188,6 +349,9 @@ class SnapshotStreamer:
         timeout_s: float = 2.0,
         delta: bool = True,
         resync_every: int = 32,
+        token: Optional[str] = None,
+        ssl_context: Optional[ssl.SSLContext] = None,
+        server_hostname: Optional[str] = None,
     ):
         self.addr = parse_addr(addr)
         self.source = source
@@ -195,6 +359,12 @@ class SnapshotStreamer:
         self.timeout_s = timeout_s
         self.delta = delta
         self.resync_every = max(1, int(resync_every))
+        #: bearer token presented in ``hello`` (auth-enabled masters)
+        self.token = token
+        #: client-side TLS context (see :func:`client_ssl_context`); None
+        #: keeps the plaintext wire
+        self.ssl_context = ssl_context
+        self.server_hostname = server_hostname or self.addr[0]
         self.pushed = 0
         self.dropped = 0
         self.skipped = 0
@@ -202,6 +372,7 @@ class SnapshotStreamer:
         self.delta_frames = 0
         self.bytes_sent = 0
         self.resyncs = 0
+        self.rejected = 0  # master sent an error frame (auth/quota): conn dropped
         self._sock: Optional[socket.socket] = None
         self._next_retry = 0.0
         self._lock = threading.Lock()
@@ -358,6 +529,22 @@ class SnapshotStreamer:
                 else:
                     self._src.setdefault(str(src), _SourceState()).force_full = True
                 self.resyncs += 1
+            elif kind == "error":
+                # hard rejection (bad token, quota): drop the connection and
+                # let the retry backoff pace reconnects — pushes keep being
+                # counted in ``dropped`` so the failure is visible, and a
+                # fixed token/quota on the master side heals without restart
+                self.rejected += 1
+                logger.warning(
+                    "master %s:%d rejected stream (%s): %s",
+                    self.addr[0],
+                    self.addr[1],
+                    msg.get("error", "?"),
+                    msg.get("detail", ""),
+                )
+                self._drop_conn()
+                self._next_retry = time.monotonic() + self.retry_s
+                return False
             # anything else from the master is ignorable here
 
     def _ensure_conn(self) -> Optional[socket.socket]:
@@ -368,11 +555,16 @@ class SnapshotStreamer:
         try:
             s = socket.create_connection(self.addr, timeout=self.timeout_s)
             s.settimeout(self.timeout_s)
-            s.sendall(
-                pack_frame(
-                    {"type": "hello", "v": PROTOCOL_VERSION, "source": self.source}
+            if self.ssl_context is not None:
+                # handshake runs under the socket timeout; a plaintext or
+                # wrong-cert master fails here (OSError) → normal retry path
+                s = self.ssl_context.wrap_socket(
+                    s, server_hostname=self.server_hostname
                 )
-            )
+            hello = {"type": "hello", "v": PROTOCOL_VERSION, "source": self.source}
+            if self.token is not None:
+                hello["token"] = self.token
+            s.sendall(pack_frame(hello))
         except OSError:
             self._next_retry = time.monotonic() + self.retry_s
             return None
@@ -592,6 +784,46 @@ class _SourceEntry:
         self.snap_version = -1
 
 
+class _Tenant:
+    """One tenant's complete namespace inside a master: sources, composite
+    cache, rollup groups, subscriber count.  Everything a client can read is
+    scoped here, so tenant A's queries can never observe tenant B's state —
+    isolation is structural, not filtered.  All fields are guarded by the
+    owning master's ``_lock``."""
+
+    __slots__ = (
+        "name",
+        "latest",
+        "dirty_srcs",
+        "version",
+        "comp",
+        "comp_dirty",
+        "group_tallies",
+        "group_members",
+        "group_dirty",
+        "src_group",
+        "subscribers",
+    )
+
+    def __init__(self, name: str):
+        self.name = name
+        #: source → stored state (gen, seq, cumulative tally, receipt time)
+        self.latest: Dict[str, _SourceEntry] = {}
+        #: sources updated since the last successful upstream flush
+        self.dirty_srcs: set = set()
+        self.version = 0  # bumped per state update; gates subscription pushes
+        #: incrementally-maintained composite + rebuild flag
+        self.comp: Optional[Tally] = None
+        self.comp_dirty = True
+        #: rollup state: group id → running tally, members, rebuild flags
+        self.group_tallies: Dict[str, Tally] = {}
+        self.group_members: Dict[str, set] = {}
+        self.group_dirty: set = set()
+        self.src_group: Dict[str, str] = {}
+        #: live subscriber count (quota enforcement)
+        self.subscribers = 0
+
+
 class MasterServer:
     """Streaming master: latest-state-per-source store + monoid merge.
 
@@ -628,45 +860,51 @@ class MasterServer:
         forward_ranks: bool = True,
         rollup_groups: Union[None, str, int, "Callable[[str], str]"] = None,
         composite_cache: bool = True,
+        options: Optional[ServeOptions] = None,
     ):
         self.host = host
         self.port = port  # rebound to the real port at start()
-        self.fanout = fanout
+        if options is None:
+            # legacy keyword construction: fold the scattered knobs into a
+            # ServeOptions so there is exactly one source of truth below
+            options = ServeOptions(
+                fanout=fanout,
+                forward_ranks=forward_ranks,
+                forward_delta=forward_delta,
+                forward_resync_every=forward_resync_every,
+                rollup_groups=rollup_groups,
+                composite_cache=composite_cache,
+            )
+        self.options = options
+        # mirrored views of the options (long-standing public attributes)
+        self.fanout = options.fanout
         self.forward_to = forward_to
         self.forward_period_s = forward_period_s
-        self.forward_delta = forward_delta
-        self.forward_resync_every = forward_resync_every
-        self.forward_ranks = forward_ranks
+        self.forward_delta = options.forward_delta
+        self.forward_resync_every = options.forward_resync_every
+        self.forward_ranks = options.forward_ranks
         #: node-level pre-aggregation (>1k-rank trees): group sources into
         #: rollup tallies maintained incrementally on ingest.  ``"host"``
         #: groups by the host part of ``host:pid:rankN`` source ids; an int N
         #: buckets rank indices N-at-a-time (``group0`` = ranks 0..N-1); a
         #: callable maps source id → group id.  None disables rollups.
-        self.rollup_groups = rollup_groups
+        self.rollup_groups = options.rollup_groups
         #: maintain the composite incrementally on ingest (O(changed) per
         #: read).  False restores the rebuild-per-read behavior — the
         #: benchmark baseline and an escape hatch, not a recommended mode.
-        self.composite_cache = composite_cache
+        self.composite_cache = options.composite_cache
         self.source = source or f"master:{socket.gethostname()}:{os.getpid()}"
-        #: source → stored state (gen, seq, cumulative tally, receipt time)
-        self._latest: Dict[str, _SourceEntry] = {}
-        #: sources updated since the last successful flush — per-rank
-        #: forwarding copies and delta-encodes only these, so an idle rank
-        #: costs nothing per forward period, not O(tally width)
-        self._dirty_srcs: set = set()
+        #: tenant id → complete per-tenant namespace (sources, composite
+        #: cache, rollups, subscriber count); non-default tenants are
+        #: created on first touch, the default one eagerly (so the
+        #: `_latest` compatibility view is a lock-free read)
+        self._tenants: Dict[str, _Tenant] = {DEFAULT_TENANT: _Tenant(DEFAULT_TENANT)}
         self._conn_gen = 0  # connection-generation counter (gen scope)
         self._lock = threading.Lock()
         self._dirty = False
-        self._version = 0  # bumped per state update; gates subscription pushes
-        #: incrementally-maintained composite + rebuild flag (generation-
-        #: stamped by ``_version``; see ``_composite_locked``)
-        self._comp: Optional[Tally] = None
-        self._comp_dirty = True
-        #: rollup state: group id → running tally, members, rebuild flags
-        self._group_tallies: Dict[str, Tally] = {}
-        self._group_members: Dict[str, set] = {}
-        self._group_dirty: set = set()
-        self._src_group: Dict[str, str] = {}
+        #: server-side TLS context (built eagerly: bad cert paths fail at
+        #: construction, not on the first connection)
+        self._tls = options.build_server_ssl()
         self.frames = 0
         self.snapshots = 0  # state updates ingested (full + delta)
         self.full_snapshots = 0
@@ -676,11 +914,50 @@ class MasterServer:
         self.comp_row_ops = 0  # ApiStat row merges spent maintaining/rebuilding
         self.comp_rebuilds = 0  # full composite rebuilds (non-monotone fallback)
         self.comp_incremental = 0  # ingests applied incrementally
+        # hardened-tier counters
+        self.auth_failures = 0  # bad/missing token, or frames before auth
+        self.tls_failures = 0  # TLS handshakes that did not complete
+        self.quota_src_rejects = 0  # snapshots refused: tenant source quota
+        self.quota_row_rejects = 0  # frames refused: tally row quota
+        self.quota_sub_rejects = 0  # subscribes refused: subscriber quota
         self._lsock: Optional[socket.socket] = None
         self._stop_evt = threading.Event()
         self._threads: List[threading.Thread] = []
         self._conns: List[socket.socket] = []
         self._forwarder: Optional[SnapshotStreamer] = None
+        self._hub = _BroadcastHub(self)
+
+    def _tenant_locked(self, name: str) -> _Tenant:
+        tn = self._tenants.get(name)
+        if tn is None:
+            tn = self._tenants[name] = _Tenant(name)
+        return tn
+
+    @property
+    def _latest(self) -> Dict[str, _SourceEntry]:
+        """Default tenant's source store (single-tenant compatibility view).
+
+        Deliberately lock-free (the default tenant always exists): callers
+        that mutate it — tests simulating master-side state loss — hold
+        ``m._lock`` themselves, and taking it here would deadlock them.
+        """
+        return self._tenants[DEFAULT_TENANT].latest
+
+    @property
+    def sub_encodes(self) -> int:
+        """Composite serializations spent on subscribers (once per tenant
+        per update, regardless of subscriber count — the hub invariant)."""
+        return self._hub.encodes
+
+    @property
+    def sub_frames(self) -> int:
+        """Frames enqueued to subscribers (encode-shared fanout)."""
+        return self._hub.frames_out
+
+    @property
+    def sub_evictions(self) -> int:
+        """Slow subscribers evicted on queue overflow."""
+        return self._hub.evictions
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "MasterServer":
@@ -697,12 +974,15 @@ class MasterServer:
         )
         acceptor.start()
         self._threads.append(acceptor)
+        self._hub.start()
         if self.forward_to is not None:
             self._forwarder = SnapshotStreamer(
                 self.forward_to,
                 source=self.source,
                 delta=self.forward_delta,
                 resync_every=self.forward_resync_every,
+                token=self.options.forward_token,
+                ssl_context=self.options.build_forward_ssl(),
             )
             fwd = threading.Thread(
                 target=self._forward_loop, name="thapi-master-forward", daemon=True
@@ -716,6 +996,14 @@ class MasterServer:
         self._stop_evt.set()
         if self._lsock is not None:
             try:
+                # shutdown() wakes an acceptor blocked in accept(); close()
+                # alone leaves it pinning the listening socket (and the
+                # port) for the life of the process — a restarted master
+                # could then never rebind the same port
+                self._lsock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
                 self._lsock.close()
             except OSError:
                 pass
@@ -723,6 +1011,7 @@ class MasterServer:
         if self._forwarder is not None:
             self.flush(force=True)  # last composite must reach the parent
             self._forwarder.close()
+        self._hub.stop()
         with self._lock:
             conns, self._conns = self._conns, []
             threads, self._threads = list(self._threads), []
@@ -757,7 +1046,8 @@ class MasterServer:
         tally: Union[Tally, dict],
         seq: Optional[int] = None,
         gen: Optional[int] = None,
-    ) -> None:
+        tenant: str = DEFAULT_TENANT,
+    ) -> bool:
         """Ingest a full cumulative snapshot (socket handlers and the
         in-process tracer both land here). Out-of-order frames
         (seq < stored, same connection generation) are stale duplicates of
@@ -765,23 +1055,52 @@ class MasterServer:
         generation (reconnect, new session) always replaces: its snapshot is
         cumulative truth and its seq chain starts over.
 
+        Returns True when the state was stored.  False means the frame was
+        dropped — a stale duplicate, or a quota rejection for ``tenant``
+        (a *new* source past ``max_sources``, or a tally wider than
+        ``max_tally_rows``; counted in the ``quota_*`` stats).
+
         The master takes ownership of ``tally`` — callers must not mutate it
         afterwards (the incremental composite diffs stored states)."""
         if not isinstance(tally, Tally):
             tally = Tally.from_obj(tally)
+        opts = self.options
         with self._lock:
-            prev = self._latest.get(source)
+            tn = self._tenant_locked(tenant)
+            prev = tn.latest.get(source)
             if prev is not None and seq is not None and gen == prev.gen and seq < prev.seq:
-                return
+                return False
+            if prev is None and opts.max_sources and len(tn.latest) >= opts.max_sources:
+                self.quota_src_rejects += 1
+                logger.warning(
+                    "tenant %r: rejected new source %r (source quota %d reached)",
+                    tenant,
+                    source,
+                    opts.max_sources,
+                )
+                return False
+            if opts.max_tally_rows and (
+                len(tally.apis) + len(tally.device_apis) > opts.max_tally_rows
+            ):
+                self.quota_row_rejects += 1
+                logger.warning(
+                    "tenant %r: rejected snapshot from %r (%d rows > quota %d)",
+                    tenant,
+                    source,
+                    len(tally.apis) + len(tally.device_apis),
+                    opts.max_tally_rows,
+                )
+                return False
             nseq = seq if seq is not None else (prev.seq + 1 if prev is not None else 0)
             old = prev.tally if prev is not None else None
-            self._latest[source] = _SourceEntry(gen, nseq, tally, time.time())
+            tn.latest[source] = _SourceEntry(gen, nseq, tally, time.time())
             self.snapshots += 1
             self.full_snapshots += 1
             self._dirty = True
-            self._dirty_srcs.add(source)
-            self._version += 1
-            self._caches_note_update_locked(source, old, tally, None)
+            tn.dirty_srcs.add(source)
+            tn.version += 1
+            self._caches_note_update_locked(tn, source, old, tally, None)
+        return True
 
     def submit_delta(
         self,
@@ -790,6 +1109,7 @@ class MasterServer:
         seq: int,
         base_seq: int,
         gen: Optional[int] = None,
+        tenant: str = DEFAULT_TENANT,
     ) -> bool:
         """Ingest a delta frame; True if applied.
 
@@ -798,15 +1118,44 @@ class MasterServer:
         (unknown source after a master restart, a duplicate, an out-of-order
         frame, a reset seq, a different connection's chain) is rejected so
         the stored cumulative state is never corrupted; the socket handler
-        then answers ``resync``.
+        then answers ``resync``.  A delta that would grow the stored tally
+        past the tenant's ``max_tally_rows`` quota is rejected the same way
+        (the follow-up full snapshot is then bounced by :meth:`submit`, so
+        an over-quota source parks at its last admitted state).
         """
+        opts = self.options
         with self._lock:
-            prev = self._latest.get(source)
+            tn = self._tenant_locked(tenant)
+            prev = tn.latest.get(source)
             if prev is None or prev.gen != gen or prev.seq != base_seq:
                 return False
+            if opts.max_tally_rows:
+                try:
+                    grown = sum(
+                        1
+                        for prev_t, rows in (
+                            (prev.tally.apis, delta["apis"]),
+                            (prev.tally.device_apis, delta["device_apis"]),
+                        )
+                        for p, a, *_ in rows
+                        if intern_key(p, a) not in prev_t
+                    )
+                except (KeyError, TypeError, ValueError):
+                    return False  # malformed frame: ask for a resync
+                rows = len(prev.tally.apis) + len(prev.tally.device_apis) + grown
+                if rows > opts.max_tally_rows:
+                    self.quota_row_rejects += 1
+                    logger.warning(
+                        "tenant %r: rejected delta from %r (%d rows > quota %d)",
+                        tenant,
+                        source,
+                        rows,
+                        opts.max_tally_rows,
+                    )
+                    return False
             # caches diff against the pre-apply state, so feed them first —
             # a delta names exactly the changed rows, the O(changed) path
-            self._caches_note_update_locked(source, prev.tally, None, delta)
+            self._caches_note_update_locked(tn, source, prev.tally, None, delta)
             prev.tally.apply_delta(delta)
             prev.seq = seq
             prev.ts = time.time()
@@ -815,13 +1164,13 @@ class MasterServer:
             self.snapshots += 1
             self.deltas += 1
             self._dirty = True
-            self._dirty_srcs.add(source)
-            self._version += 1
-            return True
+            tn.dirty_srcs.add(source)
+            tn.version += 1
+        return True
 
-    def _reset_seq(self, source: str) -> None:
+    def _reset_seq(self, source: str, tenant: str = DEFAULT_TENANT) -> None:
         with self._lock:
-            prev = self._latest.get(source)
+            prev = self._tenant_locked(tenant).latest.get(source)
             if prev is not None:
                 # keep the last tally but accept any future seq from it
                 prev.seq = -1
@@ -829,32 +1178,33 @@ class MasterServer:
     # -- cache maintenance (all called under self._lock) ---------------------
     def _caches_note_update_locked(
         self,
+        tn: _Tenant,
         source: str,
         old: Optional[Tally],
         new: Optional[Tally],
         delta: Optional[dict],
     ) -> None:
-        """Fold one source update into the composite and rollup caches.
+        """Fold one source update into the tenant's composite/rollup caches.
 
         Exactly one of ``new`` (full snapshot replacing ``old``) or ``delta``
         (v2 delta about to be applied to ``old``) is set.  Monotone growth is
         applied incrementally — O(changed rows); anything else flips the
         affected cache to dirty and the next read rebuilds.
         """
-        if self.composite_cache and not self._comp_dirty and self._comp is not None:
-            ops = self._apply_to_acc(self._comp, old, new, delta)
+        if self.composite_cache and not tn.comp_dirty and tn.comp is not None:
+            ops = self._apply_to_acc(tn.comp, old, new, delta)
             if ops is None:
-                self._comp_dirty = True
+                tn.comp_dirty = True
             else:
                 self.comp_row_ops += ops
                 self.comp_incremental += 1
         else:
-            self._comp_dirty = True
+            tn.comp_dirty = True
         if self.rollup_groups is not None:
-            g = self._group_of_locked(source)
-            self._group_members.setdefault(g, set()).add(source)
-            gt = self._group_tallies.get(g)
-            if g in self._group_dirty:
+            g = self._group_of_locked(tn, source)
+            tn.group_members.setdefault(g, set()).add(source)
+            gt = tn.group_tallies.get(g)
+            if g in tn.group_dirty:
                 return
             if gt is None:
                 # first update for this group: seed from the change itself
@@ -862,12 +1212,12 @@ class MasterServer:
                 if old is None and new is not None:
                     seeded = Tally()
                     _tally_update_ops(seeded, None, new)
-                    self._group_tallies[g] = seeded
+                    tn.group_tallies[g] = seeded
                 else:
-                    self._group_dirty.add(g)
+                    tn.group_dirty.add(g)
                 return
             if self._apply_to_acc(gt, old, new, delta) is None:
-                self._group_dirty.add(g)
+                tn.group_dirty.add(g)
 
     @staticmethod
     def _apply_to_acc(
@@ -879,15 +1229,17 @@ class MasterServer:
         assert new is not None
         return _tally_update_ops(acc, old, new)
 
-    def _comp_copies_locked(self) -> Tuple[List[Tally], int]:
+    def _comp_copies_locked(self, tn: _Tenant) -> Tuple[List[Tally], int]:
         """Rebuild input: per-source copies + the row-op count, one lock hold."""
         ops = sum(
             len(e.tally.apis) + len(e.tally.device_apis)
-            for e in self._latest.values()
+            for e in tn.latest.values()
         )
-        return [Tally().merge(e.tally) for e in self._latest.values()], ops
+        return [Tally().merge(e.tally) for e in tn.latest.values()], ops
 
-    def _finish_rebuild(self, copies: List[Tally], ops: int, version: int) -> Tally:
+    def _finish_rebuild(
+        self, tn: _Tenant, copies: List[Tally], ops: int, version: int
+    ) -> Tally:
         """Merge a rebuild's source copies *outside* the lock (ingest never
         stalls behind an O(ranks × rows) merge), then store the result as the
         cache only if no ingest landed mid-rebuild (``version`` unchanged —
@@ -902,29 +1254,29 @@ class MasterServer:
         with self._lock:
             self.comp_rebuilds += 1
             self.comp_row_ops += ops
-            if self.composite_cache and self._version == version:
-                self._comp = comp
-                self._comp_dirty = False
+            if self.composite_cache and tn.version == version:
+                tn.comp = comp
+                tn.comp_dirty = False
                 return Tally().merge(comp)
         # cache disabled, or state moved mid-rebuild (comp is still a
         # consistent read of the snapshot we copied): hand it out uncached
         return comp
 
-    def _ranks_snapshot_locked(self) -> Dict[str, Tally]:
+    def _ranks_snapshot_locked(self, tn: _Tenant) -> Dict[str, Tally]:
         """Frozen per-source copies, refreshed only for sources whose state
         changed since the last read (version-stamped).  The returned tallies
         are shared snapshots: replaced wholesale on change, never mutated in
         place — safe to serialize or merge outside the lock, never to edit."""
         out = {}
-        for src, e in self._latest.items():
+        for src, e in tn.latest.items():
             if e.snap is None or e.snap_version != e.version:
                 e.snap = Tally().merge(e.tally)
                 e.snap_version = e.version
             out[src] = e.snap
         return out
 
-    def _group_of_locked(self, source: str) -> str:
-        g = self._src_group.get(source)
+    def _group_of_locked(self, tn: _Tenant, source: str) -> str:
+        g = tn.src_group.get(source)
         if g is None:
             rg = self.rollup_groups
             if callable(rg):
@@ -938,26 +1290,27 @@ class MasterServer:
                     g = source.partition(":")[0] or source
             else:  # "host" (the default string form)
                 g = source.partition(":")[0] or source
-            self._src_group[source] = g
+            tn.src_group[source] = g
         return g
 
-    def _rebuild_group_locked(self, g: str) -> None:
+    def _rebuild_group_locked(self, tn: _Tenant, g: str) -> None:
         t = Tally()
-        for src in self._group_members.get(g, ()):
-            e = self._latest.get(src)
+        for src in tn.group_members.get(g, ()):
+            e = tn.latest.get(src)
             if e is not None:
                 t.merge(e.tally)
-        self._group_tallies[g] = t
-        self._group_dirty.discard(g)
+        tn.group_tallies[g] = t
+        tn.group_dirty.discard(g)
 
-    def _groups_locked(self) -> Dict[str, Tally]:
-        for g in list(self._group_dirty):
-            self._rebuild_group_locked(g)
-        return self._group_tallies
+    def _groups_locked(self, tn: _Tenant) -> Dict[str, Tally]:
+        for g in list(tn.group_dirty):
+            self._rebuild_group_locked(tn, g)
+        return tn.group_tallies
 
     # -- reads ---------------------------------------------------------------
-    def composite(self) -> Tally:
-        """The merged cluster profile, O(changed) in steady state.
+    def composite(self, tenant: str = DEFAULT_TENANT) -> Tally:
+        """The merged cluster profile of one tenant, O(changed) in steady
+        state.
 
         Maintained incrementally on ingest (full snapshots diff against the
         replaced state, deltas apply their changed rows directly), so a read
@@ -966,13 +1319,14 @@ class MasterServer:
         pre-cache behavior, still reachable via ``composite_cache=False``).
         The returned tally is the caller's to mutate."""
         with self._lock:
-            if self.composite_cache and self._comp is not None and not self._comp_dirty:
-                return Tally().merge(self._comp)
-            version = self._version
-            copies, ops = self._comp_copies_locked()
-        return self._finish_rebuild(copies, ops, version)
+            tn = self._tenant_locked(tenant)
+            if self.composite_cache and tn.comp is not None and not tn.comp_dirty:
+                return Tally().merge(tn.comp)
+            version = tn.version
+            copies, ops = self._comp_copies_locked(tn)
+        return self._finish_rebuild(tn, copies, ops, version)
 
-    def ranks(self, copy: bool = True) -> Dict[str, Tally]:
+    def ranks(self, copy: bool = True, tenant: str = DEFAULT_TENANT) -> Dict[str, Tally]:
         """Per-source breakdown: source id → its latest cumulative tally.
         The data ``query_ranks`` serves and cluster-scope policies consume;
         merging all values reproduces :meth:`composite`.
@@ -982,12 +1336,12 @@ class MasterServer:
         sources that changed since the last read are re-copied (O(changed)),
         but callers must treat the tallies as read-only."""
         with self._lock:
-            snap = self._ranks_snapshot_locked()
+            snap = self._ranks_snapshot_locked(self._tenant_locked(tenant))
             if copy:
                 return {src: Tally().merge(t) for src, t in snap.items()}
             return dict(snap)
 
-    def groups(self) -> Dict[str, Tally]:
+    def groups(self, tenant: str = DEFAULT_TENANT) -> Dict[str, Tally]:
         """Rollup breakdown: group id → aggregated member tally (empty when
         ``rollup_groups`` is off).  Group tallies are maintained
         incrementally on ingest — the pre-aggregation layer that keeps
@@ -998,16 +1352,36 @@ class MasterServer:
         if self.rollup_groups is None:
             return {}
         with self._lock:
-            return {g: Tally().merge(t) for g, t in self._groups_locked().items()}
+            tn = self._tenant_locked(tenant)
+            return {g: Tally().merge(t) for g, t in self._groups_locked(tn).items()}
 
     def stats(self) -> dict:
         """Counters for monitoring: sources, frame/snapshot/delta/query
         totals, resyncs sent, composite-cache row-ops/rebuilds, rollup
-        group count, last-update wall clock, forwarding role."""
+        group count, last-update wall clock, forwarding role, plus the
+        hardened-tier counters (auth/TLS failures, per-quota rejects,
+        subscriber hub encode/fanout/eviction totals) and a ``per_tenant``
+        source/subscriber breakdown.  Top-level ``sources``/``updated``/
+        ``groups`` aggregate across tenants, so single-tenant callers see
+        the historical shape unchanged."""
         with self._lock:
-            sources = len(self._latest)
-            updated = max((e.ts for e in self._latest.values()), default=0.0)
-            groups = len(self._group_members) if self.rollup_groups is not None else 0
+            per_tenant = {
+                name: {
+                    "sources": len(tn.latest),
+                    "subscribers": tn.subscribers,
+                    "updated": max((e.ts for e in tn.latest.values()), default=0.0),
+                }
+                for name, tn in self._tenants.items()
+            }
+        sources = sum(t["sources"] for t in per_tenant.values())
+        subscribers = sum(t["subscribers"] for t in per_tenant.values())
+        updated = max((t["updated"] for t in per_tenant.values()), default=0.0)
+        with self._lock:
+            groups = (
+                sum(len(tn.group_members) for tn in self._tenants.values())
+                if self.rollup_groups is not None
+                else 0
+            )
         return {
             "sources": sources,
             "frames": self.frames,
@@ -1022,29 +1396,50 @@ class MasterServer:
             "groups": groups,
             "updated": updated,
             "forwarding": self.forward_to is not None,
+            "tls": self._tls is not None,
+            "auth": self.options.auth_required,
+            "tenants": len(per_tenant),
+            "per_tenant": per_tenant,
+            "subscribers": subscribers,
+            "auth_failures": self.auth_failures,
+            "tls_failures": self.tls_failures,
+            "quota_src_rejects": self.quota_src_rejects,
+            "quota_row_rejects": self.quota_row_rejects,
+            "quota_sub_rejects": self.quota_sub_rejects,
+            "sub_encodes": self._hub.encodes,
+            "sub_heartbeats": self._hub.heartbeats,
+            "sub_frames": self._hub.frames_out,
+            "sub_evictions": self._hub.evictions,
         }
 
     def flush(self, force: bool = False) -> bool:
         """Push state upstream now (local masters only): rollup-group
         tallies when ``rollup_groups`` is set (the pre-aggregated form —
         O(groups) upstream sources instead of O(ranks)), else the per-rank
-        breakdown when ``forward_ranks``, else the merged composite."""
+        breakdown when ``forward_ranks``, else the merged composite.
+
+        Forwarding is scoped to ``options.forward_tenant`` (the default
+        tenant unless configured): interior hops of a master tree are
+        single-tenant infrastructure, and tenant isolation at the serving
+        edge must not leak other tenants' state upstream implicitly."""
         if self._forwarder is None:
             return False
+        ftenant = self.options.forward_tenant
         with self._lock:
-            if not self._latest or (not self._dirty and not force):
+            tn = self._tenant_locked(ftenant)
+            if not tn.latest or (not self._dirty and not force):
                 return False
             self._dirty = False
         if self.rollup_groups is not None and self.forward_ranks:
             with self._lock:
-                gro = self._groups_locked()
+                gro = self._groups_locked(tn)
                 if force:
                     gs = list(gro)
                 else:
                     gs = sorted(
-                        {self._group_of_locked(src) for src in self._dirty_srcs}
+                        {self._group_of_locked(tn, src) for src in tn.dirty_srcs}
                     )
-                self._dirty_srcs.clear()
+                tn.dirty_srcs.clear()
                 # group accumulators mutate in place on ingest: copy under
                 # the lock, push outside it
                 copies = {g: Tally().merge(gro[g]) for g in gs if g in gro}
@@ -1059,15 +1454,15 @@ class MasterServer:
                     # so their state is re-forwarded when the parent returns
                     self._dirty = True
                     for g in copies:
-                        self._dirty_srcs.update(self._group_members.get(g, ()))
+                        tn.dirty_srcs.update(tn.group_members.get(g, ()))
         elif self.forward_ranks:
             with self._lock:
                 # only updated sources are forwarded, via the version-stamped
                 # frozen snapshots (no per-flush deep copies); a forced
                 # (stop-path) flush re-sends every source in full
-                snaps = self._ranks_snapshot_locked()
-                srcs = list(snaps) if force else list(self._dirty_srcs)
-                self._dirty_srcs.clear()
+                snaps = self._ranks_snapshot_locked(tn)
+                srcs = list(snaps) if force else list(tn.dirty_srcs)
+                tn.dirty_srcs.clear()
                 copies = {src: snaps[src] for src in srcs if src in snaps}
             ok = True
             for src, tally in copies.items():
@@ -1079,9 +1474,9 @@ class MasterServer:
                     # parent unreachable: re-arm the failed sources so their
                     # state is re-forwarded once the parent comes back
                     self._dirty = True
-                    self._dirty_srcs.update(copies)
+                    tn.dirty_srcs.update(copies)
         else:
-            ok = self._forwarder.push(self.composite())
+            ok = self._forwarder.push(self.composite(tenant=ftenant))
             if not ok:
                 with self._lock:
                     self._dirty = True
@@ -1095,8 +1490,6 @@ class MasterServer:
                 conn, _peer = ls.accept()
             except OSError:
                 break
-            with self._lock:
-                self._conns.append(conn)
             t = threading.Thread(
                 target=self._client_loop, args=(conn,), name="thapi-master-conn", daemon=True
             )
@@ -1104,10 +1497,56 @@ class MasterServer:
                 self._threads.append(t)
             t.start()
 
+    def _send_error(self, conn: socket.socket, code: str, detail: str) -> None:
+        """Best-effort rejection frame; the connection closes right after."""
+        try:
+            conn.sendall(
+                pack_frame(
+                    {
+                        "type": "error",
+                        "v": PROTOCOL_VERSION,
+                        "error": code,
+                        "detail": detail,
+                    }
+                )
+            )
+        except OSError:
+            pass
+
     def _client_loop(self, conn: socket.socket) -> None:
+        peer = "?"
+        try:
+            peer = "%s:%d" % conn.getpeername()[:2]
+        except OSError:
+            pass
+        if self._tls is not None:
+            # handshake under a timeout so a plaintext/hostile client cannot
+            # pin this thread; a plaintext client's first bytes fail to parse
+            # as a TLS record and the handshake errors out cleanly
+            try:
+                conn.settimeout(5.0)
+                conn = self._tls.wrap_socket(conn, server_side=True)
+                conn.settimeout(None)
+            except (OSError, ssl.SSLError):
+                self.tls_failures += 1
+                logger.warning("TLS handshake failed from %s", peer)
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                with self._lock:
+                    cur = threading.current_thread()
+                    if cur in self._threads:
+                        self._threads.remove(cur)
+                return
         with self._lock:
+            self._conns.append(conn)
             self._conn_gen += 1
             gen = self._conn_gen  # scopes this connection's seq chains
+        # with auth on, no frame does anything until a hello carrying a
+        # valid token binds the connection to a tenant
+        tenant: Optional[str] = None if self.options.auth_required else DEFAULT_TENANT
+        handed_off = False  # subscribe: the hub owns the socket from then on
         try:
             while not self._stop_evt.is_set():
                 try:
@@ -1118,9 +1557,51 @@ class MasterServer:
                     break
                 self.frames += 1
                 kind = msg.get("type")
-                if kind == "snapshot":
+                if kind == "hello":
+                    # a fresh connection restarts the peer's seq counter (e.g.
+                    # a new Tracer session in the same process): forget the
+                    # stored seq so its snapshots aren't dropped as stale.
+                    # The ack tells v2 senders they may switch to deltas.
+                    got = self.options.tenant_for(msg.get("token"))
+                    if got is None:
+                        self.auth_failures += 1
+                        logger.warning(
+                            "auth failure from %s (source %r): bad or missing token",
+                            peer,
+                            msg.get("source"),
+                        )
+                        self._send_error(conn, "auth", "invalid or missing token")
+                        break
+                    tenant = got
+                    self._reset_seq(str(msg.get("source", "?")), tenant)
+                    try:
+                        conn.sendall(
+                            pack_frame(
+                                {
+                                    "type": "hello_ack",
+                                    "v": PROTOCOL_VERSION,
+                                    "tenant": tenant,
+                                }
+                            )
+                        )
+                    except OSError:
+                        break
+                elif tenant is None:
+                    self.auth_failures += 1
+                    logger.warning(
+                        "rejected %r frame from %s before authentication", kind, peer
+                    )
+                    self._send_error(
+                        conn, "auth", "authenticate first: hello with token"
+                    )
+                    break
+                elif kind == "snapshot":
                     self.submit(
-                        str(msg.get("source", "?")), msg["tally"], msg.get("seq"), gen
+                        str(msg.get("source", "?")),
+                        msg["tally"],
+                        msg.get("seq"),
+                        gen,
+                        tenant=tenant,
                     )
                 elif kind == "delta":
                     source = str(msg.get("source", "?"))
@@ -1130,6 +1611,7 @@ class MasterServer:
                         int(msg.get("seq", -1)),
                         int(msg.get("base_seq", -2)),
                         gen,
+                        tenant=tenant,
                     )
                     if not ok:
                         # mis-based delta: ask the sender for a full snapshot
@@ -1147,50 +1629,53 @@ class MasterServer:
                             )
                         except OSError:
                             break
-                elif kind == "hello":
-                    # a fresh connection restarts the peer's seq counter (e.g.
-                    # a new Tracer session in the same process): forget the
-                    # stored seq so its snapshots aren't dropped as stale.
-                    # The ack tells v2 senders they may switch to deltas.
-                    self._reset_seq(str(msg.get("source", "?")))
-                    try:
-                        conn.sendall(
-                            pack_frame({"type": "hello_ack", "v": PROTOCOL_VERSION})
-                        )
-                    except OSError:
-                        break
                 elif kind == "query":
                     self.queries += 1
                     try:
-                        conn.sendall(pack_frame(self._composite_msg()))
+                        conn.sendall(pack_frame(self._composite_msg(tenant=tenant)))
                     except OSError:
                         break
                 elif kind == "query_ranks":
                     self.queries += 1
                     try:
-                        conn.sendall(pack_frame(self._ranks_msg()))
+                        conn.sendall(pack_frame(self._ranks_msg(tenant=tenant)))
                     except OSError:
                         break
                 elif kind == "query_groups":
                     self.queries += 1
                     try:
-                        conn.sendall(pack_frame(self._groups_msg()))
+                        conn.sendall(pack_frame(self._groups_msg(tenant=tenant)))
                     except OSError:
                         break
                 elif kind == "subscribe":
-                    # push composites on this connection until it dies; the
-                    # pusher owns the socket's send side from here on
+                    # hand the connection to the broadcast hub: frames are
+                    # encoded once per tenant per update and fanned out to
+                    # every subscriber from shared buffers
                     period = float(msg.get("period_s", 1.0))
                     by_rank = bool(msg.get("by_rank", False))
-                    t = threading.Thread(
-                        target=self._subscription_loop,
-                        args=(conn, period, by_rank),
-                        name="thapi-master-subpush",
-                        daemon=True,
-                    )
                     with self._lock:
-                        self._threads.append(t)
-                    t.start()
+                        tn = self._tenant_locked(tenant)
+                        if (
+                            self.options.max_subscribers
+                            and tn.subscribers >= self.options.max_subscribers
+                        ):
+                            self.quota_sub_rejects += 1
+                            admitted = False
+                        else:
+                            tn.subscribers += 1
+                            admitted = True
+                    if not admitted:
+                        logger.warning(
+                            "tenant %r: rejected subscribe from %s (quota %d)",
+                            tenant,
+                            peer,
+                            self.options.max_subscribers,
+                        )
+                        self._send_error(conn, "quota", "subscriber quota reached")
+                        break
+                    self._hub.add(conn, tenant, period, by_rank)
+                    handed_off = True
+                    break
                 elif kind == "ping":
                     try:
                         conn.sendall(pack_frame({"type": "pong", "v": PROTOCOL_VERSION}))
@@ -1200,10 +1685,11 @@ class MasterServer:
                     break
                 # unknown types: ignored, no reply needed
         finally:
-            try:
-                conn.close()
-            except OSError:
-                pass
+            if not handed_off:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
             # long-lived masters see many short query connections: prune, or
             # _conns/_threads grow without bound
             with self._lock:
@@ -1213,54 +1699,23 @@ class MasterServer:
                 if cur in self._threads:
                     self._threads.remove(cur)
 
-    def _subscription_loop(
-        self, conn: socket.socket, period_s: float, by_rank: bool = False
-    ) -> None:
-        """Push ``composite`` frames to a subscribed client every period.
-
-        Change-gated: the full composite is serialized only when state
-        actually updated since the last push; idle periods send a tiny
-        tally-less heartbeat (``unchanged: true``) instead — a 2000-row
-        composite is not re-shipped twice a second to a viewer of an idle
-        master.  The first push is always full.  With ``by_rank`` every
-        full push also carries the per-source breakdown.
-        """
-        last_version = None
-        try:
-            while not self._stop_evt.is_set():
-                with self._lock:
-                    version = self._version
-                if version != last_version:
-                    msg = self._composite_msg(by_rank=by_rank)
-                    last_version = version
-                else:
-                    st = self.stats()
-                    msg = {
-                        "type": "composite",
-                        "v": PROTOCOL_VERSION,
-                        "unchanged": True,
-                        "sources": st["sources"],
-                        "snapshots": st["snapshots"],
-                        "deltas": st["deltas"],
-                        "updated": st["updated"],
-                    }
-                try:
-                    conn.sendall(pack_frame(msg))
-                except OSError:
-                    break
-                if self._stop_evt.wait(period_s):
-                    break
-        finally:
-            with self._lock:
-                cur = threading.current_thread()
-                if cur in self._threads:
-                    self._threads.remove(cur)
-
     def _forward_loop(self) -> None:
         while not self._stop_evt.wait(self.forward_period_s):
             self.flush()
 
-    def _composite_msg(self, by_rank: bool = False) -> dict:
+    def _tenant_meta_locked(self, tn: _Tenant) -> dict:
+        """Reply meta, scoped to one tenant's sources (frame/delta counters
+        stay master-global: they are load telemetry, not state)."""
+        return {
+            "sources": len(tn.latest),
+            "snapshots": self.snapshots,
+            "deltas": self.deltas,
+            "updated": max((e.ts for e in tn.latest.values()), default=0.0),
+        }
+
+    def _composite_msg(
+        self, by_rank: bool = False, tenant: str = DEFAULT_TENANT
+    ) -> dict:
         # one snapshot under one lock: a frame's composite and per-rank map
         # must describe the same instant, or a subscriber cross-checking
         # invariant 7 (per-rank sums == composite) sees spurious mismatches
@@ -1272,62 +1727,298 @@ class MasterServer:
         # outside the lock so ingest never stalls behind it.
         comp = None
         with self._lock:
-            if self.composite_cache and self._comp is not None and not self._comp_dirty:
-                comp = Tally().merge(self._comp)
+            tn = self._tenant_locked(tenant)
+            if self.composite_cache and tn.comp is not None and not tn.comp_dirty:
+                comp = Tally().merge(tn.comp)
             else:
-                version = self._version
-                copies, ops = self._comp_copies_locked()
-            snap = self._ranks_snapshot_locked() if by_rank else None
+                version = tn.version
+                copies, ops = self._comp_copies_locked(tn)
+            snap = self._ranks_snapshot_locked(tn) if by_rank else None
+            meta = self._tenant_meta_locked(tn)
         if comp is None:
-            comp = self._finish_rebuild(copies, ops, version)
-        st = self.stats()
-        msg = {
-            "type": "composite",
-            "v": PROTOCOL_VERSION,
-            "tally": comp.to_obj(),
-            "sources": st["sources"],
-            "snapshots": st["snapshots"],
-            "deltas": st["deltas"],
-            "updated": st["updated"],
-        }
+            comp = self._finish_rebuild(tn, copies, ops, version)
+        msg = {"type": "composite", "v": PROTOCOL_VERSION, "tally": comp.to_obj()}
+        msg.update(meta)
         if by_rank:
             msg["ranks"] = {src: t.to_obj() for src, t in snap.items()}
         return msg
 
-    def _ranks_msg(self) -> dict:
+    def _heartbeat_msg(self, tenant: str = DEFAULT_TENANT) -> dict:
+        """Tally-less ``unchanged`` frame for idle subscription periods."""
+        with self._lock:
+            meta = self._tenant_meta_locked(self._tenant_locked(tenant))
+        msg = {"type": "composite", "v": PROTOCOL_VERSION, "unchanged": True}
+        msg.update(meta)
+        return msg
+
+    def _ranks_msg(self, tenant: str = DEFAULT_TENANT) -> dict:
         """``query_ranks`` reply: the per-source tally map + receipt times."""
         with self._lock:
-            snap = self._ranks_snapshot_locked()
-            stamps = {src: e.ts for src, e in self._latest.items()}
+            tn = self._tenant_locked(tenant)
+            snap = self._ranks_snapshot_locked(tn)
+            stamps = {src: e.ts for src, e in tn.latest.items()}
+            meta = self._tenant_meta_locked(tn)
         # frozen snapshots: replaced wholesale on change, safe to serialize
         # after the lock is released
-        ranks = {src: t.to_obj() for src, t in snap.items()}
-        st = self.stats()
-        return {
+        msg = {
             "type": "ranks",
             "v": PROTOCOL_VERSION,
-            "ranks": ranks,
+            "ranks": {src: t.to_obj() for src, t in snap.items()},
             "ts": stamps,
-            "sources": st["sources"],
-            "snapshots": st["snapshots"],
-            "deltas": st["deltas"],
-            "updated": st["updated"],
         }
+        msg.update(meta)
+        return msg
 
-    def _groups_msg(self) -> dict:
+    def _groups_msg(self, tenant: str = DEFAULT_TENANT) -> dict:
         """``query_groups`` reply: the rollup breakdown (empty when off)."""
-        gro = self.groups()
-        st = self.stats()
-        return {
+        gro = self.groups(tenant=tenant)
+        with self._lock:
+            meta = self._tenant_meta_locked(self._tenant_locked(tenant))
+        msg = {
             "type": "groups",
             "v": PROTOCOL_VERSION,
             "rollup": self.rollup_groups is not None,
             "groups": {g: t.to_obj() for g, t in gro.items()},
-            "sources": st["sources"],
-            "snapshots": st["snapshots"],
-            "deltas": st["deltas"],
-            "updated": st["updated"],
         }
+        msg.update(meta)
+        return msg
+
+
+# ---------------------------------------------------------------------------
+# Broadcast hub: encode-once subscription fanout
+# ---------------------------------------------------------------------------
+
+
+class _Subscriber:
+    """One subscribed connection: a bounded frame queue drained by a
+    dedicated sender thread.  The hub *offers* encoded frames; the sender
+    pushes them down the socket at whatever pace the client sustains.  A
+    full queue means the client is not keeping up — the subscriber is
+    evicted rather than allowed to stall the hub or balloon memory."""
+
+    __slots__ = (
+        "conn",
+        "tenant",
+        "period_s",
+        "by_rank",
+        "maxq",
+        "queue",
+        "cv",
+        "closed",
+        "next_due",
+        "last_version",
+        "thread",
+    )
+
+    def __init__(
+        self,
+        conn: socket.socket,
+        tenant: str,
+        period_s: float,
+        by_rank: bool,
+        maxq: int,
+    ):
+        self.conn = conn
+        self.tenant = tenant
+        self.period_s = max(0.01, float(period_s))
+        self.by_rank = bool(by_rank)
+        self.maxq = maxq
+        self.queue: collections.deque = collections.deque()
+        self.cv = threading.Condition()
+        self.closed = False
+        self.next_due = 0.0  # due immediately: snapshot-on-join
+        self.last_version: Optional[int] = None
+        self.thread: Optional[threading.Thread] = None
+
+
+class _BroadcastHub:
+    """Shared subscription fanout for a :class:`MasterServer`.
+
+    Replaces the per-client ``_subscription_loop`` (one render + serialize
+    per subscriber per period) with a single hub thread: each composite
+    update is encoded **once per (tenant, by_rank) variant** — the encoded
+    bytes are shared by every subscriber's queue, so 1 and 512 subscribers
+    cost the same serialization work (``encodes`` stays flat; the stream_bw
+    fanout sweep measures exactly this).  Encoded frames are version-stamped
+    and cached, so a late joiner of an idle tenant reuses the last encode
+    (snapshot-on-join without a re-render).
+
+    Per-subscriber pacing (``period_s``) and change-gating are preserved
+    from the old loop: an idle period ships a tiny tally-less heartbeat.
+    Slow consumers are evicted on queue overflow (``evictions``) — their
+    socket is shut down, which also unblocks a sender mid-``sendall``."""
+
+    def __init__(self, master: "MasterServer"):
+        self.m = master
+        self._subs: List[_Subscriber] = []
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        #: (tenant, by_rank) → (tenant version, encoded composite frame)
+        self._cache: Dict[Tuple[str, bool], Tuple[int, bytes]] = {}
+        self.encodes = 0  # composite serializations (once per tenant/update)
+        self.heartbeats = 0  # idle-period heartbeat frames built
+        self.frames_out = 0  # frames enqueued across all subscribers
+        self.evictions = 0  # slow subscribers dropped on queue overflow
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._thread = threading.Thread(
+            target=self._loop, name="thapi-hub", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Retire every subscriber and join the hub + sender threads.
+        Relies on the master's ``_stop_evt`` being set already."""
+        with self._lock:
+            subs, self._subs = list(self._subs), []
+        for sub in subs:
+            self._retire(sub)
+            try:
+                sub.conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        self._wake.set()
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join(timeout=2.0)
+        for sub in subs:
+            if sub.thread is not None:
+                sub.thread.join(timeout=2.0)
+        self._cache.clear()
+
+    def add(
+        self, conn: socket.socket, tenant: str, period_s: float, by_rank: bool
+    ) -> None:
+        """Adopt a connection whose client sent ``subscribe`` (the caller
+        already charged the tenant's subscriber quota)."""
+        sub = _Subscriber(
+            conn, tenant, period_s, by_rank, self.m.options.hub_queue_frames
+        )
+        sub.thread = threading.Thread(
+            target=self._sender, args=(sub,), name="thapi-hub-send", daemon=True
+        )
+        with self._lock:
+            self._subs.append(sub)
+        sub.thread.start()
+        self._wake.set()  # first frame (snapshot-on-join) goes out now
+
+    # -- internals ----------------------------------------------------------
+    def _retire(self, sub: _Subscriber, evicted: bool = False) -> bool:
+        """Close out a subscriber exactly once (uncharge quota, optionally
+        count the eviction and shut the socket down to unblock its sender)."""
+        with sub.cv:
+            if sub.closed:
+                return False
+            sub.closed = True
+            sub.cv.notify_all()
+        with self.m._lock:
+            self.m._tenant_locked(sub.tenant).subscribers -= 1
+        if evicted:
+            self.evictions += 1
+            logger.warning(
+                "evicted slow subscriber (tenant %r): %d-frame queue full",
+                sub.tenant,
+                sub.maxq,
+            )
+            try:
+                sub.conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        return True
+
+    def _offer(self, sub: _Subscriber, frame: bytes) -> None:
+        with sub.cv:
+            if sub.closed:
+                return
+            if len(sub.queue) < sub.maxq:
+                sub.queue.append(frame)
+                self.frames_out += 1
+                sub.cv.notify_all()
+                return
+        # queue full: the client is slower than its own requested period —
+        # evict instead of stalling the hub behind one bad consumer
+        self._retire(sub, evicted=True)
+
+    def _sender(self, sub: _Subscriber) -> None:
+        """Drain one subscriber's queue onto its socket (the only thread
+        that writes to it after handoff)."""
+        stop = self.m._stop_evt
+        try:
+            while True:
+                with sub.cv:
+                    while not sub.queue and not sub.closed and not stop.is_set():
+                        sub.cv.wait(0.5)
+                    if not sub.queue:
+                        break  # closed or stopping, nothing left to drain
+                    frame = sub.queue.popleft()
+                try:
+                    sub.conn.sendall(frame)
+                except OSError:
+                    break  # client went away (or eviction shut us down)
+        finally:
+            self._retire(sub)
+            try:
+                sub.conn.close()
+            except OSError:
+                pass
+
+    def _loop(self) -> None:
+        m = self.m
+        stop = m._stop_evt
+        while not stop.is_set():
+            with self._lock:
+                subs = [s for s in self._subs if not s.closed]
+                self._subs = subs  # prune retired subscribers
+            if not subs:
+                self._wake.wait(0.2)
+                self._wake.clear()
+                continue
+            now = time.monotonic()
+            hb_cache: Dict[str, bytes] = {}  # tenant → heartbeat, this tick
+            next_due = now + 1.0
+            for sub in subs:
+                if now + 1e-9 < sub.next_due:
+                    next_due = min(next_due, sub.next_due)
+                    continue
+                sub.next_due = now + sub.period_s
+                next_due = min(next_due, sub.next_due)
+                with m._lock:
+                    version = m._tenant_locked(sub.tenant).version
+                if sub.last_version == version:
+                    # no state change since this subscriber's last full
+                    # frame: tiny heartbeat, shared across the tick
+                    frame = hb_cache.get(sub.tenant)
+                    if frame is None:
+                        frame = pack_frame(m._heartbeat_msg(sub.tenant))
+                        hb_cache[sub.tenant] = frame
+                    self.heartbeats += 1
+                else:
+                    key = (sub.tenant, sub.by_rank)
+                    ent = self._cache.get(key)
+                    if ent is None or ent[0] != version:
+                        # THE fanout invariant: this encode happens once per
+                        # tenant/variant per update, not once per subscriber
+                        ent = (
+                            version,
+                            pack_frame(
+                                m._composite_msg(
+                                    by_rank=sub.by_rank, tenant=sub.tenant
+                                )
+                            ),
+                        )
+                        self._cache[key] = ent
+                        self.encodes += 1
+                    sub.last_version = ent[0]
+                    frame = ent[1]
+                self._offer(sub, frame)
+            delay = max(0.0, min(next_due - time.monotonic(), 1.0))
+            if delay:
+                self._wake.wait(delay)
+                self._wake.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -1337,72 +2028,306 @@ class MasterServer:
 _COMPOSITE_META_KEYS = ("sources", "snapshots", "deltas", "updated")
 
 
-def _composite_reply(msg: Optional[dict]) -> Tuple[Tally, dict]:
-    if not msg or msg.get("type") != "composite":
-        raise ProtocolError(f"expected composite reply, got {msg!r}")
-    meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
-    return Tally.from_obj(msg["tally"]), meta
+def _check_rejection(msg: Optional[dict]) -> None:
+    """Raise :class:`ServerRejected` if the server answered an error frame."""
+    if isinstance(msg, dict) and msg.get("type") == "error":
+        raise ServerRejected(
+            str(msg.get("error", "?")), str(msg.get("detail", ""))
+        )
+
+
+class StreamClient:
+    """The one authenticated client for every master read path.
+
+    One reusable connection, one place for TLS + token credentials, every
+    query the protocol offers::
+
+        with StreamClient("127.0.0.1:9000", token="s3cret", tls_ca="ca.pem") as c:
+            tally, meta = c.composite()
+            ranks, meta = c.ranks()
+            for tally, meta in c.subscribe(period_s=1.0):
+                ...
+
+    ``connect()`` is lazy (first request connects) and performs the
+    ``hello`` handshake: credentials are presented once per connection, and
+    the master's ``hello_ack`` reveals the bound ``tenant`` and
+    ``server_version``.  Requests transparently reconnect **once** when a
+    pooled connection turns out dead (master restarted between polls) —
+    fresh failures still raise, so an unreachable master is reported, not
+    retried forever.  Auth/quota rejections raise :class:`ServerRejected`
+    (a ``ProtocolError``), transport trouble raises ``OSError`` /
+    ``ProtocolError`` exactly like the old one-shot helpers.
+
+    Thread-safe for requests (one in flight at a time, guarded by a lock);
+    ``subscribe`` detaches its connection from the pool, so a subscription
+    and further queries can share one client.
+    """
+
+    def __init__(
+        self,
+        addr: Union[str, Tuple[str, int]],
+        timeout_s: float = 3.0,
+        token: Optional[str] = None,
+        tls_ca: Optional[str] = None,
+        tls_cert: Optional[str] = None,
+        tls_key: Optional[str] = None,
+        ssl_context: Optional[ssl.SSLContext] = None,
+        server_hostname: Optional[str] = None,
+        source: Optional[str] = None,
+    ):
+        self.addr = parse_addr(addr)
+        self.timeout_s = timeout_s
+        self.token = token
+        if ssl_context is None and (tls_ca or tls_cert):
+            ssl_context = client_ssl_context(
+                cafile=tls_ca, certfile=tls_cert, keyfile=tls_key
+            )
+        self.ssl_context = ssl_context
+        self.server_hostname = server_hostname or self.addr[0]
+        self.source = source or f"client:{socket.gethostname()}:{os.getpid()}"
+        #: tenant the master bound this client to (after the first connect)
+        self.tenant: Optional[str] = None
+        #: master's protocol version from ``hello_ack``
+        self.server_version: Optional[int] = None
+        self._sock: Optional[socket.socket] = None
+        self._lock = threading.Lock()
+
+    # -- lifecycle ----------------------------------------------------------
+    def connect(self) -> "StreamClient":
+        """Connect + authenticate now (requests do this lazily)."""
+        with self._lock:
+            self._connect_locked()
+        return self
+
+    def close(self) -> None:
+        with self._lock:
+            self._close_locked(say_bye=True)
+
+    def __enter__(self) -> "StreamClient":
+        return self.connect()  # surface auth/TLS errors at the `with`, not mid-loop
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def connected(self) -> bool:
+        return self._sock is not None
+
+    def _connect_locked(self) -> socket.socket:
+        if self._sock is not None:
+            return self._sock
+        s = socket.create_connection(self.addr, timeout=self.timeout_s)
+        try:
+            s.settimeout(self.timeout_s)
+            if self.ssl_context is not None:
+                s = self.ssl_context.wrap_socket(
+                    s, server_hostname=self.server_hostname
+                )
+            hello = {"type": "hello", "v": PROTOCOL_VERSION, "source": self.source}
+            if self.token is not None:
+                hello["token"] = self.token
+            s.sendall(pack_frame(hello))
+            ack = recv_frame(s)
+            _check_rejection(ack)
+            if ack is None:
+                raise ProtocolError("connection closed during handshake")
+            if ack.get("type") != "hello_ack":
+                raise ProtocolError(f"expected hello_ack, got {ack!r}")
+            self.server_version = int(ack.get("v", 1))
+            self.tenant = ack.get("tenant")
+        except BaseException:
+            try:
+                s.close()
+            except OSError:
+                pass
+            raise
+        self._sock = s
+        return s
+
+    def _close_locked(self, say_bye: bool = False) -> None:
+        s, self._sock = self._sock, None
+        if s is None:
+            return
+        if say_bye:
+            try:
+                s.sendall(pack_frame({"type": "bye", "source": self.source}))
+            except OSError:
+                pass
+        try:
+            s.close()
+        except OSError:
+            pass
+
+    # -- request/response ---------------------------------------------------
+    def _request(self, msg: dict, expect: str) -> dict:
+        with self._lock:
+            for attempt in (0, 1):
+                pooled = self._sock is not None
+                s = self._connect_locked()
+                try:
+                    s.sendall(pack_frame(msg))
+                    reply = recv_frame(s)
+                except (ProtocolError, OSError):
+                    self._close_locked()
+                    if not pooled or attempt:
+                        raise
+                    continue  # stale pooled conn: one transparent reconnect
+                if reply is None:
+                    self._close_locked()
+                    if not pooled or attempt:
+                        raise ProtocolError("connection closed by server")
+                    continue
+                _check_rejection(reply)
+                if reply.get("type") != expect:
+                    raise ProtocolError(f"expected {expect} reply, got {reply!r}")
+                return reply
+        raise AssertionError("unreachable")  # pragma: no cover
+
+    def ping(self) -> bool:
+        """Round-trip liveness check."""
+        self._request({"type": "ping", "v": PROTOCOL_VERSION}, "pong")
+        return True
+
+    def composite(self) -> Tuple[Tally, dict]:
+        """Fetch (composite tally, meta) for this client's tenant."""
+        msg = self._request({"type": "query", "v": PROTOCOL_VERSION}, "composite")
+        meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
+        return Tally.from_obj(msg["tally"]), meta
+
+    def ranks(self) -> Tuple[Dict[str, Tally], dict]:
+        """Fetch the per-rank breakdown.
+
+        Returns ``(ranks, meta)`` where ``ranks`` maps source id (the rank
+        identity, ``host:pid:rankN``) → its latest cumulative tally, and
+        ``meta`` carries the composite meta keys plus ``ts`` (source →
+        receipt wall clock).  Merging every value of ``ranks`` reproduces
+        the :meth:`composite` tally exactly — per-rank sums equal the
+        composite, API for API."""
+        msg = self._request({"type": "query_ranks", "v": PROTOCOL_VERSION}, "ranks")
+        meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
+        meta["ts"] = msg.get("ts", {})
+        return {src: Tally.from_obj(o) for src, o in msg["ranks"].items()}, meta
+
+    def groups(self) -> Tuple[Dict[str, Tally], dict]:
+        """Fetch the rollup-group breakdown.
+
+        Returns ``(groups, meta)`` where ``groups`` maps group id (e.g. a
+        hostname, or ``groupK`` rank buckets) → the aggregated tally of its
+        member sources, and ``meta`` carries the composite meta keys plus
+        ``rollup`` (False when the master runs without ``rollup_groups`` —
+        the map is then empty).  Merging every group reproduces the
+        composite, so >1k-rank trees can be read at node granularity
+        without shipping or merging per-rank tables."""
+        msg = self._request(
+            {"type": "query_groups", "v": PROTOCOL_VERSION}, "groups"
+        )
+        meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
+        meta["rollup"] = bool(msg.get("rollup", False))
+        return {g: Tally.from_obj(o) for g, o in msg["groups"].items()}, meta
+
+    def subscribe(
+        self, period_s: float = 1.0, by_rank: bool = False
+    ) -> Iterator[Tuple[Tally, dict]]:
+        """Subscribe: yields (composite, meta) as the master pushes.
+
+        The generator *detaches* the client's pooled connection and owns it
+        (the master's hub writes to it from then on); the client's next
+        request opens a fresh connection, so one ``StreamClient`` can serve
+        a subscription and queries side by side.  The generator ends on
+        master shutdown (clean EOF) and raises ``OSError`` /
+        ``ProtocolError`` on transport trouble.  Close the generator to
+        disconnect.
+
+        Idle periods arrive as tally-less heartbeats (the master only
+        re-serializes the composite when state changed); the generator then
+        re-yields the previous tally with ``meta["unchanged"] = True``, so
+        consumers always see a renderable composite per period.
+
+        With ``by_rank`` every full push also carries the per-source
+        breakdown, surfaced as ``meta["ranks"]`` (source → Tally);
+        heartbeats re-yield the cached breakdown like the cached composite.
+        """
+        with self._lock:
+            s = self._connect_locked()
+            self._sock = None  # detach: the subscription owns this socket
+        try:
+            s.settimeout(max(self.timeout_s, 2 * period_s))
+            s.sendall(
+                pack_frame(
+                    {
+                        "type": "subscribe",
+                        "v": PROTOCOL_VERSION,
+                        "period_s": period_s,
+                        "by_rank": by_rank,
+                    }
+                )
+            )
+            last_tally: Optional[Tally] = None
+            last_ranks: Optional[Dict[str, Tally]] = None
+            while True:
+                msg = recv_frame(s)
+                if msg is None:  # master stopped: end of stream
+                    return
+                _check_rejection(msg)  # e.g. subscriber quota reached
+                if msg.get("type") != "composite":
+                    raise ProtocolError(f"expected composite frame, got {msg!r}")
+                meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
+                if "tally" in msg:
+                    last_tally = Tally.from_obj(msg["tally"])
+                    if "ranks" in msg:
+                        last_ranks = {
+                            src: Tally.from_obj(o) for src, o in msg["ranks"].items()
+                        }
+                elif last_tally is None:
+                    raise ProtocolError("unchanged heartbeat before any composite")
+                else:
+                    meta["unchanged"] = True
+                if by_rank and last_ranks is not None:
+                    meta["ranks"] = last_ranks
+                yield last_tally, meta
+        finally:
+            try:
+                s.close()
+            except OSError:
+                pass
+
+
+# -- deprecated one-shot shims (the pre-StreamClient module-level API) ------
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old}() is deprecated; use {new}",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def query_composite(
-    addr: Union[str, Tuple[str, int]], timeout_s: float = 3.0
+    addr: Union[str, Tuple[str, int]], timeout_s: float = 3.0, **client_kw
 ) -> Tuple[Tally, dict]:
-    """One-shot request: connect to a master, fetch (composite, meta)."""
-    host, port = parse_addr(addr)
-    with socket.create_connection((host, port), timeout=timeout_s) as s:
-        s.settimeout(timeout_s)
-        s.sendall(pack_frame({"type": "query", "v": PROTOCOL_VERSION}))
-        msg = recv_frame(s)
-    return _composite_reply(msg)
+    """Deprecated shim: use :meth:`StreamClient.composite`."""
+    _warn_deprecated("query_composite", "StreamClient(addr).composite()")
+    with StreamClient(addr, timeout_s=timeout_s, **client_kw) as c:
+        return c.composite()
 
 
 def query_ranks(
-    addr: Union[str, Tuple[str, int]], timeout_s: float = 3.0
+    addr: Union[str, Tuple[str, int]], timeout_s: float = 3.0, **client_kw
 ) -> Tuple[Dict[str, Tally], dict]:
-    """One-shot request: fetch a master's per-rank breakdown.
-
-    Returns ``(ranks, meta)`` where ``ranks`` maps source id (the rank
-    identity, ``host:pid:rankN``) → its latest cumulative tally, and
-    ``meta`` carries the composite meta keys plus ``ts`` (source → receipt
-    wall clock).  Merging every value of ``ranks`` reproduces the
-    ``query_composite`` tally exactly — per-rank sums equal the composite,
-    API for API.
-    """
-    host, port = parse_addr(addr)
-    with socket.create_connection((host, port), timeout=timeout_s) as s:
-        s.settimeout(timeout_s)
-        s.sendall(pack_frame({"type": "query_ranks", "v": PROTOCOL_VERSION}))
-        msg = recv_frame(s)
-    if not msg or msg.get("type") != "ranks":
-        raise ProtocolError(f"expected ranks reply, got {msg!r}")
-    meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
-    meta["ts"] = msg.get("ts", {})
-    return {src: Tally.from_obj(o) for src, o in msg["ranks"].items()}, meta
+    """Deprecated shim: use :meth:`StreamClient.ranks`."""
+    _warn_deprecated("query_ranks", "StreamClient(addr).ranks()")
+    with StreamClient(addr, timeout_s=timeout_s, **client_kw) as c:
+        return c.ranks()
 
 
 def query_groups(
-    addr: Union[str, Tuple[str, int]], timeout_s: float = 3.0
+    addr: Union[str, Tuple[str, int]], timeout_s: float = 3.0, **client_kw
 ) -> Tuple[Dict[str, Tally], dict]:
-    """One-shot request: fetch a master's rollup-group breakdown.
-
-    Returns ``(groups, meta)`` where ``groups`` maps group id (e.g. a
-    hostname, or ``groupK`` rank buckets) → the aggregated tally of its
-    member sources, and ``meta`` carries the composite meta keys plus
-    ``rollup`` (False when the master runs without ``rollup_groups`` — the
-    map is then empty).  Merging every group reproduces the composite, so
-    >1k-rank trees can be read at node granularity without shipping or
-    merging per-rank tables.
-    """
-    host, port = parse_addr(addr)
-    with socket.create_connection((host, port), timeout=timeout_s) as s:
-        s.settimeout(timeout_s)
-        s.sendall(pack_frame({"type": "query_groups", "v": PROTOCOL_VERSION}))
-        msg = recv_frame(s)
-    if not msg or msg.get("type") != "groups":
-        raise ProtocolError(f"expected groups reply, got {msg!r}")
-    meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
-    meta["rollup"] = bool(msg.get("rollup", False))
-    return {g: Tally.from_obj(o) for g, o in msg["groups"].items()}, meta
+    """Deprecated shim: use :meth:`StreamClient.groups`."""
+    _warn_deprecated("query_groups", "StreamClient(addr).groups()")
+    with StreamClient(addr, timeout_s=timeout_s, **client_kw) as c:
+        return c.groups()
 
 
 def subscribe_composites(
@@ -1410,58 +2335,15 @@ def subscribe_composites(
     period_s: float = 1.0,
     timeout_s: float = 10.0,
     by_rank: bool = False,
+    **client_kw,
 ) -> Iterator[Tuple[Tally, dict]]:
-    """Subscribe to a master: yields (composite, meta) as the master pushes.
-
-    The generator owns the connection; it ends on master shutdown (clean
-    EOF) and raises ``OSError`` / ``ProtocolError`` on transport trouble —
-    exactly the errors ``query_composite`` raises, so callers can share
-    handling.  Close the generator to disconnect.
-
-    Idle periods arrive as tally-less heartbeats (the master only
-    re-serializes the composite when state changed); the generator then
-    re-yields the previous tally with ``meta["unchanged"] = True``, so
-    consumers always see a renderable composite per period.
-
-    With ``by_rank`` every full push also carries the per-source breakdown,
-    surfaced as ``meta["ranks"]`` (source → Tally); heartbeats re-yield the
-    cached breakdown like the cached composite.
-    """
-    host, port = parse_addr(addr)
-    with socket.create_connection((host, port), timeout=timeout_s) as s:
-        s.settimeout(max(timeout_s, 2 * period_s))
-        s.sendall(
-            pack_frame(
-                {
-                    "type": "subscribe",
-                    "v": PROTOCOL_VERSION,
-                    "period_s": period_s,
-                    "by_rank": by_rank,
-                }
-            )
-        )
-        last_tally: Optional[Tally] = None
-        last_ranks: Optional[Dict[str, Tally]] = None
-        while True:
-            msg = recv_frame(s)
-            if msg is None:  # master stopped: end of stream
-                return
-            if not msg or msg.get("type") != "composite":
-                raise ProtocolError(f"expected composite frame, got {msg!r}")
-            meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
-            if "tally" in msg:
-                last_tally = Tally.from_obj(msg["tally"])
-                if "ranks" in msg:
-                    last_ranks = {
-                        src: Tally.from_obj(o) for src, o in msg["ranks"].items()
-                    }
-            elif last_tally is None:
-                raise ProtocolError("unchanged heartbeat before any composite")
-            else:
-                meta["unchanged"] = True
-            if by_rank and last_ranks is not None:
-                meta["ranks"] = last_ranks
-            yield last_tally, meta
+    """Deprecated shim: use :meth:`StreamClient.subscribe`."""
+    _warn_deprecated("subscribe_composites", "StreamClient(addr).subscribe()")
+    c = StreamClient(addr, timeout_s=timeout_s, **client_kw)
+    try:
+        yield from c.subscribe(period_s=period_s, by_rank=by_rank)
+    finally:
+        c.close()
 
 
 def live_snapshot() -> Optional[Tally]:

@@ -111,6 +111,19 @@ class TraceConfig:
     #: process's in-process master forwards upstream — keeps rank identity
     #: visible at every level of the aggregation tree
     stream_ranks: bool = True
+    #: bearer token presented to the ``stream_to`` master (and, for an
+    #: in-process master, forwarded upstream) when the serving tier runs
+    #: with token auth — see core/stream.py ServeOptions.auth_tokens
+    stream_token: Optional[str] = None
+    #: CA bundle path pinning the upstream master's TLS certificate; sets
+    #: the client side of the hardened serving tier (None = plaintext)
+    stream_tls_ca: Optional[str] = None
+    #: full serving-tier configuration for the in-process master (TLS
+    #: cert/key, auth tokens, per-tenant quotas, hub queue depth...).  None
+    #: builds one from the legacy stream_* knobs above; when set, it wins
+    #: over them (it IS the knob set) and stream_token/stream_tls_ca are
+    #: still injected as upstream credentials if the options carry none.
+    serve_options: Optional[object] = None
     #: starting rung of the fidelity ladder (orthogonal to ``mode``, which
     #: selects *what* is traced): "full" | "sampled" | "tally-only" | "off".
     #: Switchable mid-run via Tracer.set_mode / repro.trace.set_mode.
@@ -351,21 +364,40 @@ class Tracer:
 
             self.online = OnlineAnalyzer(self.model, hostname=socket.gethostname())
         if self.cfg.serve_port is not None or self.cfg.stream_to is not None:
-            from .stream import MasterServer, SnapshotStreamer, default_source
+            import dataclasses as _dc
+
+            from .stream import (
+                MasterServer,
+                ServeOptions,
+                SnapshotStreamer,
+                client_ssl_context,
+                default_source,
+            )
 
             self._stream_source = default_source(self.cfg.rank)
             if self.cfg.serve_port is not None:
                 # In-process master: serves this rank's live tally (plus any
                 # children streaming to it); forwards upstream when stream_to
                 # is also set — this rank then acts as a local master.
+                opts = self.cfg.serve_options
+                if opts is None:
+                    opts = ServeOptions(
+                        fanout=self.cfg.stream_fanout,
+                        forward_delta=self.cfg.stream_delta,
+                        forward_resync_every=self.cfg.stream_resync_every,
+                        forward_ranks=self.cfg.stream_ranks,
+                    )
+                # stream_token/stream_tls_ca are upstream credentials: inject
+                # them unless the options already carry their own
+                if self.cfg.stream_token is not None and opts.forward_token is None:
+                    opts = _dc.replace(opts, forward_token=self.cfg.stream_token)
+                if self.cfg.stream_tls_ca is not None and opts.forward_tls_ca is None:
+                    opts = _dc.replace(opts, forward_tls_ca=self.cfg.stream_tls_ca)
                 self.server = MasterServer(
                     port=self.cfg.serve_port,
                     forward_to=self.cfg.stream_to,
                     forward_period_s=self.cfg.stream_period_s,
-                    fanout=self.cfg.stream_fanout,
-                    forward_delta=self.cfg.stream_delta,
-                    forward_resync_every=self.cfg.stream_resync_every,
-                    forward_ranks=self.cfg.stream_ranks,
+                    options=opts,
                 ).start()
             else:
                 self.streamer = SnapshotStreamer(
@@ -373,6 +405,12 @@ class Tracer:
                     source=self._stream_source,
                     delta=self.cfg.stream_delta,
                     resync_every=self.cfg.stream_resync_every,
+                    token=self.cfg.stream_token,
+                    ssl_context=(
+                        client_ssl_context(cafile=self.cfg.stream_tls_ca)
+                        if self.cfg.stream_tls_ca
+                        else None
+                    ),
                 )
         if self.cfg.adaptive is not None:
             from .adaptive import build_controller

@@ -55,6 +55,7 @@ class ServeEngine:
         partitioner: Optional[Partitioner] = None,
         adaptive=None,
         cluster_adaptive=None,
+        cluster_credentials: Optional[dict] = None,
     ):
         self.model = model
         self.cfg = cfg
@@ -74,8 +75,13 @@ class ServeEngine:
         # for straggling backends streaming into it.
         from repro.core.adaptive import build_cluster_controller, build_controller
 
+        # cluster_credentials: {"addr": ..., "token": ..., "tls_ca": ...}
+        # forwarded to the cluster controller so it can reach a hardened
+        # (token-auth / TLS) master instead of only the in-process one.
         self.adaptive = build_controller(adaptive)
-        self.cluster_adaptive = build_cluster_controller(cluster_adaptive)
+        self.cluster_adaptive = build_cluster_controller(
+            cluster_adaptive, **(cluster_credentials or {})
+        )
         self._rid = itertools.count()
         B = cfg.batch_slots
         shape = ShapeSpec("serve", "decode", cfg.cache_len, B)

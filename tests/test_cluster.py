@@ -19,13 +19,7 @@ from repro.core.adaptive import (
 )
 from repro.core.aggregate import merge_tallies
 from repro.core.plugins.tally import ApiStat, Tally, render_by_rank
-from repro.core.stream import (
-    MasterServer,
-    SnapshotStreamer,
-    query_composite,
-    query_ranks,
-    subscribe_composites,
-)
+from repro.core.stream import MasterServer, SnapshotStreamer, StreamClient
 
 
 def mk_tally(rank: int, calls: int = 10, ns: int = 1000) -> Tally:
@@ -150,18 +144,19 @@ def test_query_ranks_two_level_tree_matches_per_rank_truth():
                 assert s.push(t)
                 s.close()
                 truth[f"rank{r}"] = t
-            assert wait_until(
-                lambda: set(query_ranks(g.addr)[0]) == set(truth)
-                and all(
-                    query_ranks(g.addr)[0][k].to_obj() == truth[k].to_obj()
-                    for k in truth
+            with StreamClient(g.addr) as c:
+                assert wait_until(
+                    lambda: set(c.ranks()[0]) == set(truth)
+                    and all(
+                        c.ranks()[0][k].to_obj() == truth[k].to_obj()
+                        for k in truth
+                    )
                 )
-            )
-            ranks, meta = query_ranks(g.addr)
-            assert meta["sources"] == 4
-            assert set(meta["ts"]) == set(truth)
-            # per-rank sums equal the merged composite, API for API
-            comp, _ = query_composite(g.addr)
+                ranks, meta = c.ranks()
+                assert meta["sources"] == 4
+                assert set(meta["ts"]) == set(truth)
+                # per-rank sums equal the merged composite, API for API
+                comp, _ = c.composite()
             merged, _ = merge_tallies([Tally().merge(t) for t in ranks.values()])
             assert totals(merged) == totals(comp)
             assert merged.hostnames == comp.hostnames
@@ -169,7 +164,8 @@ def test_query_ranks_two_level_tree_matches_per_rank_truth():
 
 def test_query_ranks_empty_master():
     with MasterServer(port=0) as m:
-        ranks, meta = query_ranks(m.addr)
+        with StreamClient(m.addr) as c:
+            ranks, meta = c.ranks()
         assert ranks == {} and meta["sources"] == 0
 
 
@@ -178,10 +174,11 @@ def test_subscribe_by_rank_pushes_breakdown():
         m.submit("r0", mk_tally(0, calls=3))
         m.submit("r1", mk_tally(1, calls=7))
         got = []
-        for t, meta in subscribe_composites(m.addr, period_s=0.05, by_rank=True):
-            got.append((t, meta))
-            if len(got) >= 2:
-                break
+        with StreamClient(m.addr) as c:
+            for t, meta in c.subscribe(period_s=0.05, by_rank=True):
+                got.append((t, meta))
+                if len(got) >= 2:
+                    break
         ranks = got[0][1]["ranks"]
         assert set(ranks) == {"r0", "r1"}
         assert ranks["r0"].apis[("ust_repro", "train_step")].calls == 3

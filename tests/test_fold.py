@@ -440,12 +440,13 @@ def test_rollup_groups_by_host_and_bucket():
 
 
 def test_query_groups_over_tcp():
-    from repro.core.stream import MasterServer, query_groups
+    from repro.core.stream import MasterServer, StreamClient
 
     with MasterServer(port=0, rollup_groups="host") as m:
         m.submit("nodeA:1:rank0", _mk_tally(0))
         m.submit("nodeB:2:rank1", _mk_tally(1))
-        groups, meta = query_groups(m.addr)
+        with StreamClient(m.addr) as c:
+            groups, meta = c.groups()
         assert meta["rollup"] and set(groups) == {"nodeA", "nodeB"}
         merged = Tally()
         for t in groups.values():
@@ -453,7 +454,8 @@ def test_query_groups_over_tcp():
         assert canon(merged) == canon(m.composite())
     with MasterServer(port=0) as m2:  # rollup off: empty map, flagged
         m2.submit("x:1:rank0", _mk_tally(0))
-        groups, meta = query_groups(m2.addr)
+        with StreamClient(m2.addr) as c:
+            groups, meta = c.groups()
         assert not meta["rollup"] and groups == {}
 
 

@@ -17,9 +17,9 @@ from repro.core.stream import (
     MasterServer,
     ProtocolError,
     SnapshotStreamer,
+    StreamClient,
     pack_frame,
     parse_addr,
-    query_composite,
     recv_frame,
 )
 
@@ -47,6 +47,12 @@ def totals(t: Tally):
         for key, st in table.items():
             out[(label,) + key] = (st.calls, st.total_ns)
     return out
+
+
+def fetch_composite(addr, timeout_s=3.0):
+    """One-shot composite read via the unified client."""
+    with StreamClient(addr, timeout_s=timeout_s) as c:
+        return c.composite()
 
 
 def wait_until(pred, timeout_s=5.0, period_s=0.02):
@@ -214,7 +220,7 @@ def test_streamer_switches_to_deltas_after_hello_ack():
             assert s.push(t)
         assert s.delta_frames >= 3  # at most one more full before the ack
         assert wait_until(
-            lambda: query_composite(m.addr)[0].apis[("ust_repro", "train_step")].calls == 9
+            lambda: fetch_composite(m.addr)[0].apis[("ust_repro", "train_step")].calls == 9
         )
         assert m.deltas >= 3
         s.close()
@@ -233,7 +239,7 @@ def test_streamer_resync_every_forces_full_frames():
         assert s.full_frames >= 3
         assert s.delta_frames >= 4
         assert wait_until(
-            lambda: query_composite(m.addr)[0].apis[("ust_repro", "train_step")].calls == 7
+            lambda: fetch_composite(m.addr)[0].apis[("ust_repro", "train_step")].calls == 7
         )
         s.close()
 
@@ -311,15 +317,14 @@ def test_no_delta_mode_always_full():
 
 
 def test_subscribe_composites_pushes_updates():
-    from repro.core.stream import subscribe_composites
-
     with MasterServer(port=0) as m:
         m.submit("r0", mk_tally(0))
         got = []
-        for t, meta in subscribe_composites(m.addr, period_s=0.05):
-            got.append((t, meta))
-            if len(got) >= 3:
-                break
+        with StreamClient(m.addr) as c:
+            for t, meta in c.subscribe(period_s=0.05):
+                got.append((t, meta))
+                if len(got) >= 3:
+                    break
         assert all(
             t.apis[("ust_repro", "train_step")].calls == 10 for t, _ in got
         )
@@ -344,7 +349,7 @@ def test_forward_delta_disabled_sends_full_frames_upstream():
             assert fwd.delta is False
             assert fwd.full_frames >= 3 and fwd.delta_frames == 0
             assert wait_until(
-                lambda: query_composite(g.addr)[0]
+                lambda: fetch_composite(g.addr)[0]
                 .apis[("ust_repro", "train_step")]
                 .calls
                 == 8
@@ -373,7 +378,7 @@ def test_master_merge_matches_combine_aggregates(tmp_path):
             assert s.push(mk_tally(r))
             s.close()
         assert wait_until(lambda: m.stats()["sources"] == n)
-        live, meta = query_composite(m.addr)
+        live, meta = fetch_composite(m.addr)
 
     assert meta["sources"] == n
     assert totals(live) == totals(offline)
@@ -390,7 +395,7 @@ def test_master_latest_snapshot_wins():
         assert s.push(mk_tally(0, calls=9))
         s.close()
         assert wait_until(lambda: m.stats()["snapshots"] == 2)
-        t, _ = query_composite(m.addr)
+        t, _ = fetch_composite(m.addr)
     assert t.apis[("ust_repro", "train_step")].calls == 9
 
 
@@ -422,10 +427,10 @@ def test_forward_tree_local_to_global():
             expect = totals(l.composite())
             assert wait_until(
                 lambda: g.stats()["sources"] == 4
-                and totals(query_composite(g.addr)[0]) == expect
+                and totals(fetch_composite(g.addr)[0]) == expect
             )
             # per-rank identities pass through the hop
-            _, meta = query_composite(g.addr)
+            _, meta = fetch_composite(g.addr)
             assert meta["sources"] == 4
 
 
@@ -444,9 +449,9 @@ def test_forward_tree_composite_mode_single_source():
             expect = totals(l.composite())
             assert wait_until(
                 lambda: g.stats()["sources"] == 1
-                and totals(query_composite(g.addr)[0]) == expect
+                and totals(fetch_composite(g.addr)[0]) == expect
             )
-            _, meta = query_composite(g.addr)
+            _, meta = fetch_composite(g.addr)
             assert meta["sources"] == 1
 
 
@@ -466,7 +471,7 @@ def test_forward_survives_parent_outage():
         assert not local.flush()  # parent down: push fails, trigger survives
         with MasterServer(port=parent_port) as parent:
             assert wait_until(lambda: parent.stats()["sources"] == 1)
-            t, _ = query_composite(parent.addr)
+            t, _ = fetch_composite(parent.addr)
             assert t.apis[("ust_repro", "train_step")].calls == 10
     finally:
         local.stop()
@@ -485,7 +490,7 @@ def test_master_new_session_same_source_not_stale():
         assert s2.push(mk_tally(0, calls=9))
         s2.close()
         assert wait_until(lambda: m.stats()["snapshots"] == 4)
-        t, _ = query_composite(m.addr)
+        t, _ = fetch_composite(m.addr)
     assert t.apis[("ust_repro", "train_step")].calls == 9
 
 
@@ -502,7 +507,7 @@ def test_streamer_drops_without_master_then_recovers():
     with MasterServer(port=port) as m:
         assert wait_until(lambda: s.push(mk_tally(0, calls=7)), timeout_s=2.0)
         assert wait_until(lambda: m.stats()["sources"] == 1)
-        t, _ = query_composite(m.addr)
+        t, _ = fetch_composite(m.addr)
         assert t.apis[("ust_repro", "train_step")].calls == 7
     s.close()
 
@@ -574,7 +579,7 @@ def test_tracer_streams_final_tally_matching_offline(tmp_path):
                     sp.outs["grad_norm"] = 1.0
                 time.sleep(0.03)
         assert tr.handle.streamed >= 1  # final push is unconditional
-        live, _ = query_composite(m.addr)
+        live, _ = fetch_composite(m.addr)
     offline = tally_trace(d)
     assert totals(live) == totals(offline)
     assert live.hostnames == offline.hostnames
@@ -598,7 +603,7 @@ def test_tracer_serve_port_mid_run_attach(tmp_path):
                 sp.outs["loss"] = float(f(x))
                 sp.outs["grad_norm"] = 1.0
         assert wait_until(
-            lambda: query_composite(f"127.0.0.1:{tr.server.port}")[0].apis.get(key)
+            lambda: fetch_composite(f"127.0.0.1:{tr.server.port}")[0].apis.get(key)
             is not None
         )
         assert live_snapshot() is not None  # serve-layer hook sees it too

@@ -55,7 +55,23 @@ METRICS = [
     ("BENCH_analysis.json", "parallel.speedup_max", "analysis jobs-sweep max x", True),
     ("BENCH_analysis.json", "parallel.sidecar_speedup", "analysis sidecar x", True),
     ("BENCH_smoke.json", "stream_bw.ratio", "stream delta reduction x", True),
+    # BENCH_stream.json superseded BENCH_stream_bw.json when the fanout
+    # sweep landed; the old name is kept one transition cycle so the first
+    # run after the rename still prints a delta against prior artifacts.
     ("BENCH_stream_bw.json", "ratio", "stream_bw standalone x", True),
+    ("BENCH_stream.json", "ratio", "stream_bw standalone x", True),
+    (
+        "BENCH_stream.json",
+        "fanout.encode_flatness",
+        "hub fanout encode flatness (≈1)",
+        False,
+    ),
+    (
+        "BENCH_stream.json",
+        "fanout.bytes_per_delta_per_sub",
+        "hub fanout B/delta/sub",
+        False,
+    ),
     ("BENCH_collection.json", "enabled_net_ns", "collection enabled net ns", False),
     ("BENCH_collection.json", "pair_net_ns_per_event", "collection pair net ns/ev", False),
     ("BENCH_collection.json", "speedup_pair", "collection pair speedup x", True),

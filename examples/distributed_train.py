@@ -329,6 +329,438 @@ def run_live(args) -> int:
     return 0 if ok else 1
 
 
+# ---------------------------------------------------------------------------
+# --chaos: closed-loop remediation demo
+#   fault injection → cluster flags → escalation ladder → checkpoint-and-drain
+#   → evict + re-mesh → survivors finish the evicted rank's work
+# ---------------------------------------------------------------------------
+
+
+def chaos_worker(rank, out_dir, addr, quota, ctl_dir, fault, seed):
+    """One chaos rank: traced step loop with a deterministic FaultInjector,
+    periodic (async) checkpoints of its progress, and a control-file channel
+    the driver's remediation hooks use to escalate / drain it.
+
+    Commands (one per line, appended to ``ctl/rank<r>.cmd``):
+      * ``escalate``  — climb the fidelity ladder (sampled → full);
+      * ``drain``     — commit a durable checkpoint, ack, exit cleanly;
+      * ``extra:N``   — the re-mesh dealt this rank N orphaned steps;
+      * ``finish``    — run is over, exit.
+
+    A rank that reaches its quota idles on cheap heartbeat steps (so
+    cross-rank windows keep existing — a straggler only lags relative to
+    *active* peers) until the driver says ``finish`` or deals it more work.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import Checkpointer
+    from repro.core import traced_jit, train_step_span
+    from repro.core.faults import FaultInjector, parse_fault_specs
+
+    base_step_s = 0.04
+    inj = FaultInjector(parse_fault_specs(fault) if fault else [], rank=rank, seed=seed)
+    ck = Checkpointer(os.path.join(out_dir, "ckpt"), keep=2)
+    cmd_path = os.path.join(ctl_dir, f"rank{rank}.cmd")
+    ack_path = os.path.join(ctl_dir, f"rank{rank}.ack")
+
+    def ack(line):
+        with open(ack_path, "a") as fh:
+            fh.write(line + "\n")
+
+    f = traced_jit(lambda x: (x * x).sum(), name="square_sum")
+    x = jnp.arange(64.0) + rank
+    done, target, cmds_seen, idle_acked = 0, quota, 0, -1
+    cfg = TraceConfig(
+        out_dir=out_dir,
+        mode="default",
+        fidelity="sampled",  # headroom for the escalate rung (sampled → full)
+        sampling_interval=2,  # short run: keep the straggler visible when sampled
+        rank=rank,
+        aggregate_only=True,
+        stream_to=addr,
+        stream_period_s=0.1,
+    )
+    with Tracer(cfg) as tr:
+        while True:
+            try:
+                with open(cmd_path) as fh:
+                    lines = [ln.strip() for ln in fh if ln.strip()]
+            except OSError:
+                lines = []
+            finish = False
+            for ln in lines[cmds_seen:]:
+                cmds_seen += 1
+                if ln == "escalate":
+                    prev = tr.set_mode("full")
+                    ack(f"escalated:{prev}->full")
+                elif ln == "drain":
+                    ck.wait()
+                    ck.save(done, {"w": np.float32(done)}, extra={"steps_done": done})
+                    ack(f"drained:{done}")
+                    return  # quiesced: Tracer exit flushes the final aggregate
+                elif ln.startswith("extra:"):
+                    target += int(ln.split(":", 1)[1])
+                    ack(f"extra:{target}")
+                elif ln == "finish":
+                    finish = True
+            if finish:
+                break
+            if done >= target:
+                if idle_acked != target:
+                    idle_acked = target
+                    ack(f"idle:{done}")
+                # heartbeat step: keeps this rank in the cross-rank window
+                # without advancing its work counter
+                with train_step_span(done, 1, 16) as sp:
+                    sp.outs["loss"] = 0.0
+                    sp.outs["grad_norm"] = 0.0
+                time.sleep(base_step_s)
+                continue
+            with train_step_span(done, 1, 16) as sp:
+                sp.outs["loss"] = float(f(x))
+                sp.outs["grad_norm"] = 1.0
+                time.sleep(inj.sleep_s(done, base_step_s))  # SLOWDOWN fault
+            if inj.should_hang(done):
+                ack(f"hung:{done}")
+                time.sleep(600)  # HANG fault: stuck until evicted
+            if inj.should_die(done):
+                os._exit(17)  # KILL fault: no cleanup, no final aggregate
+            done += 1
+            if done % 5 == 0:
+                ck.save_async(done, {"w": np.float32(done)}, extra={"steps_done": done})
+            time.sleep(base_step_s)
+        ck.wait()
+        ck.save(done, {"w": np.float32(done)}, extra={"steps_done": done})
+        ack(f"done:{done}")
+    print(f"[rank {rank}] finished {done} steps", flush=True)
+
+
+def run_chaos(args) -> int:
+    import json
+    import re
+
+    from repro.checkpoint import latest_checkpoint
+    from repro.core import (
+        RUNG_DRAIN,
+        RUNG_ESCALATE,
+        RUNG_EVICT,
+        ClusterAdaptiveController,
+        MasterServer,
+        RemediationEngine,
+        RemediationHooks,
+        SickHostPolicy,
+        StragglerRankPolicy,
+    )
+    from repro.core.aggregate import combine_aggregates, find_aggregates
+    from repro.core.babeltrace import CTFSource
+    from repro.launch.mesh import plan_eviction
+
+    nranks, quota = args.chaos_ranks, args.chaos_steps
+    root = tempfile.mkdtemp(prefix="thapi_chaos_")
+    ctl = os.path.join(root, "ctl")
+    os.makedirs(ctl)
+    master = MasterServer(port=0).start()
+    print(
+        f"[chaos] master {master.addr}; {nranks} ranks × {quota} steps; "
+        f"fault={args.inject_fault or 'none'}"
+        + (" (dry-run: advisory only)" if args.chaos_dry_run else "")
+    )
+
+    procs = {}
+    for r in range(nranks):
+        open(os.path.join(ctl, f"rank{r}.cmd"), "w").close()
+        cmd = [
+            sys.executable,
+            os.path.abspath(__file__),
+            "--chaos-worker", str(r),
+            "--chaos-out", os.path.join(root, f"r{r}"),
+            "--chaos-addr", master.addr,
+            "--chaos-ctl", ctl,
+            "--chaos-quota", str(quota),
+            "--chaos-seed", str(args.chaos_seed),
+        ]
+        if args.inject_fault:
+            cmd += ["--chaos-fault", args.inject_fault]
+        procs[r] = subprocess.Popen(cmd, env=dict(os.environ))
+
+    def _rank_of(source):
+        m = re.search(r"rank(\d+)$", source)
+        return int(m.group(1)) if m else -1
+
+    def _send(r, line):
+        with open(os.path.join(ctl, f"rank{r}.cmd"), "a") as fh:
+            fh.write(line + "\n")
+
+    def _acks(r):
+        try:
+            with open(os.path.join(ctl, f"rank{r}.ack")) as fh:
+                return [ln.strip() for ln in fh if ln.strip()]
+        except OSError:
+            return []
+
+    def _wait_ack(r, prefix, timeout=10.0):
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            for ln in _acks(r):
+                if ln.startswith(prefix):
+                    return ln
+            if procs[r].poll() is not None:
+                return None
+            time.sleep(0.05)
+        return None
+
+    # -- remediation hooks: the ladder's rungs, driver-side -----------------------
+    drained_steps = {}
+    evicted = []
+    extras = {r: 0 for r in range(nranks)}
+
+    def hk_escalate(target, detail):
+        _send(_rank_of(target), "escalate")
+        return True  # advisory write; the worker applies it at a step boundary
+
+    def hk_drain(target, detail):
+        r = _rank_of(target)
+        if procs[r].poll() is None and r not in hung:
+            _send(r, "drain")
+            ln = _wait_ack(r, "drained:")
+            if ln is not None:
+                drained_steps[r] = int(ln.split(":")[1])
+                return True
+        # dead / unresponsive rank: "drain" means recovering its last durable
+        # checkpoint — that is the state the survivors resume from
+        path = latest_checkpoint(os.path.join(root, f"r{r}", "ckpt"))
+        if path is None:
+            drained_steps[r] = 0
+            return True
+        with open(os.path.join(path, "manifest.json")) as fh:
+            drained_steps[r] = int(json.load(fh)["extra"]["steps_done"])
+        return True
+
+    def hk_evict(target, detail):
+        r = _rank_of(target)
+        if procs[r].poll() is None:
+            procs[r].terminate()
+            try:
+                procs[r].wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                procs[r].kill()
+                procs[r].wait()
+        evicted.append(r)
+        plan = plan_eviction(nranks, evicted)
+        remaining = quota - drained_steps.get(r, 0)
+        shares = plan.reassign({r: remaining})
+        for s, extra in shares.items():
+            if extra:
+                extras[s] += extra
+                _send(s, f"extra:{extra}")
+        print(
+            f"[chaos] re-mesh: survivors {plan.survivors}, dense ranks "
+            f"{plan.dense_rank}; {remaining} orphaned steps dealt {dict(shares)}"
+        )
+        return True
+
+    actions = []
+    engine = RemediationEngine(
+        RemediationHooks(escalate=hk_escalate, drain=hk_drain, evict=hk_evict),
+        cooldown_s=0.4,
+        escalate_after=2,
+        healthy_windows=4,
+        dry_run=args.chaos_dry_run,
+        max_evictions=1,
+        on_action=lambda a: (actions.append(a), print(f"[chaos] {a}", flush=True)),
+    )
+    straggler = StragglerRankPolicy(
+        "ust_repro", "train_step", ratio=2.5, metric="latency", patience=1
+    )
+    sick = SickHostPolicy(patience=2)
+    monitor = ClusterAdaptiveController(
+        [straggler, sick],
+        master=master,
+        period_s=0.3,
+        on_flag=engine.ingest_flag,
+        on_healthy=engine.observe_healthy,
+    )
+
+    rank_source = {}  # rank id → stream source id, learned from the master
+    hung = set()
+    ok = True
+    fault_kind = (args.inject_fault or "").split(":", 1)[0]
+
+    driver_dir = os.path.join(root, "driver")
+    with Tracer(TraceConfig(out_dir=driver_dir, mode="default", online=True)) as drv:
+        engine.attach(drv)
+        monitor.attach(drv)
+        deadline = time.time() + args.chaos_timeout
+        while time.time() < deadline:
+            monitor.tick()
+            for src in list(master.ranks(copy=False)):
+                rank_source.setdefault(_rank_of(src), src)
+            for r in range(nranks):
+                for ln in _acks(r):
+                    if ln.startswith("hung:"):
+                        hung.add(r)
+            # Policies flag once, on the excursion's edge; the ladder wants
+            # the flag re-asserted every tick while the condition holds —
+            # bridge level → edge here.  Dead and drained-but-not-evicted
+            # ranks are driver-level evidence the policies can't see.
+            for src, ratio in straggler.flagged.items():
+                engine.ingest_flag(src, "straggler", f"{ratio:.2f}x median latency")
+            for src, ev in sick.flagged.items():
+                engine.ingest_flag(src, "sick-host", ev)
+            for r, p in procs.items():
+                src = rank_source.get(r, f"rank{r}")
+                if r not in evicted and p.poll() not in (None, 0):
+                    engine.ingest_flag(src, "dead", f"exit {p.poll()}")
+                if r in hung and r not in evicted:
+                    engine.ingest_flag(src, "hung", "no step progress")
+                if r in drained_steps and r not in evicted and not args.chaos_dry_run:
+                    engine.ingest_flag(src, "drained", "awaiting eviction")
+            engine.tick()
+            # done when every non-evicted rank is idle at its (possibly
+            # re-meshed) target and the injected fault has been dealt with
+            settled = True
+            for r in range(nranks):
+                if r in evicted:
+                    continue
+                if procs[r].poll() not in (None, 0):
+                    # dead but not evicted: unresolved — except in dry-run,
+                    # where the ladder only advises and never evicts
+                    if not args.chaos_dry_run:
+                        settled = False
+                    continue
+                if r in hung:
+                    continue  # can't make progress; eviction is the exit
+                want = quota + extras[r]
+                idle = [ln for ln in _acks(r) if ln.startswith("idle:")]
+                if not (idle and int(idle[-1].split(":")[1]) >= want):
+                    settled = False
+            if fault_kind and not args.chaos_dry_run and not evicted:
+                settled = False
+            if fault_kind and args.chaos_dry_run and not any(
+                a.action == RUNG_EVICT and a.dry_run for a in actions
+            ):
+                settled = False
+            if settled:
+                break
+            time.sleep(0.1)
+        else:
+            print("[chaos] TIMEOUT waiting for the run to settle", file=sys.stderr)
+            ok = False
+        for r in range(nranks):
+            if r not in evicted and procs[r].poll() is None:
+                if r in hung:
+                    procs[r].terminate()  # never reads the control file again
+                else:
+                    _send(r, "finish")
+        for r, p in procs.items():
+            if r not in evicted:
+                try:
+                    p.wait(timeout=30)
+                except subprocess.TimeoutExpired:
+                    p.kill()
+                    p.wait()
+                    ok = False
+                    print(f"[chaos] FAIL: rank {r} did not exit on finish",
+                          file=sys.stderr)
+
+    # -- verification -------------------------------------------------------------
+    # (1) work conservation: survivors' completed steps + the evicted rank's
+    # drained progress account for every planned step, re-mesh included
+    completed = {}
+    for r in range(nranks):
+        if r in evicted:
+            completed[r] = drained_steps.get(r, 0)
+        else:
+            done = [ln for ln in _acks(r) if ln.startswith("done:")]
+            completed[r] = int(done[-1].split(":")[1]) if done else 0
+    total, planned = sum(completed.values()), nranks * quota
+    if args.chaos_dry_run and fault_kind in ("kill", "hang"):
+        # advisory-only mode never recovers a dead rank's work — by design
+        print(f"[chaos] dry-run with {fault_kind}: {total}/{planned} steps "
+              f"(lost work is the point: nothing was remediated)")
+    elif total == planned:
+        print(f"[chaos] OK: {total} steps completed = {nranks} ranks × {quota} planned")
+    else:
+        print(f"[chaos] FAIL: {total} steps completed != {planned} planned "
+              f"(per-rank {completed})", file=sys.stderr)
+        ok = False
+
+    # (2) live per-rank state matches the offline fold of the same ranks'
+    # aggregates (a killed rank never flushes one — noted and skipped);
+    # final frames flush at worker exit, so give them a moment to land
+    for r in range(nranks):
+        aggs = find_aggregates(os.path.join(root, f"r{r}"))
+        src = rank_source.get(r)
+        if not aggs:
+            print(f"[chaos] rank {r}: no offline aggregate (died mid-run), skipped")
+            continue
+        if src is None:
+            print(f"[chaos] FAIL: rank {r} has an aggregate but no live state",
+                  file=sys.stderr)
+            ok = False
+            continue
+        want = _api_totals(combine_aggregates(aggs))
+        deadline = time.time() + 5.0
+        match = False
+        while time.time() < deadline and not match:
+            live = master.ranks().get(src)
+            match = live is not None and _api_totals(live) == want
+            if not match:
+                time.sleep(0.1)
+        if match:
+            print(f"[chaos] OK: rank {r} live state == offline aggregate")
+        else:
+            print(f"[chaos] FAIL: rank {r} live state != offline aggregate",
+                  file=sys.stderr)
+            ok = False
+
+    # (3) every remediation decision is a trace event, and the ladder held
+    # its invariants (drain strictly before evict, dry-run touches nothing)
+    trace_events = [
+        ev for ev in CTFSource(driver_dir) if ev.name == "ust_repro:remediation"
+    ]
+    if len(trace_events) == len(actions) and (not fault_kind or actions):
+        print(f"[chaos] OK: {len(actions)} remediation decisions, every one traced")
+    else:
+        print(f"[chaos] FAIL: {len(actions)} decisions but {len(trace_events)} "
+              f"trace events", file=sys.stderr)
+        ok = False
+    if fault_kind:
+        names = [a.action for a in actions]
+        if args.chaos_dry_run:
+            if all(a.dry_run for a in actions) and not evicted and all(
+                not _acks(r) or not any(ln.startswith(("escalated", "drained"))
+                                        for ln in _acks(r))
+                for r in range(nranks)
+            ):
+                print("[chaos] OK: dry-run — full ladder advised, nothing touched")
+            else:
+                print("[chaos] FAIL: dry-run had side effects", file=sys.stderr)
+                ok = False
+        else:
+            want_rungs = [RUNG_ESCALATE, RUNG_DRAIN, RUNG_EVICT]
+            if all(w in names for w in want_rungs) and (
+                names.index(RUNG_DRAIN) < names.index(RUNG_EVICT)
+            ):
+                print("[chaos] OK: ladder walked "
+                      f"{' → '.join(w for w in want_rungs)} (drain before evict)")
+            else:
+                print(f"[chaos] FAIL: ladder order wrong: {names}", file=sys.stderr)
+                ok = False
+            if len(evicted) == 1 and engine.evicted:
+                print(f"[chaos] OK: rank {evicted[0]} evicted, "
+                      f"{quota - drained_steps.get(evicted[0], 0)} steps re-dealt")
+            else:
+                print(f"[chaos] FAIL: eviction did not happen: {evicted}",
+                      file=sys.stderr)
+                ok = False
+    master.stop()
+    print("\n[chaos] remediation log:")
+    print(engine.render_log() or "  (no actions)")
+    return 0 if ok else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
@@ -363,8 +795,49 @@ def main():
     ap.add_argument(
         "--live-worker-seconds", type=float, default=0.0, help=argparse.SUPPRESS
     )
+    ap.add_argument(
+        "--chaos",
+        action="store_true",
+        help="closed-loop remediation demo: fault injection → escalation "
+        "ladder → checkpoint-and-drain → evict + re-mesh",
+    )
+    ap.add_argument(
+        "--inject-fault",
+        default=None,
+        help="fault spec(s) for --chaos, e.g. 'slowdown:rank=1,after=5,factor=8' "
+        "or 'kill:rank=1,after=8' (';'-separated for several)",
+    )
+    ap.add_argument("--chaos-ranks", type=int, default=3)
+    ap.add_argument("--chaos-steps", type=int, default=25)
+    ap.add_argument(
+        "--chaos-dry-run",
+        action="store_true",
+        help="remediation engine advises only: every decision is traced, no "
+        "hook runs, nothing is drained or evicted",
+    )
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-timeout", type=float, default=120.0)
+    ap.add_argument("--chaos-worker", type=int, default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--chaos-out", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--chaos-addr", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--chaos-ctl", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--chaos-quota", type=int, default=0, help=argparse.SUPPRESS)
+    ap.add_argument("--chaos-fault", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
 
+    if args.chaos_worker is not None:
+        chaos_worker(
+            args.chaos_worker,
+            args.chaos_out,
+            args.chaos_addr,
+            args.chaos_quota,
+            args.chaos_ctl,
+            args.chaos_fault,
+            args.chaos_seed,
+        )
+        return
+    if args.chaos:
+        sys.exit(run_chaos(args))
     if args.live_worker is not None:
         live_worker(
             args.live_worker,

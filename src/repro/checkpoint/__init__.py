@@ -2,4 +2,5 @@ from .checkpointer import (  # noqa: F401
     Checkpointer,
     CheckpointManifest,
     latest_checkpoint,
+    list_checkpoints,
 )

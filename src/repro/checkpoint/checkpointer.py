@@ -61,18 +61,48 @@ def _flatten_with_keys(tree) -> List[Tuple[str, Any]]:
     return out
 
 
-def latest_checkpoint(root: str) -> Optional[str]:
+def _manifest_ok(path: str) -> bool:
+    """Cheap structural validation of a committed checkpoint directory.
+
+    Parses the manifest and checks every referenced leaf file exists with a
+    plausible size (at least the payload bytes — the .npy header adds more).
+    Full CRC validation stays in :meth:`Checkpointer.restore`; this is the
+    fast filter that keeps a corrupted or truncated directory from being
+    *selected* as the restore point in the first place.
+    """
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            man = CheckpointManifest.from_json(json.load(f))
+        for leaf in man.leaves:
+            fp = os.path.join(path, leaf["file"])
+            if not os.path.isfile(fp) or os.path.getsize(fp) < int(leaf["nbytes"]):
+                return False
+        return True
+    except (OSError, ValueError, KeyError, TypeError):
+        return False
+
+
+def list_checkpoints(root: str) -> List[str]:
+    """Structurally-valid checkpoint directories under ``root``, newest first.
+
+    Damaged directories (unparseable manifest, missing or truncated leaf
+    files) are skipped — the fall-back chain for restore-after-fault.
+    """
     if not os.path.isdir(root):
-        return None
-    best = None
-    best_step = -1
+        return []
+    steps = []
     for name in os.listdir(root):
         m = _STEP_RE.match(name)
-        if m and os.path.exists(os.path.join(root, name, "manifest.json")):
-            s = int(m.group(1))
-            if s > best_step:
-                best_step, best = s, os.path.join(root, name)
-    return best
+        if m:
+            steps.append((int(m.group(1)), os.path.join(root, name)))
+    steps.sort(reverse=True)
+    return [path for _, path in steps if _manifest_ok(path)]
+
+
+def latest_checkpoint(root: str) -> Optional[str]:
+    """Newest structurally-valid checkpoint, or None (damaged dirs skipped)."""
+    ckpts = list_checkpoints(root)
+    return ckpts[0] if ckpts else None
 
 
 class Checkpointer:
@@ -117,14 +147,25 @@ class Checkpointer:
         return final
 
     def save(self, step: int, tree, extra: Optional[dict] = None) -> str:
-        """Synchronous save. ``tree`` may hold jax or numpy arrays."""
+        """Synchronous save. ``tree`` may hold jax or numpy arrays.
+
+        Joins any pending async commit first — a background failure left by
+        an earlier :meth:`save_async` surfaces here, not silently after a
+        sync save that appeared to succeed.
+        """
+        self.wait()
         host = [(k, np.asarray(v)) for k, v in _flatten_with_keys(tree)]
         nbytes = sum(a.nbytes for _, a in host)
         with checkpoint_save_span(step, self.root, nbytes):
             return self._write(step, host, extra or {})
 
     def save_async(self, step: int, tree, extra: Optional[dict] = None) -> None:
-        """Snapshot to host, commit in the background. Join via wait()."""
+        """Snapshot to host, commit in the background. Join via wait().
+
+        A failed background commit is never swallowed: it re-raises from the
+        next ``wait()`` *or* the next ``save``/``save_async`` call, whichever
+        comes first.
+        """
         self.wait()
         host = [(k, np.asarray(v)) for k, v in _flatten_with_keys(tree)]
         nbytes = sum(a.nbytes for _, a in host)

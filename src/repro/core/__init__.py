@@ -43,10 +43,25 @@ from .adaptive import (  # noqa: F401
     ClusterPolicy,
     RankImbalanceAdvisoryPolicy,
     RingPressurePolicy,
+    SickHostPolicy,
     StragglerRankPolicy,
     StreamCadencePolicy,
     ThresholdAdvisoryPolicy,
     WidenSamplingPolicy,
+)
+from .faults import (  # noqa: F401
+    FaultInjector,
+    FaultKind,
+    FaultSpec,
+    parse_fault_specs,
+)
+from .remediation import (  # noqa: F401
+    RUNG_DRAIN,
+    RUNG_ESCALATE,
+    RUNG_EVICT,
+    RemediationAction,
+    RemediationEngine,
+    RemediationHooks,
 )
 from .fold import (  # noqa: F401
     FoldEngine,

@@ -597,12 +597,18 @@ class ClusterContext:
         prev: Dict[str, Tally],
         cur: Dict[str, Tally],
         window_s: float,
+        telemetry: Optional[Dict[str, dict]] = None,
     ):
         self._controller = controller
         self._prev = prev
         self._cur = cur
         self.window_s = window_s
+        self._telemetry = telemetry or {}
         self._policy = "?"  # set by the controller per policy
+        #: sources flagged (any kind) during this tick — the controller
+        #: reports every other active source healthy afterwards (hysteresis
+        #: channel of the remediation engine)
+        self.flagged_sources: set = set()
 
     # -- per-rank windowed metrics -------------------------------------------
     def rank_ids(self) -> List[str]:
@@ -655,6 +661,16 @@ class ClusterContext:
     def snapshot(self, source: str) -> Optional[Tally]:
         """``source``'s current cumulative tally (None if unknown)."""
         return self._cur.get(source)
+
+    def telemetry(self, source: str) -> Optional[dict]:
+        """``source``'s latest device-telemetry dict (host RSS, device
+        memory pressure, memcpy/alloc bandwidth — docs/streaming.md), or
+        None when its frames never carried any."""
+        return self._telemetry.get(source)
+
+    def telemetry_by_rank(self) -> Dict[str, dict]:
+        """source → its latest telemetry dict (sources that shipped one)."""
+        return dict(self._telemetry)
 
     # -- cross-rank views ----------------------------------------------------
     def busy_by_rank(
@@ -717,7 +733,18 @@ class ClusterContext:
         *which API*, and *how far behind the median*.
         """
         self.advise(f"straggler:{source}", f"{provider}:{api}={ratio:.2f}x", reason)
+        self.flagged_sources.add(source)
         self._controller._notify_straggler(source, provider, api, ratio, reason)
+        self._controller._notify_flag(source, "straggler", f"{provider}:{api} {reason}")
+
+    def flag(self, source: str, kind: str, detail: str = "") -> None:
+        """Report ``source`` unhealthy for any ``kind`` of evidence
+        (``"sick-host"``, ``"imbalance"``, ...): advisory + the controller's
+        generic ``on_flag`` callback — the channel the remediation engine's
+        escalation ladder consumes."""
+        self.advise(f"{kind}:{source}", "flagged", detail)
+        self.flagged_sources.add(source)
+        self._controller._notify_flag(source, kind, detail)
 
 
 class ClusterPolicy:
@@ -831,6 +858,99 @@ class StragglerRankPolicy(ClusterPolicy):
                     )
 
 
+class SickHostPolicy(ClusterPolicy):
+    """Flag ranks whose *device telemetry* says the host is sick.
+
+    The straggler policy sees API latency — it cannot tell a slow kernel
+    (workload) from a dying host (infrastructure).  This policy reads the
+    per-rank telemetry carried in the forwarded breakdown (host RSS, device
+    memory pressure, memcpy bandwidth — ``ClusterContext.telemetry``) and
+    flags ranks on *host-level* evidence, so the remediation ladder can pick
+    the right rung: escalate fidelity on a slow kernel, drain-and-evict a
+    sick host.
+
+    Evidence, any of which counts as a strike:
+
+    * device memory pressure: ``mem_in_use / mem_limit ≥ mem_frac``;
+    * host RSS blow-up: RSS ≥ ``rss_ratio`` × the cluster median RSS;
+    * transfer collapse: the rank's ``memcpy_bw`` ≤ ``bw_floor`` × the
+      cluster median while the median is non-trivial (others are moving
+      data, this host is not).
+
+    ``patience`` consecutive striking windows flag the rank once via
+    ``ctx.flag(source, "sick-host", ...)``; dropping back below every
+    threshold re-arms it with a ``recovered`` advisory.
+    """
+
+    name = "sick-host"
+
+    def __init__(
+        self,
+        rss_ratio: float = 2.0,
+        mem_frac: float = 0.95,
+        bw_floor: float = 0.05,
+        patience: int = 2,
+        min_ranks: int = 2,
+    ):
+        if not (0.0 < mem_frac <= 1.0):
+            raise ValueError(f"mem_frac must be in (0,1], got {mem_frac}")
+        self.rss_ratio = rss_ratio
+        self.mem_frac = mem_frac
+        self.bw_floor = bw_floor
+        self.patience = max(1, int(patience))
+        self.min_ranks = max(2, int(min_ranks))
+        self._strikes: Dict[str, int] = {}
+        #: currently-flagged ranks → last evidence string
+        self.flagged: Dict[str, str] = {}
+
+    def _evidence(self, telem: dict, med_rss: float, med_bw: float) -> Optional[str]:
+        limit = float(telem.get("mem_limit", 0) or 0)
+        in_use = float(telem.get("mem_in_use", 0) or 0)
+        if limit > 0 and in_use / limit >= self.mem_frac:
+            return f"device-memory {100.0 * in_use / limit:.0f}% of limit"
+        rss = float(telem.get("host_rss", 0) or 0)
+        if med_rss > 0 and rss >= self.rss_ratio * med_rss:
+            return f"host-rss {rss / med_rss:.2f}x cluster median"
+        bw = float(telem.get("memcpy_bw", 0) or 0)
+        if med_bw > 0 and bw <= self.bw_floor * med_bw:
+            return f"memcpy-bw {bw:.0f} B/s vs median {med_bw:.0f} B/s"
+        return None
+
+    def tick(self, ctx: ClusterContext) -> None:
+        telem = ctx.telemetry_by_rank()
+        if len(telem) < self.min_ranks:
+            self._strikes.clear()
+            self.flagged.clear()
+            return
+        rss_vals = [float(t.get("host_rss", 0) or 0) for t in telem.values()]
+        bw_vals = [float(t.get("memcpy_bw", 0) or 0) for t in telem.values()]
+        med_rss = statistics.median(rss_vals) if rss_vals else 0.0
+        med_bw = statistics.median(bw_vals) if bw_vals else 0.0
+        for src in list(self._strikes):
+            if src not in telem:  # no telemetry this window: streak broken
+                del self._strikes[src]
+        for src in list(self.flagged):
+            if src not in telem:
+                del self.flagged[src]
+        for src, t in telem.items():
+            ev = self._evidence(t, med_rss, med_bw)
+            if ev is not None:
+                self._strikes[src] = self._strikes.get(src, 0) + 1
+                if self._strikes[src] >= self.patience and src not in self.flagged:
+                    self.flagged[src] = ev
+                    ctx.flag(
+                        src,
+                        "sick-host",
+                        f"{ev} ({self._strikes[src]} consecutive windows, "
+                        f"{len(telem)} ranks)",
+                    )
+            else:
+                self._strikes[src] = 0
+                if src in self.flagged:
+                    del self.flagged[src]
+                    ctx.advise(f"sick-host:{src}", "recovered", "telemetry back in range")
+
+
 class RankImbalanceAdvisoryPolicy(ClusterPolicy):
     """Narrate cluster-wide load imbalance on a watched API.
 
@@ -894,6 +1014,8 @@ class ClusterAdaptiveController(_ControllerCore):
         period_s: float = 1.0,
         on_action: Optional[Callable[[AdaptiveAction], None]] = None,
         on_straggler: Optional[Callable[[str, str, str, float, str], None]] = None,
+        on_flag: Optional[Callable[[str, str, str], None]] = None,
+        on_healthy: Optional[Callable[[str], None]] = None,
         clock: Callable[[], float] = time.monotonic,
         timeout_s: float = 2.0,
         token: Optional[str] = None,
@@ -905,6 +1027,12 @@ class ClusterAdaptiveController(_ControllerCore):
         self.master = master
         self.addr = addr
         self.on_straggler = on_straggler
+        #: generic unhealthy-rank channel: ``(source, kind, detail)`` per
+        #: flag — wire ``RemediationEngine.ingest_flag`` here to close the
+        #: loop.  ``on_healthy(source)`` fires for every active-but-unflagged
+        #: source after each adaptation window (the engine's hysteresis).
+        self.on_flag = on_flag
+        self.on_healthy = on_healthy
         self.clock = clock
         self.timeout_s = timeout_s
         #: credentials for the remote (``addr``) fetch path: hardened
@@ -931,12 +1059,12 @@ class ClusterAdaptiveController(_ControllerCore):
         if c is not None:
             c.close()
 
-    def _fetch(self) -> Optional[Dict[str, Tally]]:
+    def _fetch(self) -> Optional[Tuple[Dict[str, Tally], Dict[str, dict]]]:
         if self.master is not None:
             # frozen snapshots (replaced wholesale on change, never mutated):
             # the windowed diffs only read them, so skip the per-tick deep
             # copy of every rank's table — O(changed) per adaptation window
-            return self.master.ranks(copy=False)
+            return self.master.ranks(copy=False), self.master.telemetry()
         if self.addr is not None:
             from .stream import ProtocolError, StreamClient
 
@@ -949,8 +1077,8 @@ class ClusterAdaptiveController(_ControllerCore):
                         tls_ca=self.tls_ca,
                         ssl_context=self.ssl_context,
                     )
-                ranks, _ = self._client.ranks()
-                return ranks
+                ranks, meta = self._client.ranks()
+                return ranks, meta.get("telemetry", {})
             except (OSError, ProtocolError, ValueError):
                 self.close()  # reconnect fresh on the next attempt
                 return None  # master absent: adaptation pauses, never raises
@@ -981,29 +1109,47 @@ class ClusterAdaptiveController(_ControllerCore):
             ):
                 return False
             self._attempt_t = now
-        ranks = self._fetch()
-        if ranks is None:
+        fetched = self._fetch()
+        if fetched is None:
             return False
-        return self.observe(ranks, now)
+        ranks, telemetry = fetched
+        return self.observe(ranks, now, telemetry=telemetry)
 
-    def observe(self, ranks: Dict[str, Tally], now: float) -> bool:
+    def observe(
+        self,
+        ranks: Dict[str, Tally],
+        now: float,
+        telemetry: Optional[Dict[str, dict]] = None,
+    ) -> bool:
         """Ingest one per-rank map observed at ``now``; True when policies
         ran.  The first observation only baselines.  Public so tests (and
         alternative transports) can drive the controller with explicit
-        clocks and synthetic maps."""
+        clocks and synthetic maps.  ``telemetry`` optionally maps source →
+        its device-telemetry dict (the ``meta["telemetry"]`` shape)."""
         with self._lock:
             prev, prev_t = self._prev, self._prev_t
             self._prev, self._prev_t = ranks, now
             if prev is None:
                 return False  # baseline window
             self.ticks += 1
-            ctx = ClusterContext(self, prev, ranks, max(1e-9, now - prev_t))
+            ctx = ClusterContext(
+                self, prev, ranks, max(1e-9, now - prev_t), telemetry=telemetry
+            )
             for pol in self.policies:
                 ctx._policy = pol.name
                 try:
                     pol.tick(ctx)
                 except Exception:
                     pass  # a policy must never kill the consumer thread
+            if self.on_healthy is not None:
+                # every source seen this window and not flagged by any policy
+                # counts as a healthy observation (remediation hysteresis)
+                for src in ranks:
+                    if src not in ctx.flagged_sources:
+                        try:
+                            self.on_healthy(src)
+                        except Exception:
+                            pass  # callback must never break adaptation
             return True
 
     def _notify_straggler(
@@ -1012,6 +1158,13 @@ class ClusterAdaptiveController(_ControllerCore):
         if self.on_straggler is not None:
             try:
                 self.on_straggler(source, provider, api, ratio, reason)
+            except Exception:
+                pass  # workload callback must never break adaptation
+
+    def _notify_flag(self, source: str, kind: str, detail: str) -> None:
+        if self.on_flag is not None:
+            try:
+                self.on_flag(source, kind, detail)
             except Exception:
                 pass  # workload callback must never break adaptation
 

@@ -519,8 +519,10 @@ def user_model() -> APIModel:
     ``annotate`` is a one-shot marker with a JSON-encoded payload;
     ``phase`` is an entry/exit pair bracketing an application phase, so
     user phases tally and fold exactly like traced API calls.  Appended
-    *last* in :func:`builtin_models` so every pre-existing event id is
-    unchanged (trace-format stability across the PR sequence).
+    *after* the earlier models in :func:`builtin_models` so every
+    pre-existing event id is unchanged (trace-format stability across the
+    PR sequence); later additions (:func:`remediation_model`) follow the
+    same append-only rule.
     """
     return APIModel(
         provider="ust_user",
@@ -539,6 +541,32 @@ def user_model() -> APIModel:
     )
 
 
+def remediation_model() -> APIModel:
+    """ust_repro:remediation — closed-loop control decisions (one event per
+    ladder action, ROADMAP "closed-loop remediation").
+
+    A separate trailing :class:`APIModel` (same ``ust_repro`` provider string
+    as :func:`framework_model`) rather than a new API inside it: models are
+    eid-ordered by position, so appending a model keeps every pre-existing
+    event id stable while the event still folds and tallies under the
+    ``ust_repro:remediation`` name.
+    """
+    return APIModel(
+        provider="ust_repro",
+        apis=(
+            APISpec(
+                "remediation",
+                params=(
+                    P("action", "str"),  # escalate_fidelity / checkpoint_drain / evict / ...
+                    P("target", "str"),  # rank source id, or "" for run-wide actions
+                    P("detail", "str"),  # reason / rung / dry_run marker
+                ),
+                counter=True,
+            ),
+        ),
+    )
+
+
 def builtin_models() -> Tuple[APIModel, ...]:
     return (
         framework_model(),
@@ -546,7 +574,8 @@ def builtin_models() -> Tuple[APIModel, ...]:
         kernel_model(),
         collective_model(),
         telemetry_model(),
-        user_model(),  # must stay last: appending keeps earlier eids stable
+        user_model(),
+        remediation_model(),  # appended models keep earlier eids stable
     )
 
 

@@ -256,6 +256,14 @@ class ServeOptions:
     forward_token: Optional[str] = None
     forward_tls_ca: Optional[str] = None
     forward_tenant: str = DEFAULT_TENANT
+    #: initial-connect resilience of the upstream forwarder: retry the
+    #: *first* connect up to N times with capped-exponential backoff
+    #: (base ``connect_backoff_s``) before giving up on a push — so a local
+    #: master started before its parent doesn't drop early state.  0 (the
+    #: default) keeps fail-fast; reconnects after a successful connection
+    #: always use the non-blocking retry pacing.
+    connect_retries: int = 0
+    connect_backoff_s: float = 0.25
 
     def __post_init__(self):
         if self.tls_key and not self.tls_cert:
@@ -267,6 +275,10 @@ class ServeOptions:
                 raise ValueError(f"{name} must be >= 0 (0 = unlimited)")
         if self.hub_queue_frames < 1:
             raise ValueError("hub_queue_frames must be >= 1")
+        if self.connect_retries < 0:
+            raise ValueError("connect_retries must be >= 0")
+        if self.connect_backoff_s <= 0:
+            raise ValueError("connect_backoff_s must be > 0")
 
     @property
     def auth_required(self) -> bool:
@@ -352,6 +364,8 @@ class SnapshotStreamer:
         token: Optional[str] = None,
         ssl_context: Optional[ssl.SSLContext] = None,
         server_hostname: Optional[str] = None,
+        connect_retries: int = 0,
+        connect_backoff_s: float = 0.25,
     ):
         self.addr = parse_addr(addr)
         self.source = source
@@ -359,6 +373,20 @@ class SnapshotStreamer:
         self.timeout_s = timeout_s
         self.delta = delta
         self.resync_every = max(1, int(resync_every))
+        #: initial-connect resilience: until the *first* connection has ever
+        #: succeeded, a failed connect is retried up to ``connect_retries``
+        #: times in-line with capped-exponential backoff (base
+        #: ``connect_backoff_s``, doubling, capped at 8× base) — so ranks
+        #: that start before their master don't drop their early pushes.
+        #: The default 0 keeps the historical fail-fast behavior; once a
+        #: connection has succeeded, reconnects always use the non-blocking
+        #: ``retry_s`` pacing (a mid-run master outage must not stall
+        #: the consumer thread).
+        if connect_retries < 0 or connect_backoff_s <= 0:
+            raise ValueError("connect_retries must be >= 0 and connect_backoff_s > 0")
+        self.connect_retries = int(connect_retries)
+        self.connect_backoff_s = connect_backoff_s
+        self._ever_connected = False
         #: bearer token presented in ``hello`` (auth-enabled masters)
         self.token = token
         #: client-side TLS context (see :func:`client_ssl_context`); None
@@ -401,6 +429,7 @@ class SnapshotStreamer:
         tally: Union[Tally, dict],
         source: Optional[str] = None,
         skip_unchanged: bool = False,
+        telemetry: Optional[dict] = None,
     ) -> bool:
         """Deliver the current cumulative ``tally``; returns delivery success.
 
@@ -411,7 +440,11 @@ class SnapshotStreamer:
         to carry the per-rank breakdown upstream.  With ``skip_unchanged``
         a delta-eligible push whose state did not change since the last
         delivery is elided (counted in ``skipped``) — used by per-rank
-        forwarding so idle ranks cost no wire traffic.
+        forwarding so idle ranks cost no wire traffic.  ``telemetry`` is an
+        optional per-source device-telemetry dict (host RSS, memory
+        pressure, transfer bandwidths — docs/streaming.md) that rides the
+        frame as an optional key; a push carrying telemetry is never elided
+        (sick-host evidence must flow even when the tally is idle).
         """
         cur = tally if isinstance(tally, Tally) else Tally.from_obj(tally)
         src = source if source is not None else self.source
@@ -424,10 +457,12 @@ class SnapshotStreamer:
                 self.dropped += 1
                 return False
             st = self._src.setdefault(src, _SourceState())
-            msg = self._encode(st, src, cur, skip_unchanged)
+            msg = self._encode(st, src, cur, skip_unchanged and telemetry is None)
             if msg is None:  # delta-eligible and nothing changed: elide
                 self.skipped += 1
                 return True
+            if telemetry is not None:
+                msg["telemetry"] = telemetry
             frame = pack_frame(msg)
             try:
                 sock.sendall(frame)
@@ -552,23 +587,33 @@ class SnapshotStreamer:
             return self._sock
         if time.monotonic() < self._next_retry:
             return None
-        try:
-            s = socket.create_connection(self.addr, timeout=self.timeout_s)
-            s.settimeout(self.timeout_s)
-            if self.ssl_context is not None:
-                # handshake runs under the socket timeout; a plaintext or
-                # wrong-cert master fails here (OSError) → normal retry path
-                s = self.ssl_context.wrap_socket(
-                    s, server_hostname=self.server_hostname
-                )
-            hello = {"type": "hello", "v": PROTOCOL_VERSION, "source": self.source}
-            if self.token is not None:
-                hello["token"] = self.token
-            s.sendall(pack_frame(hello))
-        except OSError:
-            self._next_retry = time.monotonic() + self.retry_s
-            return None
+        # initial connect only: blocking capped-exponential retry so a rank
+        # that starts before its master still delivers its first push
+        attempts = 0 if self._ever_connected else self.connect_retries
+        while True:
+            try:
+                s = socket.create_connection(self.addr, timeout=self.timeout_s)
+                s.settimeout(self.timeout_s)
+                if self.ssl_context is not None:
+                    # handshake runs under the socket timeout; a plaintext or
+                    # wrong-cert master fails here (OSError) → normal retry path
+                    s = self.ssl_context.wrap_socket(
+                        s, server_hostname=self.server_hostname
+                    )
+                hello = {"type": "hello", "v": PROTOCOL_VERSION, "source": self.source}
+                if self.token is not None:
+                    hello["token"] = self.token
+                s.sendall(pack_frame(hello))
+                break
+            except OSError:
+                if attempts <= 0:
+                    self._next_retry = time.monotonic() + self.retry_s
+                    return None
+                n = self.connect_retries - attempts
+                attempts -= 1
+                time.sleep(min(self.connect_backoff_s * (2.0**n), 8 * self.connect_backoff_s))
         self._sock = s
+        self._ever_connected = True
         # connection-local delta state starts fresh: first push is full
         self._src = {}
         self._peer_version = None
@@ -772,7 +817,16 @@ class _SourceEntry:
     the tally at ``snap_version`` so per-rank reads refresh only the sources
     that changed since the last read (O(changed), not O(ranks × rows))."""
 
-    __slots__ = ("gen", "seq", "tally", "ts", "version", "snap", "snap_version")
+    __slots__ = (
+        "gen",
+        "seq",
+        "tally",
+        "ts",
+        "version",
+        "snap",
+        "snap_version",
+        "telemetry",
+    )
 
     def __init__(self, gen: Optional[int], seq: int, tally: Tally, ts: float):
         self.gen = gen
@@ -782,6 +836,9 @@ class _SourceEntry:
         self.version = 0
         self.snap: Optional[Tally] = None
         self.snap_version = -1
+        #: latest device-telemetry dict shipped alongside this source's
+        #: frames (optional wire key; None until the first carrying frame)
+        self.telemetry: Optional[dict] = None
 
 
 class _Tenant:
@@ -983,6 +1040,8 @@ class MasterServer:
                 resync_every=self.forward_resync_every,
                 token=self.options.forward_token,
                 ssl_context=self.options.build_forward_ssl(),
+                connect_retries=self.options.connect_retries,
+                connect_backoff_s=self.options.connect_backoff_s,
             )
             fwd = threading.Thread(
                 target=self._forward_loop, name="thapi-master-forward", daemon=True
@@ -1047,6 +1106,7 @@ class MasterServer:
         seq: Optional[int] = None,
         gen: Optional[int] = None,
         tenant: str = DEFAULT_TENANT,
+        telemetry: Optional[dict] = None,
     ) -> bool:
         """Ingest a full cumulative snapshot (socket handlers and the
         in-process tracer both land here). Out-of-order frames
@@ -1093,7 +1153,14 @@ class MasterServer:
                 return False
             nseq = seq if seq is not None else (prev.seq + 1 if prev is not None else 0)
             old = prev.tally if prev is not None else None
-            tn.latest[source] = _SourceEntry(gen, nseq, tally, time.time())
+            entry = tn.latest[source] = _SourceEntry(gen, nseq, tally, time.time())
+            # a frame without telemetry keeps the last-known sample (leaf
+            # pushes attach it every tick; forwarded chains may interleave)
+            entry.telemetry = (
+                dict(telemetry)
+                if telemetry is not None
+                else (prev.telemetry if prev is not None else None)
+            )
             self.snapshots += 1
             self.full_snapshots += 1
             self._dirty = True
@@ -1110,6 +1177,7 @@ class MasterServer:
         base_seq: int,
         gen: Optional[int] = None,
         tenant: str = DEFAULT_TENANT,
+        telemetry: Optional[dict] = None,
     ) -> bool:
         """Ingest a delta frame; True if applied.
 
@@ -1161,6 +1229,8 @@ class MasterServer:
             prev.ts = time.time()
             prev.version += 1
             prev.snap = None  # stale frozen copy: re-snapped on next read
+            if telemetry is not None:
+                prev.telemetry = dict(telemetry)
             self.snapshots += 1
             self.deltas += 1
             self._dirty = True
@@ -1341,6 +1411,21 @@ class MasterServer:
                 return {src: Tally().merge(t) for src, t in snap.items()}
             return dict(snap)
 
+    def telemetry(self, tenant: str = DEFAULT_TENANT) -> Dict[str, dict]:
+        """Per-source device telemetry: source id → its latest telemetry
+        dict (host RSS, device memory pressure, transfer bandwidths — the
+        fields in docs/streaming.md).  Sources whose frames never carried
+        telemetry are absent.  Returns copies the caller owns — the same
+        evidence ``query_ranks`` serves in its ``telemetry`` key and
+        sick-host policies consume."""
+        with self._lock:
+            tn = self._tenant_locked(tenant)
+            return {
+                src: dict(e.telemetry)
+                for src, e in tn.latest.items()
+                if e.telemetry is not None
+            }
+
     def groups(self, tenant: str = DEFAULT_TENANT) -> Dict[str, Tally]:
         """Rollup breakdown: group id → aggregated member tally (empty when
         ``rollup_groups`` is off).  Group tallies are maintained
@@ -1464,10 +1549,18 @@ class MasterServer:
                 srcs = list(snaps) if force else list(tn.dirty_srcs)
                 tn.dirty_srcs.clear()
                 copies = {src: snaps[src] for src in srcs if src in snaps}
+                telem = {
+                    src: e.telemetry
+                    for src, e in tn.latest.items()
+                    if src in copies and e.telemetry is not None
+                }
             ok = True
             for src, tally in copies.items():
                 ok = self._forwarder.push(
-                    tally, source=src, skip_unchanged=not force
+                    tally,
+                    source=src,
+                    skip_unchanged=not force,
+                    telemetry=telem.get(src),
                 ) and ok
             if not ok:
                 with self._lock:
@@ -1596,15 +1689,18 @@ class MasterServer:
                     )
                     break
                 elif kind == "snapshot":
+                    telem = msg.get("telemetry")
                     self.submit(
                         str(msg.get("source", "?")),
                         msg["tally"],
                         msg.get("seq"),
                         gen,
                         tenant=tenant,
+                        telemetry=telem if isinstance(telem, dict) else None,
                     )
                 elif kind == "delta":
                     source = str(msg.get("source", "?"))
+                    telem = msg.get("telemetry")
                     ok = self.submit_delta(
                         source,
                         msg["delta"],
@@ -1612,6 +1708,7 @@ class MasterServer:
                         int(msg.get("base_seq", -2)),
                         gen,
                         tenant=tenant,
+                        telemetry=telem if isinstance(telem, dict) else None,
                     )
                     if not ok:
                         # mis-based delta: ask the sender for a full snapshot
@@ -1757,6 +1854,11 @@ class MasterServer:
             tn = self._tenant_locked(tenant)
             snap = self._ranks_snapshot_locked(tn)
             stamps = {src: e.ts for src, e in tn.latest.items()}
+            telem = {
+                src: dict(e.telemetry)
+                for src, e in tn.latest.items()
+                if e.telemetry is not None
+            }
             meta = self._tenant_meta_locked(tn)
         # frozen snapshots: replaced wholesale on change, safe to serialize
         # after the lock is released
@@ -1766,6 +1868,8 @@ class MasterServer:
             "ranks": {src: t.to_obj() for src, t in snap.items()},
             "ts": stamps,
         }
+        if telem:
+            msg["telemetry"] = telem
         msg.update(meta)
         return msg
 
@@ -2200,12 +2304,15 @@ class StreamClient:
         Returns ``(ranks, meta)`` where ``ranks`` maps source id (the rank
         identity, ``host:pid:rankN``) → its latest cumulative tally, and
         ``meta`` carries the composite meta keys plus ``ts`` (source →
-        receipt wall clock).  Merging every value of ``ranks`` reproduces
-        the :meth:`composite` tally exactly — per-rank sums equal the
-        composite, API for API."""
+        receipt wall clock) and ``telemetry`` (source → its latest
+        device-telemetry dict, empty when no source shipped any).  Merging
+        every value of ``ranks`` reproduces the :meth:`composite` tally
+        exactly — per-rank sums equal the composite, API for API."""
         msg = self._request({"type": "query_ranks", "v": PROTOCOL_VERSION}, "ranks")
         meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
         meta["ts"] = msg.get("ts", {})
+        telem = msg.get("telemetry")
+        meta["telemetry"] = telem if isinstance(telem, dict) else {}
         return {src: Tally.from_obj(o) for src, o in msg["ranks"].items()}, meta
 
     def groups(self) -> Tuple[Dict[str, Tally], dict]:

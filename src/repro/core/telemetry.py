@@ -76,6 +76,49 @@ class StepRateGauge:
             return rate
 
 
+class TransferGauge:
+    """Shared byte counters the interception layer bumps on every memcpy /
+    alloc; the daemon (and the stream tick) reads them as bandwidths.
+
+    Same class-gauge pattern as :class:`StepRateGauge`: the fused pair
+    recorders in ``core/interception.py`` call :meth:`bump_memcpy` /
+    :meth:`bump_alloc` on the hot path (one lock + add), and
+    :meth:`read_and_reset` converts the window's bytes into bytes/s.  This
+    is the "transfer bandwidth from the memcpy/alloc tracepoints" evidence
+    channel the remediation policies use to tell a slow kernel from a sick
+    host (ROADMAP "closed-loop remediation").
+    """
+
+    _lock = threading.Lock()
+    _memcpy_bytes = 0
+    _alloc_bytes = 0
+    _t0 = time.monotonic()
+
+    @classmethod
+    def bump_memcpy(cls, nbytes: int) -> None:
+        with cls._lock:
+            cls._memcpy_bytes += nbytes
+
+    @classmethod
+    def bump_alloc(cls, nbytes: int) -> None:
+        with cls._lock:
+            cls._alloc_bytes += nbytes
+
+    @classmethod
+    def read_and_reset(cls) -> tuple:
+        """(memcpy_bytes_per_s, alloc_bytes_per_s) over the window since the
+        last read; resets the window."""
+        with cls._lock:
+            t = time.monotonic()
+            dt = t - cls._t0
+            mc = cls._memcpy_bytes / dt if dt > 0 else 0.0
+            al = cls._alloc_bytes / dt if dt > 0 else 0.0
+            cls._memcpy_bytes = 0
+            cls._alloc_bytes = 0
+            cls._t0 = t
+            return (mc, al)
+
+
 class TelemetryDaemon:
     """Sampling thread: one ``ust_thapi:sample`` counter event per period."""
 
@@ -87,6 +130,8 @@ class TelemetryDaemon:
         self._thread: Optional[threading.Thread] = None
         self._last_cpu = (time.process_time(), time.monotonic())
         self.samples = 0
+        self.sample_errors = 0
+        self.last: dict = {}  # most recent sample, for the stream tick
 
     def _cpu_pct(self) -> float:
         pt, wt = time.process_time(), time.monotonic()
@@ -97,20 +142,39 @@ class TelemetryDaemon:
 
     def sample_once(self) -> None:
         in_use, peak, limit = read_device_memory()
+        host_rss = read_host_rss()
+        cpu_pct = self._cpu_pct()
+        step_rate = StepRateGauge.read_and_reset()
+        memcpy_bw, alloc_bw = TransferGauge.read_and_reset()
+        self.last = {
+            "mem_in_use": in_use,
+            "mem_peak": peak,
+            "mem_limit": limit,
+            "host_rss": host_rss,
+            "cpu_pct": cpu_pct,
+            "step_rate": step_rate,
+            "memcpy_bw": memcpy_bw,
+            "alloc_bw": alloc_bw,
+        }
         self._record(
             self.device_index,
             in_use,
             peak,
             limit,
-            read_host_rss(),
-            self._cpu_pct(),
-            StepRateGauge.read_and_reset(),
+            host_rss,
+            cpu_pct,
+            step_rate,
         )
         self.samples += 1
 
     def _loop(self) -> None:
         while not self._stop.wait(self.period_s):
-            self.sample_once()
+            # One bad read (transient /proc or device-stats failure) must not
+            # kill the daemon thread: count it and keep sampling.
+            try:
+                self.sample_once()
+            except Exception:
+                self.sample_errors += 1
 
     def start(self) -> None:
         self._stop.clear()

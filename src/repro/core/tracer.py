@@ -118,6 +118,24 @@ class TraceConfig:
     #: CA bundle path pinning the upstream master's TLS certificate; sets
     #: the client side of the hardened serving tier (None = plaintext)
     stream_tls_ca: Optional[str] = None
+    #: initial-connect resilience for the ``stream_to`` push client: retry
+    #: the first connect up to N times with capped-exponential backoff
+    #: (base ``stream_connect_backoff_s``) so ranks that start before the
+    #: master don't drop their early pushes.  0 = historical fail-fast.
+    stream_connect_retries: int = 0
+    stream_connect_backoff_s: float = 0.25
+    #: attach per-rank device telemetry (host RSS, device memory pressure,
+    #: memcpy/alloc bandwidth — core/telemetry.py) to every streamed
+    #: snapshot, carried through the per-rank breakdown so cluster policies
+    #: can tell "slow kernel" from "sick host".  Uses the sampling daemon's
+    #: latest sample when ``sample`` is on, else a cheap inline read.
+    stream_telemetry: bool = True
+    #: closed-loop remediation: a ready core/remediation.RemediationEngine
+    #: ticked from the consumer thread and attached to this session (its
+    #: decisions land in the trace as ``ust_repro:remediation`` events).
+    #: When ``cluster_adaptive`` runs too, the controller's flag/healthy
+    #: channels are wired into the engine unless already set.
+    remediation: Optional[object] = None
     #: full serving-tier configuration for the in-process master (TLS
     #: cert/key, auth tokens, per-tenant quotas, hub queue depth...).  None
     #: builds one from the legacy stream_* knobs above; when set, it wins
@@ -142,6 +160,10 @@ class TraceConfig:
             )
         if self.sampling_interval < 1:
             raise ValueError("sampling_interval must be >= 1")
+        if self.stream_connect_retries < 0:
+            raise ValueError("stream_connect_retries must be >= 0")
+        if self.stream_connect_backoff_s <= 0:
+            raise ValueError("stream_connect_backoff_s must be > 0")
         if self.cluster_adaptive is not None and self.serve_port is None:
             raise ValueError(
                 "cluster_adaptive requires serve_port: the in-process master "
@@ -250,6 +272,7 @@ class Tracer:
         self.server = None  # MasterServer when cfg.serve_port
         self.adaptive = None  # AdaptiveController when cfg.adaptive
         self.cluster = None  # ClusterAdaptiveController when cfg.cluster_adaptive
+        self.remediation = None  # RemediationEngine when cfg.remediation
         self._stream_source = ""
         self._stream_next = 0.0
         #: rank selected for tracing? (§3.2 selective rank tracing)
@@ -411,6 +434,8 @@ class Tracer:
                         if self.cfg.stream_tls_ca
                         else None
                     ),
+                    connect_retries=self.cfg.stream_connect_retries,
+                    connect_backoff_s=self.cfg.stream_connect_backoff_s,
                 )
         if self.cfg.adaptive is not None:
             from .adaptive import build_controller
@@ -427,6 +452,17 @@ class Tracer:
             )
             self.cluster.bind(master=self.server)
             self.cluster.attach(self)  # advisories land in this rank's trace
+        if self.cfg.remediation is not None:
+            self.remediation = self.cfg.remediation
+            self.remediation.attach(self)  # decisions land in this rank's trace
+            if self.cluster is not None:
+                # close the loop: cluster flags feed the escalation ladder,
+                # healthy windows feed its hysteresis (unless the caller
+                # already wired its own channels)
+                if getattr(self.cluster, "on_flag", None) is None:
+                    self.cluster.on_flag = self.remediation.ingest_flag
+                if getattr(self.cluster, "on_healthy", None) is None:
+                    self.cluster.on_healthy = self.remediation.observe_healthy
         self._stop_evt.clear()
         self._consumer = threading.Thread(
             target=self._consumer_loop, name="thapi-consumer", daemon=True
@@ -644,6 +680,11 @@ class Tracer:
                 self.adaptive.tick()
             if self.cluster is not None:
                 self.cluster.tick()
+            if self.remediation is not None:
+                try:
+                    self.remediation.tick()
+                except Exception:
+                    pass  # remediation must never kill the consumer thread
 
     def _stream_tick(self, final: bool = False) -> None:
         """Push the live tally to the streaming service (§3.7+§6).
@@ -660,10 +701,38 @@ class Tracer:
             return
         self._stream_next = t + self.cfg.stream_period_s
         snap = self.online.snapshot()
+        if final and self._modes_used == ["sampled"] and self.cfg.sampling_interval > 1:
+            # the authoritative last push carries the same 1/N estimate the
+            # offline fold (and finish()) produce for a pure-sampled session,
+            # so the live composite converges on the on-disk aggregate
+            snap.scale(self.cfg.sampling_interval)
+        telem = self._telemetry_snapshot() if self.cfg.stream_telemetry else None
         if self.server is not None:
-            self.server.submit(self._stream_source, snap)
+            self.server.submit(self._stream_source, snap, telemetry=telem)
         if self.streamer is not None:
-            self.streamer.push(snap)
+            self.streamer.push(snap, telemetry=telem)
+
+    def _telemetry_snapshot(self) -> Optional[dict]:
+        """This rank's device-telemetry dict for the outgoing frame.
+
+        With the sampling daemon on, reuse its latest sample (one reader of
+        the shared gauges).  Without it, take a cheap inline reading — the
+        gauges' only reader is then this tick, so read-and-reset is safe.
+        """
+        if self._sampler is not None:
+            last = self._sampler.last
+            return dict(last) if last else None
+        in_use, peak, limit = _telemetry.read_device_memory()
+        memcpy_bw, alloc_bw = _telemetry.TransferGauge.read_and_reset()
+        return {
+            "mem_in_use": in_use,
+            "mem_peak": peak,
+            "mem_limit": limit,
+            "host_rss": _telemetry.read_host_rss(),
+            "step_rate": _telemetry.StepRateGauge.read_and_reset(),
+            "memcpy_bw": memcpy_bw,
+            "alloc_bw": alloc_bw,
+        }
 
     # -- §3.7 aggregate-only ---------------------------------------------------
     def _write_aggregate_and_prune(self) -> str:

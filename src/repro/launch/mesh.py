@@ -7,7 +7,8 @@ tests and benches must keep seeing 1 device).
 
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Dict, Iterable, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh
@@ -33,3 +34,70 @@ def make_local_mesh(model_parallel: Optional[int] = None) -> Mesh:
 
 def describe(mesh: Mesh) -> str:
     return "x".join(f"{k}={v}" for k, v in mesh.shape.items())
+
+
+# -- elastic re-mesh (remediation rung 3) -----------------------------------------
+#
+# When the remediation ladder evicts a sick rank, the surviving ranks need a
+# new dense rank assignment and the evicted rank's unfinished work needs new
+# owners.  These helpers are pure functions over *logical* rank ids — the
+# driver applies the plan by relaunching / re-configuring workers; nothing
+# here touches jax device state (module contract above).
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    """Survivor topology after evicting ranks from a world of ``world_size``.
+
+    ``survivors`` keeps original rank ids in order; ``dense_rank`` maps each
+    survivor's original id to its new dense id (0..len(survivors)-1), which
+    is what data-parallel sharding keys off after the re-mesh.
+    """
+
+    world_size: int
+    evicted: Tuple[int, ...]
+    survivors: Tuple[int, ...]
+    dense_rank: Dict[int, int]
+
+    def reassign(self, pending: Dict[int, int]) -> Dict[int, int]:
+        """Fold evicted ranks' pending work onto the survivors.
+
+        ``pending`` maps original rank id → count of unfinished work items
+        (steps, shards...).  Survivors keep their own count; each evicted
+        rank's count is dealt round-robin across survivors (orphan work is
+        spread, not dumped on rank 0).  Returns original-survivor-id → new
+        count; total work is conserved.
+        """
+        if not self.survivors:
+            raise ValueError("no survivors to reassign work to")
+        out = {r: int(pending.get(r, 0)) for r in self.survivors}
+        orphans = sorted(
+            (r, int(n)) for r, n in pending.items() if r in set(self.evicted)
+        )
+        i = 0
+        for _, n in orphans:
+            for _ in range(n):
+                out[self.survivors[i % len(self.survivors)]] += 1
+                i += 1
+        return out
+
+
+def plan_eviction(world_size: int, evicted: Iterable[int]) -> RemeshPlan:
+    """Build the survivor re-mesh plan for evicting ``evicted`` ranks.
+
+    Evicting every rank (or an unknown rank id) is a planning error and
+    raises — the remediation engine's eviction budget should have stopped
+    the ladder before the cluster ate itself.
+    """
+    ev = tuple(sorted(set(int(r) for r in evicted)))
+    if any(r < 0 or r >= world_size for r in ev):
+        raise ValueError(f"evicted ranks {ev} out of range for world_size={world_size}")
+    surv = tuple(r for r in range(world_size) if r not in set(ev))
+    if not surv:
+        raise ValueError(f"cannot evict all {world_size} ranks")
+    return RemeshPlan(
+        world_size=world_size,
+        evicted=ev,
+        survivors=surv,
+        dense_rank={r: i for i, r in enumerate(surv)},
+    )

@@ -31,7 +31,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.checkpoint import Checkpointer, latest_checkpoint
+from repro.checkpoint import Checkpointer, list_checkpoints
 from repro.core.interception import data_next_span, optimizer_update_span, train_step_span
 from repro.core.telemetry import StepRateGauge
 from repro.data import DataConfig, SyntheticPipeline
@@ -154,6 +154,17 @@ class Trainer:
         self.history: List[Dict[str, float]] = []
         self.watchdog = StragglerWatchdog(factor=cfg.straggler_factor)
         self.failures = 0
+        # -- drain machinery (remediation rung 2) --
+        #: set (from any thread) to ask the loop to checkpoint-and-drain at
+        #: the next step boundary instead of running to cfg.steps
+        self.draining = threading.Event()
+        #: True once a drain checkpoint has been durably committed — the
+        #: remediation ladder requires this before evicting the rank
+        self.drained = False
+        #: quiesce hooks: called (in order, exceptions contained) after the
+        #: drain checkpoint commits — stop data pipelines, close streams,
+        #: release device handles before the host is taken away
+        self.on_drain: List[Callable[[], None]] = []
 
     @property
     def straggler_steps(self) -> int:
@@ -170,18 +181,60 @@ class Trainer:
     def _maybe_restore(self) -> None:
         if self.ckpt is None:
             return
-        path = latest_checkpoint(self.ckpt.root)
-        if path is None:
+        # walk newest → oldest: a damaged restore point (truncated leaf,
+        # corrupt manifest, failed CRC) falls back to the next-older one
+        # instead of killing the run
+        for path in list_checkpoints(self.ckpt.root):
+            try:
+                self.state, man = self.ckpt.restore(path, self.state, self.state_shardings)
+            except Exception:
+                continue
+            self.step = man.step
+            if "data" in man.extra:
+                self.pipe.load_state_dict(man.extra["data"])
             return
-        self.state, man = self.ckpt.restore(path, self.state, self.state_shardings)
-        self.step = man.step
-        if "data" in man.extra:
-            self.pipe.load_state_dict(man.extra["data"])
 
     def _save(self) -> None:
         if self.ckpt is None:
             return
         self.ckpt.save_async(self.step, self.state, extra={"data": self.pipe.state_dict()})
+
+    # -- checkpoint-and-drain (remediation rung 2) --------------------------------
+    def request_drain(self) -> None:
+        """Ask the running loop to drain at the next step boundary.
+
+        Thread-safe: this is what a :class:`~repro.core.remediation.
+        RemediationEngine` drain hook calls from the tracer's consumer
+        thread while the step loop runs.
+        """
+        self.draining.set()
+
+    def checkpoint_and_drain(self) -> Optional[str]:
+        """Quiesce the trainer: commit a durable checkpoint of the current
+        state, run the quiesce hooks, and mark the rank drained.
+
+        Returns the committed checkpoint path (None without a checkpointer —
+        the rank still quiesces, it just has nothing durable to hand over).
+        Idempotent: a second call re-commits but hooks run once per drain.
+        The remediation ladder's *drain-before-evict* invariant is anchored
+        on :attr:`drained` turning True here and nowhere else.
+        """
+        self.draining.set()
+        path = None
+        if self.ckpt is not None:
+            self.ckpt.wait()  # join any in-flight async commit first
+            path = self.ckpt.save(
+                self.step, self.state, extra={"data": self.pipe.state_dict()}
+            )
+        already = self.drained
+        self.drained = True
+        if not already:
+            for hook in list(self.on_drain):
+                try:
+                    hook()
+                except Exception:
+                    pass  # quiesce hooks must not block the drain
+        return path
 
     # -- batching -----------------------------------------------------------------
     def _device_batch(self, host_batch: Dict[str, np.ndarray]):
@@ -194,7 +247,7 @@ class Trainer:
     def run(self) -> Dict[str, Any]:
         self._maybe_restore()
         start = self.step
-        while self.step < self.cfg.steps:
+        while self.step < self.cfg.steps and not self.draining.is_set():
             try:
                 self._one_step()
             except Exception:
@@ -202,9 +255,18 @@ class Trainer:
                 if self.failures > self.cfg.max_failures or self.ckpt is None:
                     raise
                 # fault tolerance: restore + replay
-                self.ckpt.wait()
+                try:
+                    self.ckpt.wait()
+                except Exception:
+                    self.failures += 1  # a failed async commit also burns budget
+                    if self.failures > self.cfg.max_failures:
+                        raise
                 self._maybe_restore()
-        if self.ckpt is not None:
+        if self.draining.is_set():
+            # drain requested mid-run: durable checkpoint + quiesce hooks,
+            # then hand back early with drained=True
+            self.checkpoint_and_drain()
+        elif self.ckpt is not None:
             self.ckpt.wait()
             self._save()
             self.ckpt.wait()
@@ -215,6 +277,7 @@ class Trainer:
             "straggler_steps": self.straggler_steps,
             "straggler_reports": self.watchdog.api_reports(),
             "failures": self.failures,
+            "drained": self.drained,
             "history": self.history,
         }
 

@@ -1,0 +1,413 @@
+"""RemediationEngine ladder mechanics + FaultInjector determinism.
+
+Everything here runs with an injected clock — no sleeps, no wall time."""
+
+import pytest
+
+from repro.core.adaptive import ClusterAdaptiveController, SickHostPolicy
+from repro.core.faults import FaultInjector, FaultKind, FaultSpec, parse_fault_specs
+from repro.core.remediation import (
+    RUNG_DRAIN,
+    RUNG_ESCALATE,
+    RUNG_EVICT,
+    RemediationEngine,
+    RemediationHooks,
+)
+
+
+class Clock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+        return self.t
+
+
+class Recorder:
+    """Hook that logs invocations and returns a scripted result."""
+
+    def __init__(self, results=None):
+        self.calls = []
+        self.results = list(results or [])
+
+    def __call__(self, target, reason):
+        self.calls.append((target, reason))
+        return self.results.pop(0) if self.results else True
+
+
+def mk_engine(clock, **kw):
+    hooks = RemediationHooks(
+        escalate=kw.pop("escalate", Recorder()),
+        drain=kw.pop("drain", Recorder()),
+        evict=kw.pop("evict", Recorder()),
+        restore=kw.pop("restore", None),
+    )
+    kw.setdefault("cooldown_s", 1.0)
+    kw.setdefault("backoff_cap_s", 4.0)
+    kw.setdefault("escalate_after", 2)
+    kw.setdefault("healthy_windows", 3)
+    return RemediationEngine(hooks, clock=clock, **kw)
+
+
+def flag_and_tick(eng, clock, src="rank1", n=1, dt=1.0, kind="straggler"):
+    out = []
+    for _ in range(n):
+        eng.ingest_flag(src, kind, "test")
+        out += eng.tick(clock.advance(dt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# escalation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_first_flag_fires_cheapest_rung_immediately():
+    clock = Clock()
+    eng = mk_engine(clock)
+    acts = flag_and_tick(eng, clock, n=1)
+    assert [a.action for a in acts] == [RUNG_ESCALATE]
+    assert eng.rung_of("rank1") == 0
+    assert eng.hooks.escalate.calls == [("rank1", "straggler: test")]
+
+
+def test_sustained_flags_walk_the_full_ladder_in_order():
+    clock = Clock()
+    eng = mk_engine(clock)
+    acts = flag_and_tick(eng, clock, n=8)
+    names = [a.action for a in acts]
+    assert names == [RUNG_ESCALATE, RUNG_DRAIN, RUNG_EVICT]
+    # drain-before-evict: strictly ordered, and each hook ran exactly once
+    assert len(eng.hooks.drain.calls) == 1
+    assert len(eng.hooks.evict.calls) == 1
+    assert eng.evicted == ("rank1",)
+
+
+def test_unsustained_flag_holds_the_current_rung():
+    clock = Clock()
+    eng = mk_engine(clock, escalate_after=3)
+    flag_and_tick(eng, clock, n=1)  # rung 0
+    # alternate flagged/healthy: streak never reaches 3, rung never moves
+    for _ in range(6):
+        flag_and_tick(eng, clock, n=1)
+        eng.observe_healthy("rank1")
+        eng.tick(clock.advance(1.0))
+    assert eng.rung_of("rank1") <= 0
+    assert not eng.hooks.drain.calls
+
+
+def test_evict_requires_prior_drain():
+    clock = Clock()
+    # drain hook always fails: the ladder must never reach evict
+    eng = mk_engine(clock, drain=Recorder(results=[False] * 50))
+    acts = flag_and_tick(eng, clock, n=20, dt=5.0)  # dt > backoff cap
+    assert RUNG_EVICT not in [a.action for a in acts]
+    assert not eng.hooks.evict.calls
+    assert eng.evicted == ()
+
+
+def test_eviction_budget_caps_evictions():
+    clock = Clock()
+    eng = mk_engine(clock, max_evictions=1)
+    flag_and_tick(eng, clock, "rank1", n=8)
+    flag_and_tick(eng, clock, "rank2", n=8)
+    assert eng.evicted == ("rank1",)
+    assert eng.rung_of("rank2") == 1  # drained, but eviction denied
+    assert len(eng.hooks.evict.calls) == 1
+
+
+def test_evicted_target_is_terminal():
+    clock = Clock()
+    eng = mk_engine(clock)
+    flag_and_tick(eng, clock, n=8)
+    before = len(eng.actions)
+    flag_and_tick(eng, clock, n=5)  # flags for an evicted rank are ignored
+    assert len(eng.actions) == before
+
+
+# ---------------------------------------------------------------------------
+# cooldown and capped-exponential backoff
+# ---------------------------------------------------------------------------
+
+
+def test_cooldown_blocks_refire_within_window():
+    clock = Clock()
+    eng = mk_engine(clock, cooldown_s=10.0, backoff_cap_s=10.0)
+    eng.ingest_flag("rank1")
+    assert len(eng.tick(clock.advance(1.0))) == 1
+    for _ in range(5):  # 5s elapsed < 10s cooldown: nothing may fire
+        eng.ingest_flag("rank1")
+        assert eng.tick(clock.advance(1.0)) == []
+    eng.ingest_flag("rank1")
+    assert [a.action for a in eng.tick(clock.advance(10.0))] == [RUNG_DRAIN]
+
+
+def test_failed_hook_retries_same_rung_with_capped_backoff():
+    clock = Clock()
+    drain = Recorder(results=[False, False, False, True])
+    eng = mk_engine(clock, drain=drain, cooldown_s=1.0, backoff_cap_s=4.0)
+    flag_and_tick(eng, clock, n=1)  # rung 0
+    fire_times = []
+    for _ in range(40):
+        eng.ingest_flag("rank1")
+        for a in eng.tick(clock.advance(0.5)):
+            if a.action == RUNG_DRAIN:
+                fire_times.append(a.ts)
+    assert len(fire_times) == 4  # 3 failures + the success
+    gaps = [b - a for a, b in zip(fire_times, fire_times[1:])]
+    # backoff 2^1, 2^2, then capped at 4.0 (tick grid is 0.5s)
+    assert gaps[0] == pytest.approx(2.0, abs=0.5)
+    assert gaps[1] == pytest.approx(4.0, abs=0.5)
+    assert gaps[2] == pytest.approx(4.0, abs=0.5)
+    # the failed attempts are in the audit log, marked failed
+    failed = [a for a in eng.actions if a.action == RUNG_DRAIN and not a.ok]
+    assert len(failed) == 3
+    assert eng.rung_of("rank1") >= 1  # success landed the rung (and may escalate on)
+
+
+def test_raising_hook_counts_as_failure():
+    clock = Clock()
+
+    def boom(target, reason):
+        raise RuntimeError("effector exploded")
+
+    eng = mk_engine(clock, escalate=boom)
+    acts = flag_and_tick(eng, clock, n=1)
+    assert len(acts) == 1 and not acts[0].ok
+    assert eng.rung_of("rank1") == -1  # rung not taken
+
+
+# ---------------------------------------------------------------------------
+# hysteresis / de-escalation
+# ---------------------------------------------------------------------------
+
+
+def test_healthy_windows_deescalate_one_rung_at_a_time():
+    clock = Clock()
+    restore = Recorder()
+    eng = mk_engine(clock, restore=restore, healthy_windows=3)
+    flag_and_tick(eng, clock, n=4)  # escalate + drain (rung 1)
+    assert eng.rung_of("rank1") == 1
+    acts = []
+    for _ in range(6):
+        eng.observe_healthy("rank1")
+        acts += eng.tick(clock.advance(1.0))
+    assert [a.action for a in acts] == ["deescalate", "recover"]
+    assert eng.rung_of("rank1") == -1
+    assert restore.calls == [("rank1", "recovered")]
+
+
+def test_flag_resets_healthy_streak():
+    clock = Clock()
+    eng = mk_engine(clock, healthy_windows=3)
+    flag_and_tick(eng, clock, n=1)
+    for _ in range(4):  # healthy, healthy, flag, healthy... never 3 in a row
+        eng.observe_healthy("rank1")
+        eng.tick(clock.advance(1.0))
+        eng.observe_healthy("rank1")
+        eng.tick(clock.advance(1.0))
+        flag_and_tick(eng, clock, n=1)
+    assert eng.rung_of("rank1") == 0  # never de-escalated
+
+
+# ---------------------------------------------------------------------------
+# dry-run mode
+# ---------------------------------------------------------------------------
+
+
+def test_dry_run_never_invokes_hooks_but_logs_everything():
+    clock = Clock()
+    eng = mk_engine(clock, dry_run=True)
+    acts = flag_and_tick(eng, clock, n=10)
+    names = [a.action for a in acts]
+    # dry-run skips the drained gate, so the advisory ladder reaches evict
+    assert RUNG_ESCALATE in names and RUNG_DRAIN in names and RUNG_EVICT in names
+    assert all(a.dry_run for a in acts)
+    assert not eng.hooks.escalate.calls
+    assert not eng.hooks.drain.calls
+    assert not eng.hooks.evict.calls
+    assert eng.evicted == ()  # advisory eviction doesn't remove anyone
+
+
+def test_missing_hook_is_advisory_and_ladder_progresses():
+    clock = Clock()
+    eng = RemediationEngine(None, clock=clock, cooldown_s=1.0, escalate_after=1)
+    acts = flag_and_tick(eng, clock, n=5)
+    assert [a.action for a in acts] == [RUNG_ESCALATE, RUNG_DRAIN, RUNG_EVICT]
+    assert all(a.ok for a in acts)
+
+
+# ---------------------------------------------------------------------------
+# traced decisions
+# ---------------------------------------------------------------------------
+
+
+def test_every_decision_is_a_trace_event(tmp_path):
+    from repro.core import TraceConfig, Tracer
+    from repro.core.babeltrace import CTFSource
+
+    clock = Clock()
+    out = str(tmp_path / "trace")
+    with Tracer(TraceConfig(out_dir=out, mode="default")) as tr:
+        eng = mk_engine(clock, dry_run=True).attach(tr)
+        flag_and_tick(eng, clock, n=10)
+        n_actions = len(eng.actions)
+    evs = [e for e in CTFSource(out) if e.name == "ust_repro:remediation"]
+    assert n_actions > 0 and len(evs) == n_actions
+
+
+def test_on_action_callback_sees_every_action():
+    clock = Clock()
+    seen = []
+    eng = mk_engine(clock, on_action=seen.append)
+    flag_and_tick(eng, clock, n=8)
+    assert seen == eng.actions
+
+
+# ---------------------------------------------------------------------------
+# engine parameter validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {"cooldown_s": 0.0},
+        {"cooldown_s": 2.0, "backoff_cap_s": 1.0},
+        {"escalate_after": 0},
+        {"healthy_windows": 0},
+    ],
+)
+def test_engine_rejects_bad_params(kw):
+    with pytest.raises(ValueError):
+        RemediationEngine(None, **kw)
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec / FaultInjector
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_parse_roundtrip():
+    s = FaultSpec.parse("slowdown:rank=1,after=10,factor=8")
+    assert (s.kind, s.rank, s.after, s.factor) == ("slowdown", 1, 10, 8.0)
+    assert FaultSpec.parse(s.render()) == s
+    multi = parse_fault_specs("kill:rank=2,after=5; drop:after=3,p=0.5")
+    assert [m.kind for m in multi] == ["kill", "drop"]
+
+
+@pytest.mark.parametrize(
+    "text",
+    ["", "frobnicate:rank=1", "slowdown:p=1.5", "slowdown:factor=0", "slowdown:nope"],
+)
+def test_fault_spec_rejects_bad_input(text):
+    with pytest.raises(ValueError):
+        FaultSpec.parse(text)
+
+
+def test_fault_spec_window():
+    s = FaultSpec(FaultKind.HANG, after=5, duration=3)
+    assert [s.active_at(i) for i in range(4, 9)] == [False, True, True, True, False]
+
+
+def test_injector_is_rank_scoped_and_deterministic():
+    specs = parse_fault_specs("slowdown:rank=1,after=2,factor=5;kill:rank=0,after=7")
+    r0 = FaultInjector(specs, rank=0, seed=42)
+    r1 = FaultInjector(specs, rank=1, seed=42)
+    # rank 0 never slows, dies at 7; rank 1 slows from 2, never dies
+    assert [r0.sleep_s(i, 0.01) for i in range(10)] == [0.0] * 10
+    assert [i for i in range(10) if r0.should_die(i)] == [7, 8, 9]
+    sleeps = [r1.sleep_s(i, 0.01) for i in range(10)]
+    assert sleeps[2] == pytest.approx(0.04)
+    assert not any(r1.should_die(i) for i in range(10))
+    # same seed and same call pattern → identical fault log
+    r1b = FaultInjector(specs, rank=1, seed=42)
+    assert [r1b.sleep_s(i, 0.01) for i in range(10)] == sleeps
+    [r1b.should_die(i) for i in range(10)]
+    assert r1b.log == r1.log
+    assert r0.fired("kill") == 3 and r1.fired("slowdown") > 0
+
+
+def test_probabilistic_fault_reproducible_per_seed():
+    spec = (FaultSpec(FaultKind.DROP, p=0.5),)
+    a = FaultInjector(spec, rank=0, seed=7)
+    b = FaultInjector(spec, rank=0, seed=7)
+    c = FaultInjector(spec, rank=0, seed=8)
+    sched_a = [a.should_drop_connection(i) for i in range(50)]
+    sched_b = [b.should_drop_connection(i) for i in range(50)]
+    sched_c = [c.should_drop_connection(i) for i in range(50)]
+    assert sched_a == sched_b
+    assert sched_a != sched_c  # astronomically unlikely to collide
+    assert 5 < sum(sched_a) < 45  # p=0.5 actually samples
+
+
+def test_mangle_frame_corrupt_and_truncate():
+    payload = bytes(range(64))
+    cor = FaultInjector((FaultSpec(FaultKind.CORRUPT),), rank=0, seed=1)
+    out = cor.mangle_frame(payload, 0)
+    assert len(out) == len(payload) and out != payload
+    assert sum(1 for x, y in zip(out, payload) if x != y) == 1  # one byte flipped
+    tru = FaultInjector((FaultSpec(FaultKind.TRUNCATE),), rank=0, seed=1)
+    out = tru.mangle_frame(payload, 0)
+    assert 1 <= len(out) < len(payload)
+    # healthy injector passes payloads through untouched
+    clean = FaultInjector((), rank=0, seed=1)
+    assert clean.mangle_frame(payload, 0) == payload
+
+
+# ---------------------------------------------------------------------------
+# SickHostPolicy (telemetry-evidence flagging)
+# ---------------------------------------------------------------------------
+
+
+def _controller_with(policy, flags):
+    return ClusterAdaptiveController(
+        [policy],
+        period_s=0.0,
+        on_flag=lambda s, k, d: flags.append((s, k, d)),
+    )
+
+
+def _observe(ctl, ranks, telemetry, now):
+    ctl.observe(ranks, now, telemetry=telemetry)
+
+
+def test_sick_host_policy_flags_device_memory_pressure():
+    from repro.core.plugins.tally import ApiStat, Tally
+
+    def mk():
+        t = Tally()
+        st = ApiStat()
+        st.add(1000)
+        t.apis[("ust_repro", "train_step")] = st
+        return t
+
+    flags = []
+    pol = SickHostPolicy(patience=2)
+    ctl = _controller_with(pol, flags)
+    ranks = {"rank0": mk(), "rank1": mk()}
+    telem = {
+        "rank0": {"mem_in_use": 10, "mem_limit": 100, "host_rss": 100},
+        "rank1": {"mem_in_use": 99, "mem_limit": 100, "host_rss": 100},
+    }
+    for i in range(3):
+        _observe(ctl, ranks, telem, float(i))
+    assert any(s == "rank1" and k == "sick-host" for s, k, _ in flags)
+    assert "rank1" in pol.flagged
+    # recovery: pressure drops → flag re-arms with an advisory
+    telem["rank1"]["mem_in_use"] = 10
+    _observe(ctl, ranks, telem, 4.0)
+    assert "rank1" not in pol.flagged
+
+
+def test_sick_host_policy_needs_quorum_and_patience():
+    pol = SickHostPolicy(patience=3, min_ranks=2)
+    flags = []
+    ctl = _controller_with(pol, flags)
+    bad = {"rank0": {"mem_in_use": 99, "mem_limit": 100}}
+    _observe(ctl, {}, bad, 0.0)  # one rank: below quorum
+    assert not flags and not pol._strikes

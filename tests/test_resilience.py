@@ -1,0 +1,320 @@
+"""Failure-path hardening: checkpoint damage, async-commit errors, daemon
+survival, late masters, telemetry forwarding, and trainer drain."""
+
+import json
+import os
+import socket
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_checkpoint, list_checkpoints
+from repro.configs import get_config
+from repro.core.plugins.tally import ApiStat, Tally
+from repro.core.stream import MasterServer, SnapshotStreamer, StreamClient
+from repro.core.telemetry import TelemetryDaemon
+from repro.jaxcompat import make_mesh
+from repro.models import Model, ShapeSpec
+from repro.sharding import Partitioner
+from repro.train import TrainConfig, Trainer, TrainerConfig
+
+
+def mk_tally(ns=1000):
+    t = Tally()
+    st = ApiStat()
+    st.add(ns)
+    t.apis[("ust_repro", "train_step")] = st
+    return t
+
+
+# ---------------------------------------------------------------------------
+# checkpoint damage tolerance
+# ---------------------------------------------------------------------------
+
+
+def _save_steps(root, steps):
+    ck = Checkpointer(str(root), keep=10)
+    tree = {"w": jnp.arange(8.0)}
+    for s in steps:
+        ck.save(s, tree, extra={"steps_done": s})
+    return ck
+
+
+def test_list_checkpoints_newest_first(tmp_path):
+    _save_steps(tmp_path, [2, 10, 6])
+    names = [os.path.basename(p) for p in list_checkpoints(str(tmp_path))]
+    assert names == ["step_10", "step_6", "step_2"]
+    assert latest_checkpoint(str(tmp_path)).endswith("step_10")
+    assert list_checkpoints(str(tmp_path / "nowhere")) == []
+
+
+def test_latest_checkpoint_skips_corrupt_manifest(tmp_path):
+    _save_steps(tmp_path, [4, 8])
+    with open(tmp_path / "step_8" / "manifest.json", "w") as f:
+        f.write("{this is not json")
+    assert latest_checkpoint(str(tmp_path)).endswith("step_4")
+
+
+def test_latest_checkpoint_skips_truncated_leaf(tmp_path):
+    _save_steps(tmp_path, [4, 8])
+    man = json.load(open(tmp_path / "step_8" / "manifest.json"))
+    leaf = tmp_path / "step_8" / man["leaves"][0]["file"]
+    leaf.write_bytes(leaf.read_bytes()[:10])
+    assert latest_checkpoint(str(tmp_path)).endswith("step_4")
+
+
+def test_latest_checkpoint_skips_missing_leaf(tmp_path):
+    _save_steps(tmp_path, [4, 8])
+    man = json.load(open(tmp_path / "step_8" / "manifest.json"))
+    os.remove(tmp_path / "step_8" / man["leaves"][0]["file"])
+    assert latest_checkpoint(str(tmp_path)).endswith("step_4")
+    # all checkpoints damaged → None, not an exception
+    os.remove(tmp_path / "step_4" / "manifest.json")
+    assert latest_checkpoint(str(tmp_path)) is None
+
+
+def test_restore_still_validates_crc(tmp_path):
+    """list_checkpoints is structural only — bit rot is caught by restore."""
+    ck = _save_steps(tmp_path, [4])
+    man = json.load(open(tmp_path / "step_4" / "manifest.json"))
+    leaf = tmp_path / "step_4" / man["leaves"][0]["file"]
+    raw = bytearray(leaf.read_bytes())
+    raw[-1] ^= 0xFF  # flip payload byte; size unchanged → structurally valid
+    leaf.write_bytes(bytes(raw))
+    path = latest_checkpoint(str(tmp_path))
+    assert path.endswith("step_4")
+    with pytest.raises(ValueError, match="integrity"):
+        ck.restore(path, {"w": jnp.zeros(8)})
+
+
+# ---------------------------------------------------------------------------
+# async-commit error surfacing
+# ---------------------------------------------------------------------------
+
+
+def _broken_writer(ck, monkeypatch):
+    def boom(step, host_leaves, extra):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ck, "_write", boom)
+
+
+def test_save_async_error_surfaces_from_wait(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path))
+    _broken_writer(ck, monkeypatch)
+    ck.save_async(1, {"a": np.zeros(4)})
+    with pytest.raises(RuntimeError, match="async checkpoint failed"):
+        ck.wait()
+    ck.wait()  # error is consumed, not raised forever
+
+
+def test_save_async_error_surfaces_from_next_save(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path))
+    _broken_writer(ck, monkeypatch)
+    ck.save_async(1, {"a": np.zeros(4)})
+    while ck._pending.is_alive():
+        time.sleep(0.01)
+    monkeypatch.undo()
+    with pytest.raises(RuntimeError, match="async checkpoint failed"):
+        ck.save(2, {"a": np.zeros(4)})
+    # the checkpointer remains usable after surfacing the failure
+    path = ck.save(3, {"a": np.zeros(4)})
+    assert path.endswith("step_3")
+
+
+def test_save_async_error_surfaces_from_next_save_async(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path))
+    _broken_writer(ck, monkeypatch)
+    ck.save_async(1, {"a": np.zeros(4)})
+    while ck._pending.is_alive():
+        time.sleep(0.01)
+    monkeypatch.undo()
+    with pytest.raises(RuntimeError, match="async checkpoint failed"):
+        ck.save_async(2, {"a": np.zeros(4)})
+
+
+# ---------------------------------------------------------------------------
+# telemetry daemon survives bad samples
+# ---------------------------------------------------------------------------
+
+
+def test_daemon_survives_failing_sample():
+    calls = {"n": 0}
+
+    def record(*a):
+        calls["n"] += 1
+        if calls["n"] <= 3:
+            raise OSError("transient /proc failure")
+
+    d = TelemetryDaemon(record, period_s=0.005)
+    d.start()
+    deadline = time.monotonic() + 5.0
+    while (d.sample_errors < 3 or d.samples < 2) and time.monotonic() < deadline:
+        time.sleep(0.01)
+    d.stop()
+    assert d.sample_errors >= 3  # failures counted...
+    assert d.samples >= 2  # ...and the loop kept sampling afterwards
+    assert d.last  # the good samples refreshed the snapshot
+
+
+# ---------------------------------------------------------------------------
+# streamer initial-connect retry
+# ---------------------------------------------------------------------------
+
+
+def _free_port():
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def test_streamer_default_is_fail_fast():
+    sr = SnapshotStreamer(("127.0.0.1", _free_port()), "r0", timeout_s=0.5)
+    t0 = time.monotonic()
+    assert sr.push(mk_tally()) is False
+    assert time.monotonic() - t0 < 2.0
+    assert sr.dropped == 1
+    sr.close()
+
+
+def test_streamer_retries_until_master_arrives():
+    port = _free_port()
+    box = {}
+
+    def late_master():
+        time.sleep(0.4)
+        box["master"] = MasterServer(port=port).start()
+
+    th = threading.Thread(target=late_master, daemon=True)
+    th.start()
+    sr = SnapshotStreamer(
+        ("127.0.0.1", port), "r0", connect_retries=40, connect_backoff_s=0.05
+    )
+    try:
+        assert sr.push(mk_tally()) is True  # blocked through the gap, then landed
+        th.join()
+        deadline = time.monotonic() + 5.0
+        while "r0" not in box["master"].ranks() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert "r0" in box["master"].ranks()
+    finally:
+        sr.close()
+        th.join()
+        box["master"].stop()
+
+
+def test_streamer_rejects_bad_retry_params():
+    with pytest.raises(ValueError):
+        SnapshotStreamer(("127.0.0.1", 1), "r0", connect_retries=-1)
+    with pytest.raises(ValueError):
+        SnapshotStreamer(("127.0.0.1", 1), "r0", connect_backoff_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# telemetry forwarding: submit → master.telemetry() → StreamClient meta
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_rides_frames_end_to_end():
+    master = MasterServer(port=0).start()
+    try:
+        telem = {"mem_in_use": 9, "mem_limit": 100, "host_rss": 1234}
+        master.submit("rank0", mk_tally(), telemetry=telem)
+        master.submit("rank1", mk_tally())
+        assert master.telemetry() == {"rank0": telem}
+        ranks, meta = StreamClient(master.addr).ranks()
+        assert set(ranks) == {"rank0", "rank1"}
+        assert meta["telemetry"]["rank0"]["host_rss"] == 1234
+        assert "rank1" not in meta["telemetry"]
+    finally:
+        master.stop()
+
+
+def test_telemetry_push_is_never_elided():
+    master = MasterServer(port=0).start()
+    sr = SnapshotStreamer(master.addr, "r0")
+    try:
+        t = mk_tally()
+        assert sr.push(t, skip_unchanged=True)
+        deadline = time.monotonic() + 5.0
+        while sr.peer_version is None and time.monotonic() < deadline:
+            sr.poll_control()  # deltas (and elision) start after hello_ack
+            time.sleep(0.02)
+        assert sr.push(t, skip_unchanged=True)  # unchanged → elided
+        assert sr.skipped == 1
+        assert sr.push(t, skip_unchanged=True, telemetry={"host_rss": 7})
+        assert sr.skipped == 1  # telemetry forces the frame out
+        deadline = time.monotonic() + 5.0
+        while not master.telemetry() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert master.telemetry().get("r0") == {"host_rss": 7}
+    finally:
+        sr.close()
+        master.stop()
+
+
+# ---------------------------------------------------------------------------
+# trainer: checkpoint-and-drain + damaged-checkpoint restore fallback
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def smoke_model(mesh):
+    return Model(get_config("stablelm-3b").smoke(), mesh)
+
+
+SHAPE = ShapeSpec("t", "train", 32, 4)
+
+
+def mk_trainer(smoke_model, mesh, tmp, steps=8, **kw):
+    return Trainer(
+        smoke_model,
+        SHAPE,
+        Partitioner(mesh),
+        TrainConfig(peak_lr=5e-3, warmup=2, total_steps=100),
+        TrainerConfig(steps=steps, ckpt_every=4, ckpt_dir=str(tmp), **kw),
+    )
+
+
+def test_drain_midrun_checkpoints_and_stops(smoke_model, mesh, tmp_path):
+    t = mk_trainer(smoke_model, mesh, tmp_path / "d", steps=20)
+    drained_at = []
+    t.on_drain.append(lambda: drained_at.append(t.step))
+    orig = t.step_fn
+
+    class DrainAt3:
+        def __call__(self, state, batch):
+            if t.step == 3:
+                t.request_drain()
+            return orig(state, batch)
+
+    t.step_fn = DrainAt3()
+    res = t.run()
+    assert res["drained"] is True
+    assert res["steps_run"] < 20  # stopped early
+    path = latest_checkpoint(str(tmp_path / "d"))
+    assert path is not None and path.endswith(f"step_{t.step}")
+    assert drained_at == [t.step]  # on_drain fired exactly once, at the drain step
+    # a successor picks up exactly where the drain left off
+    t2 = mk_trainer(smoke_model, mesh, tmp_path / "d", steps=t.step + 2)
+    res2 = t2.run()
+    assert res2["steps_run"] == 2 and res2["drained"] is False
+
+
+def test_restore_falls_back_over_damaged_checkpoint(smoke_model, mesh, tmp_path):
+    mk_trainer(smoke_model, mesh, tmp_path / "r", steps=8).run()  # step_4, step_8
+    with open(tmp_path / "r" / "step_8" / "manifest.json", "w") as f:
+        f.write("garbage")
+    t = mk_trainer(smoke_model, mesh, tmp_path / "r", steps=8)
+    t.run()
+    assert t.step == 8  # resumed from step_4 and re-ran 4..8

@@ -336,7 +336,9 @@ def run_live(args) -> int:
 # ---------------------------------------------------------------------------
 
 
-def chaos_worker(rank, out_dir, addr, quota, ctl_dir, fault, seed):
+def chaos_worker(
+    rank, out_dir, addr, quota, ctl_dir, fault, seed, incarnation=0, src=None, ckpt=None
+):
     """One chaos rank: traced step loop with a deterministic FaultInjector,
     periodic (async) checkpoints of its progress, and a control-file channel
     the driver's remediation hooks use to escalate / drain it.
@@ -344,23 +346,35 @@ def chaos_worker(rank, out_dir, addr, quota, ctl_dir, fault, seed):
     Commands (one per line, appended to ``ctl/rank<r>.cmd``):
       * ``escalate``  — climb the fidelity ladder (sampled → full);
       * ``drain``     — commit a durable checkpoint, ack, exit cleanly;
-      * ``extra:N``   — the re-mesh dealt this rank N orphaned steps;
+      * ``extra:N``   — the re-mesh dealt this rank N orphaned steps; a
+                        *negative* N is the splice clawing re-dealt work
+                        back for a replacement — the worker returns only
+                        what it has not already finished (clamped at
+                        ``done``) and acks ``clawed:<returned>:<target>``;
       * ``finish``    — run is over, exit.
 
     A rank that reaches its quota idles on cheap heartbeat steps (so
     cross-rank windows keep existing — a straggler only lags relative to
     *active* peers) until the driver says ``finish`` or deals it more work.
+
+    With ``incarnation > 0`` this worker is an elastic *replacement*: it
+    resumes ``done`` from the newest checkpoint in ``ckpt`` (its dead
+    predecessor's drain point) and streams under the predecessor's source
+    id ``src`` with the new incarnation — the master atomically swaps the
+    per-source state on its first frame and fences the dead incarnation.
     """
+    import json
+
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.checkpoint import Checkpointer
+    from repro.checkpoint import Checkpointer, latest_checkpoint
     from repro.core import traced_jit, train_step_span
     from repro.core.faults import FaultInjector, parse_fault_specs
 
     base_step_s = 0.04
     inj = FaultInjector(parse_fault_specs(fault) if fault else [], rank=rank, seed=seed)
-    ck = Checkpointer(os.path.join(out_dir, "ckpt"), keep=2)
+    ck = Checkpointer(ckpt or os.path.join(out_dir, "ckpt"), keep=2)
     cmd_path = os.path.join(ctl_dir, f"rank{rank}.cmd")
     ack_path = os.path.join(ctl_dir, f"rank{rank}.ack")
 
@@ -371,6 +385,12 @@ def chaos_worker(rank, out_dir, addr, quota, ctl_dir, fault, seed):
     f = traced_jit(lambda x: (x * x).sum(), name="square_sum")
     x = jnp.arange(64.0) + rank
     done, target, cmds_seen, idle_acked = 0, quota, 0, -1
+    if incarnation:
+        path = latest_checkpoint(ck.root)
+        if path is not None:
+            with open(os.path.join(path, "manifest.json")) as fh:
+                done = int(json.load(fh)["extra"]["steps_done"])
+        ack(f"restored:{done}:{incarnation}")
     cfg = TraceConfig(
         out_dir=out_dir,
         mode="default",
@@ -380,6 +400,8 @@ def chaos_worker(rank, out_dir, addr, quota, ctl_dir, fault, seed):
         aggregate_only=True,
         stream_to=addr,
         stream_period_s=0.1,
+        stream_source=src,
+        stream_incarnation=incarnation,
     )
     with Tracer(cfg) as tr:
         while True:
@@ -400,8 +422,15 @@ def chaos_worker(rank, out_dir, addr, quota, ctl_dir, fault, seed):
                     ack(f"drained:{done}")
                     return  # quiesced: Tracer exit flushes the final aggregate
                 elif ln.startswith("extra:"):
-                    target += int(ln.split(":", 1)[1])
-                    ack(f"extra:{target}")
+                    delta = int(ln.split(":", 1)[1])
+                    if delta < 0:
+                        # splice claw-back: finished work is never returned
+                        old = target
+                        target = max(done, target + delta)
+                        ack(f"clawed:{old - target}:{target}")
+                    else:
+                        target += delta
+                        ack(f"extra:{target}")
                 elif ln == "finish":
                     finish = True
             if finish:
@@ -445,6 +474,7 @@ def run_chaos(args) -> int:
         RUNG_DRAIN,
         RUNG_ESCALATE,
         RUNG_EVICT,
+        RUNG_REPLACE,
         ClusterAdaptiveController,
         MasterServer,
         RemediationEngine,
@@ -454,6 +484,9 @@ def run_chaos(args) -> int:
     )
     from repro.core.aggregate import combine_aggregates, find_aggregates
     from repro.core.babeltrace import CTFSource
+    from repro.core.plugins.tally import ApiStat, Tally
+    from repro.core.stream import SnapshotStreamer
+    from repro.launch.elastic import ReplacementManager, WorkerSupervisor
     from repro.launch.mesh import plan_eviction
 
     nranks, quota = args.chaos_ranks, args.chaos_steps
@@ -465,6 +498,7 @@ def run_chaos(args) -> int:
         f"[chaos] master {master.addr}; {nranks} ranks × {quota} steps; "
         f"fault={args.inject_fault or 'none'}"
         + (" (dry-run: advisory only)" if args.chaos_dry_run else "")
+        + (" (elastic: replace instead of evict)" if args.chaos_replace else "")
     )
 
     procs = {}
@@ -513,7 +547,10 @@ def run_chaos(args) -> int:
     # -- remediation hooks: the ladder's rungs, driver-side -----------------------
     drained_steps = {}
     evicted = []
+    replaced = set()
     extras = {r: 0 for r in range(nranks)}
+    dealt_record = {}  # rank → deal_shares at its eviction/replacement
+    out_dirs = {r: os.path.join(root, f"r{r}") for r in range(nranks)}
 
     def hk_escalate(target, detail):
         _send(_rank_of(target), "escalate")
@@ -548,6 +585,12 @@ def run_chaos(args) -> int:
                 procs[r].wait()
         evicted.append(r)
         plan = plan_eviction(nranks, evicted)
+        if r in dealt_record:
+            # replace rung already dealt this rank's remainder before its
+            # spawn chain failed; evicting must not deal it twice
+            print(f"[chaos] re-mesh: survivors {plan.survivors} (work already "
+                  f"dealt by the failed replace: {dealt_record[r]})")
+            return True
         remaining = quota - drained_steps.get(r, 0)
         shares = plan.reassign({r: remaining})
         for s, extra in shares.items():
@@ -560,14 +603,99 @@ def run_chaos(args) -> int:
         )
         return True
 
+    # -- elastic replacement (the ``replace`` rung, --chaos-replace) --------------
+    def _spawn_replacement(r, inc):
+        """Launch incarnation ``inc`` of rank ``r``: fresh trace dir, the
+        predecessor's checkpoint root and source id, the drained step count
+        as its base quota (the splice claw-back arrives as ``extra:`` later)."""
+        out = os.path.join(root, f"r{r}.i{inc}")
+        cmd = [
+            sys.executable,
+            os.path.abspath(__file__),
+            "--chaos-worker", str(r),
+            "--chaos-out", out,
+            "--chaos-addr", master.addr,
+            "--chaos-ctl", ctl,
+            "--chaos-quota", str(drained_steps.get(r, 0)),
+            "--chaos-seed", str(args.chaos_seed),
+            "--chaos-incarnation", str(inc),
+            "--chaos-src", rank_source[r],
+            "--chaos-ckpt", os.path.join(root, f"r{r}", "ckpt"),
+        ]
+        p = subprocess.Popen(cmd, env=dict(os.environ))
+        procs[r] = p
+        out_dirs[r] = out
+        return p
+
+    supervisor = WorkerSupervisor(_spawn_replacement)
+    for r, p in procs.items():
+        supervisor.register(r, p, incarnation=0)
+    manager = ReplacementManager(
+        supervisor,
+        ckpt_root_for=lambda r: os.path.join(root, f"r{r}", "ckpt"),
+        # admitted = the master has ingested a frame from the new incarnation
+        # (the atomic per-source swap has happened; the fence is live)
+        ready=lambda r, inc: master.incarnation_of(rank_source.get(r, "")) >= inc,
+        ready_timeout_s=30.0,
+        spawn_retries=1,
+        on_event=lambda a, t, d, ok: engine.note(a, t, d, ok),
+    )
+
+    def hk_replace(target, detail):
+        r = _rank_of(target)
+        if rank_source.get(r) is None or r not in drained_steps:
+            return False  # source id / drain point not known yet; ladder retries
+        d = drained_steps[r]
+        plan = plan_eviction(nranks, [r])
+        if r not in dealt_record:
+            # deal the dead rank's remainder out NOW so survivors keep
+            # working while the replacement spawns; the splice claws the
+            # un-done part back
+            dealt_record[r] = plan.deal_shares(r, quota - d)
+            for s, n in dealt_record[r].items():
+                extras[s] += n
+                _send(s, f"extra:{n}")
+            print(
+                f"[chaos] replace: {quota - d} orphaned steps dealt "
+                f"{dealt_record[r]} while the replacement spawns", flush=True
+            )
+        res = manager.replace(r, plan, dealt_record[r], reason=detail, target=target)
+        if not res.ok:
+            return False  # engine retries, then falls through to evict
+        returned = 0
+        for s, g in res.giveback.items():
+            _send(s, f"extra:-{g}")
+        for s, g in res.giveback.items():
+            ln = _wait_ack(s, "clawed:")
+            got = int(ln.split(":")[1]) if ln else 0
+            extras[s] -= got
+            returned += got
+        extras[r] = (d + returned) - quota
+        if returned:
+            _send(r, f"extra:{returned}")
+        replaced.add(r)
+        print(
+            f"[chaos] replacement rank {r} incarnation {res.incarnation} admitted "
+            f"at step {d}; survivors returned {returned} un-done steps; "
+            f"mesh back to {len(res.plan.survivors)}/{nranks} ranks", flush=True
+        )
+        return True
+
     actions = []
     engine = RemediationEngine(
-        RemediationHooks(escalate=hk_escalate, drain=hk_drain, evict=hk_evict),
+        RemediationHooks(
+            escalate=hk_escalate,
+            drain=hk_drain,
+            replace=hk_replace if args.chaos_replace else None,
+            evict=hk_evict,
+        ),
         cooldown_s=0.4,
         escalate_after=2,
         healthy_windows=4,
         dry_run=args.chaos_dry_run,
         max_evictions=1,
+        max_replacements=1,
+        replace_retries=2,
         on_action=lambda a: (actions.append(a), print(f"[chaos] {a}", flush=True)),
     )
     straggler = StragglerRankPolicy(
@@ -614,7 +742,12 @@ def run_chaos(args) -> int:
                     engine.ingest_flag(src, "dead", f"exit {p.poll()}")
                 if r in hung and r not in evicted:
                     engine.ingest_flag(src, "hung", "no step progress")
-                if r in drained_steps and r not in evicted and not args.chaos_dry_run:
+                if (
+                    r in drained_steps
+                    and r not in evicted
+                    and r not in replaced
+                    and not args.chaos_dry_run
+                ):
                     engine.ingest_flag(src, "drained", "awaiting eviction")
             engine.tick()
             # done when every non-evicted rank is idle at its (possibly
@@ -635,7 +768,11 @@ def run_chaos(args) -> int:
                 idle = [ln for ln in _acks(r) if ln.startswith("idle:")]
                 if not (idle and int(idle[-1].split(":")[1]) >= want):
                     settled = False
-            if fault_kind and not args.chaos_dry_run and not evicted:
+            if args.chaos_replace:
+                # replace mode settles on a successful splice, not an eviction
+                if not replaced:
+                    settled = False
+            elif fault_kind and not args.chaos_dry_run and not evicted:
                 settled = False
             if fault_kind and args.chaos_dry_run and not any(
                 a.action == RUNG_EVICT and a.dry_run for a in actions
@@ -690,7 +827,7 @@ def run_chaos(args) -> int:
     # aggregates (a killed rank never flushes one — noted and skipped);
     # final frames flush at worker exit, so give them a moment to land
     for r in range(nranks):
-        aggs = find_aggregates(os.path.join(root, f"r{r}"))
+        aggs = find_aggregates(out_dirs[r])
         src = rank_source.get(r)
         if not aggs:
             print(f"[chaos] rank {r}: no offline aggregate (died mid-run), skipped")
@@ -712,6 +849,52 @@ def run_chaos(args) -> int:
             print(f"[chaos] OK: rank {r} live state == offline aggregate")
         else:
             print(f"[chaos] FAIL: rank {r} live state != offline aggregate",
+                  file=sys.stderr)
+            ok = False
+
+    # (2b) elastic fencing: final healthy rank count, then a zombie frame —
+    # the dead incarnation speaking up late with a poison row under the old
+    # incarnation number — which the master must fence (fence_rejects > 0)
+    # and whose row must never reach the composite
+    if args.chaos_replace:
+        healthy = sum(
+            1 for r, p in procs.items() if r not in evicted and p.poll() == 0
+        )
+        if healthy == nranks and replaced and not evicted:
+            print(f"[chaos] OK: {healthy}/{nranks} ranks healthy at exit "
+                  f"(rank {sorted(replaced)[0]} replaced in place, no eviction)")
+        else:
+            print(f"[chaos] FAIL: {healthy}/{nranks} healthy ranks "
+                  f"(replaced={sorted(replaced)}, evicted={evicted})",
+                  file=sys.stderr)
+            ok = False
+        poison = Tally()
+        poison.apis[("ust_zombie", "poison")] = ApiStat(
+            calls=1, total_ns=10**12, min_ns=10**12, max_ns=10**12
+        )
+        fenced = 0
+        deadline = time.time() + 10.0
+        while time.time() < deadline and replaced:
+            src = rank_source[sorted(replaced)[0]]
+            z = SnapshotStreamer(master.addr, source=src, delta=False)
+            try:
+                z.push(poison)  # hello carries incarnation 0 < live: fenced
+            except Exception:
+                pass
+            finally:
+                z.close()
+            fenced = master.stats()["fence_rejects"]
+            if fenced:
+                break
+            time.sleep(0.2)
+        poisoned = any(
+            ("ust_zombie", "poison") in t.apis for t in master.ranks().values()
+        ) or ("ust_zombie", "poison") in master.composite().apis
+        if fenced > 0 and not poisoned:
+            print(f"[chaos] OK: zombie fenced (fence_rejects={fenced}), "
+                  "poison row absent from the composite")
+        else:
+            print(f"[chaos] FAIL: fence_rejects={fenced}, poisoned={poisoned}",
                   file=sys.stderr)
             ok = False
 
@@ -737,6 +920,27 @@ def run_chaos(args) -> int:
                 print("[chaos] OK: dry-run — full ladder advised, nothing touched")
             else:
                 print("[chaos] FAIL: dry-run had side effects", file=sys.stderr)
+                ok = False
+        elif args.chaos_replace:
+            want_rungs = [RUNG_ESCALATE, RUNG_DRAIN, RUNG_REPLACE]
+            if (
+                all(w in names for w in want_rungs)
+                and names.index(RUNG_DRAIN) < names.index(RUNG_REPLACE)
+                and RUNG_EVICT not in names
+                and "replace_admit" in names
+            ):
+                print("[chaos] OK: ladder walked "
+                      f"{' → '.join(w for w in want_rungs)} "
+                      "(drain before replace, no eviction)")
+            else:
+                print(f"[chaos] FAIL: ladder order wrong: {names}", file=sys.stderr)
+                ok = False
+            if engine.replacements == 1 and manager.admitted == 1:
+                print(f"[chaos] OK: 1 replacement admitted "
+                      f"({manager.spawned} spawn attempt(s)), work clawed back")
+            else:
+                print(f"[chaos] FAIL: replacements={engine.replacements}, "
+                      f"admitted={manager.admitted}", file=sys.stderr)
                 ok = False
         else:
             want_rungs = [RUNG_ESCALATE, RUNG_DRAIN, RUNG_EVICT]
@@ -815,6 +1019,13 @@ def main():
         help="remediation engine advises only: every decision is traced, no "
         "hook runs, nothing is drained or evicted",
     )
+    ap.add_argument(
+        "--chaos-replace",
+        action="store_true",
+        help="elastic mode: the remediation ladder replaces the failed rank "
+        "(spawn + restore + splice) instead of shrinking the mesh; pair "
+        "with a kill fault, e.g. --inject-fault 'kill:rank=1,after=8'",
+    )
     ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--chaos-timeout", type=float, default=120.0)
     ap.add_argument("--chaos-worker", type=int, default=None, help=argparse.SUPPRESS)
@@ -823,6 +1034,11 @@ def main():
     ap.add_argument("--chaos-ctl", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--chaos-quota", type=int, default=0, help=argparse.SUPPRESS)
     ap.add_argument("--chaos-fault", default=None, help=argparse.SUPPRESS)
+    ap.add_argument(
+        "--chaos-incarnation", type=int, default=0, help=argparse.SUPPRESS
+    )
+    ap.add_argument("--chaos-src", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--chaos-ckpt", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
 
     if args.chaos_worker is not None:
@@ -834,6 +1050,9 @@ def main():
             args.chaos_ctl,
             args.chaos_fault,
             args.chaos_seed,
+            incarnation=args.chaos_incarnation,
+            src=args.chaos_src,
+            ckpt=args.chaos_ckpt,
         )
         return
     if args.chaos:

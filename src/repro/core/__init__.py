@@ -59,6 +59,7 @@ from .remediation import (  # noqa: F401
     RUNG_DRAIN,
     RUNG_ESCALATE,
     RUNG_EVICT,
+    RUNG_REPLACE,
     RemediationAction,
     RemediationEngine,
     RemediationHooks,

@@ -178,6 +178,7 @@ def _serve(args) -> int:
             max_subscribers=args.max_subscribers,
             forward_token=args.forward_token,
             forward_tls_ca=args.forward_tls_ca,
+            source_ttl_s=args.source_ttl,
         )
     except ValueError as e:
         print(f"[iprof] bad serving options: {e}", file=sys.stderr)
@@ -232,6 +233,11 @@ def _serve(args) -> int:
                 f"{st['quota_sub_rejects']} quota(src/row/sub), "
                 f"{st['sub_evictions']} slow-subscriber evictions"
             )
+        if st.get("fence_rejects") or st.get("source_gc"):
+            line += (
+                f"; elastic: {st.get('fence_rejects', 0)} fenced frames, "
+                f"{st.get('source_gc', 0)} sources GC'd"
+            )
         print(line)
     return 0
 
@@ -251,7 +257,15 @@ def _render_composite(args, t, meta, ranks=None, groups=None) -> None:
         print(tally_plugin.render(t, top=args.top, device=True))
     if ranks is not None:
         print("\n-- ranks --")
-        print(tally_plugin.render_by_rank(ranks, top=args.top, device=args.device))
+        print(
+            tally_plugin.render_by_rank(
+                ranks,
+                top=args.top,
+                device=args.device,
+                incarnations=meta.get("incarnations"),
+                retired=meta.get("retired"),
+            )
+        )
     if groups is not None:
         print("\n-- groups --")
         print(
@@ -582,6 +596,14 @@ def build_parser() -> argparse.ArgumentParser:
         type=int,
         default=0,
         help="per-tenant live-subscriber quota (0 = unlimited)",
+    )
+    s.add_argument(
+        "--source-ttl",
+        type=float,
+        default=0.0,
+        metavar="SECONDS",
+        help="garbage-collect sources with no frames for this long "
+        "(0 = keep forever; evicted/dead ranks then linger in composites)",
     )
     s.add_argument(
         "--forward-token",

@@ -9,7 +9,7 @@ the §3.7 aggregation tree (local master → global master) possible.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from ..babeltrace import CTFSource, Interval, IntervalFilter
 
@@ -347,6 +347,8 @@ def render_by_rank(
     top: Optional[int] = None,
     device: bool = False,
     label: str = "Rank",
+    incarnations: Optional[Dict[str, int]] = None,
+    retired: Optional[Sequence[str]] = None,
 ) -> str:
     """Per-rank summary table (`iprof top --by-rank`, §3.7 + §6).
 
@@ -356,7 +358,15 @@ def render_by_rank(
     (:func:`render`) hides exactly this: a rank 3× slower than its peers
     disappears into the cluster-wide sums.  ``label`` renames the first
     column (``iprof top --by-group`` renders rollup groups with it).
+
+    Elastic annotations (from the master's by-rank metadata): a source with
+    ``incarnations[src] > 0`` is a replacement and renders as ``src#N`` so
+    it never silently merges with its dead predecessor's identity; a source
+    in ``retired`` renders a tombstone marker (``[evicted]``) — its totals
+    still count (history is history) but the row is visibly not a live rank.
     """
+    incs = incarnations or {}
+    dead = set(retired or ())
     per_rank = []
     for src, t in ranks.items():
         table = t.device_apis if device else t.apis
@@ -371,9 +381,15 @@ def render_by_rank(
     cluster_total = sum(r[2] for r in per_rank) or 1
     if top is not None:
         per_rank = per_rank[:top]
+
+    def name(src: str) -> str:
+        inc = int(incs.get(src, 0))
+        n = f"{src}#{inc}" if inc else src
+        return f"{n} [evicted]" if src in dead else n
+
     body = [
         (
-            src,
+            name(src),
             fmt_ns(total),
             f"{100.0 * total / cluster_total:.2f}%",
             str(calls),
@@ -384,7 +400,11 @@ def render_by_rank(
         for src, calls, total, top_api, top_st in per_rank
     ]
     header = (label, "Time", "Time(%)", "Calls", "Average", "Top API", "Top API Avg")
-    out = [f"{len(ranks)} {label.lower()}s"]
+    live = len(ranks) - sum(1 for s in ranks if s in dead)
+    summary = f"{len(ranks)} {label.lower()}s"
+    if len(ranks) != live:
+        summary += f" ({live} live, {len(ranks) - live} evicted)"
+    out = [summary]
     out.extend(_table(header, body))
     return "\n".join(out)
 

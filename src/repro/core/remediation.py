@@ -13,9 +13,19 @@ sick-host — and walks a configurable **escalation ladder**:
     rung 1  ``checkpoint_drain``    checkpoint the trainer and quiesce the
                                     suspect (async ``Checkpointer.save`` +
                                     drain hooks in ``train/trainer.py``);
-    rung 2  ``evict``               drop the sustained-bad rank from the
+    rung 2  ``replace``             spawn a fresh incarnation of the drained
+                                    rank, restore it from the drain
+                                    checkpoint, and splice it back into the
+                                    mesh (``launch/elastic.py``) — the rung
+                                    exists only when a ``replace`` hook is
+                                    configured; without one the ladder goes
+                                    straight from drain to evict, exactly
+                                    the pre-elastic behavior;
+    rung 3  ``evict``               drop the sustained-bad rank from the
                                     active set and re-mesh onto survivors
-                                    (``launch/mesh.py``).
+                                    (``launch/mesh.py``) — the fallback when
+                                    replacement is off, over budget, or
+                                    failed ``replace_retries`` times.
 
 Control-theory guardrails, all tunable:
 
@@ -57,11 +67,13 @@ __all__ = [
     "RemediationEngine",
     "RUNG_ESCALATE",
     "RUNG_DRAIN",
+    "RUNG_REPLACE",
     "RUNG_EVICT",
 ]
 
 RUNG_ESCALATE = "escalate_fidelity"
 RUNG_DRAIN = "checkpoint_drain"
+RUNG_REPLACE = "replace"
 RUNG_EVICT = "evict"
 _DEESCALATE = "deescalate"
 _RECOVER = "recover"
@@ -92,23 +104,35 @@ class RemediationHooks:
 
     ``escalate``   rung 0 — raise trace fidelity on the target rank.
     ``drain``      rung 1 — checkpoint the trainer and quiesce the target.
-    ``evict``      rung 2 — remove the target from the active set, re-mesh.
+    ``replace``    rung 2 — spawn/restore/splice a fresh incarnation of the
+                   drained rank (``launch/elastic.py``).
+    ``evict``      rung 3 — remove the target from the active set, re-mesh.
     ``restore``    called on full recovery (hysteresis walked the target
                    back to healthy) — e.g. undo the fidelity escalation.
 
     A missing hook makes its rung advisory-only (the decision is still
     logged and traced, and counts as succeeded so the ladder can progress);
     a hook returning ``False`` or raising marks the attempt failed and the
-    rung retries with capped-exponential backoff.
+    rung retries with capped-exponential backoff.  ``replace`` is the one
+    exception to advisory-only: when it is ``None`` the rung is *skipped*
+    entirely (drain escalates straight to evict) — treating a no-op as a
+    successful replacement would reset the ladder and the sick rank would
+    never be dealt with.
     """
 
     escalate: Optional[Hook] = None
     drain: Optional[Hook] = None
+    replace: Optional[Hook] = None
     evict: Optional[Hook] = None
     restore: Optional[Hook] = None
 
     def for_rung(self, name: str) -> Optional[Hook]:
-        return {RUNG_ESCALATE: self.escalate, RUNG_DRAIN: self.drain, RUNG_EVICT: self.evict}[name]
+        return {
+            RUNG_ESCALATE: self.escalate,
+            RUNG_DRAIN: self.drain,
+            RUNG_REPLACE: self.replace,
+            RUNG_EVICT: self.evict,
+        }[name]
 
 
 @dataclass
@@ -139,7 +163,7 @@ class RemediationEngine:
     (consumer thread) while :meth:`tick` may run on a driver loop.
     """
 
-    RUNGS: Tuple[str, ...] = (RUNG_ESCALATE, RUNG_DRAIN, RUNG_EVICT)
+    RUNGS: Tuple[str, ...] = (RUNG_ESCALATE, RUNG_DRAIN, RUNG_REPLACE, RUNG_EVICT)
 
     def __init__(
         self,
@@ -151,6 +175,8 @@ class RemediationEngine:
         healthy_windows: int = 3,
         dry_run: bool = False,
         max_evictions: int = 1,
+        max_replacements: int = 1,
+        replace_retries: int = 2,
         clock: Callable[[], float] = time.monotonic,
         on_action: Optional[Callable[[RemediationAction], None]] = None,
     ):
@@ -160,6 +186,8 @@ class RemediationEngine:
             raise ValueError("backoff_cap_s must be >= cooldown_s")
         if escalate_after < 1 or healthy_windows < 1:
             raise ValueError("escalate_after and healthy_windows must be >= 1")
+        if max_replacements < 0 or replace_retries < 0:
+            raise ValueError("max_replacements and replace_retries must be >= 0")
         self.hooks = hooks or RemediationHooks()
         self.cooldown_s = cooldown_s
         self.backoff_cap_s = backoff_cap_s
@@ -167,12 +195,17 @@ class RemediationEngine:
         self.healthy_windows = healthy_windows
         self.dry_run = dry_run
         self.max_evictions = max_evictions
+        self.max_replacements = max_replacements
+        self.replace_retries = replace_retries
+        self.replacements = 0  # successful (non-dry-run) replace rungs fired
+        self.actions: List[RemediationAction] = []
         self.clock = clock
         self.on_action = on_action
-        self.actions: List[RemediationAction] = []
         self.targets: Dict[str, _TargetState] = {}
         self._trace_record = None  # ust_repro:remediation recorder, when traced
-        self._lock = threading.Lock()
+        # re-entrant: a replace hook runs under the lock and its spawn/admit
+        # sub-events come back in through note() on the same thread
+        self._lock = threading.RLock()
 
     # -- wiring ------------------------------------------------------------
 
@@ -254,20 +287,43 @@ class RemediationEngine:
                         fired.append(act)
         return fired
 
+    def _replace_available(self) -> bool:
+        """Whether the replace rung can fire at all right now."""
+        if self.hooks.replace is None and not self.dry_run:
+            return False  # no effector: skip the rung, don't fake success
+        return self.replacements < self.max_replacements
+
     def _consider_escalation(self, target: str, st: _TargetState, now: float) -> Optional[RemediationAction]:
         if now - st.last_fire < st.next_delay(self.cooldown_s, self.backoff_cap_s):
             return None  # cooling down (or backing off after a failure)
         if st.attempts > 0:
             next_rung = st.retry_rung  # retry the failed rung before moving on
+            if (
+                self.RUNGS[next_rung] == RUNG_REPLACE
+                and st.attempts > self.replace_retries
+            ):
+                next_rung += 1  # capped retries exhausted: fall through to evict
         elif st.rung < 0:
             next_rung = 0  # first evidence acts immediately: cheap rung only
         elif st.flag_streak >= self.escalate_after:
             next_rung = st.rung + 1
         else:
             return None  # flagged but not sustained: hold the current rung
+        if (
+            next_rung < len(self.RUNGS)
+            and self.RUNGS[next_rung] == RUNG_REPLACE
+            and not self._replace_available()
+        ):
+            next_rung += 1  # replacement off / over budget: straight to evict
         if next_rung >= len(self.RUNGS):
             return None  # already at the top; nothing above evict
         name = self.RUNGS[next_rung]
+        if name == RUNG_REPLACE:
+            # replace shares evict's precondition: only a drained target may
+            # be torn down and re-spawned (its drain checkpoint is the
+            # restore point the replacement comes back from).
+            if not st.drained and not self.dry_run:
+                return None
         if name == RUNG_EVICT:
             # drain-before-evict invariant, and an eviction budget so a
             # miscalibrated policy cannot shrink the cluster to nothing.
@@ -287,6 +343,15 @@ class RemediationEngine:
                 st.drained = True
             if name == RUNG_EVICT and not self.dry_run:
                 st.evicted = True
+            if name == RUNG_REPLACE and not self.dry_run:
+                # The target is now a *new process*: its ladder history
+                # belongs to the dead incarnation, so start it fresh (only
+                # the replacement budget carries over).
+                self.replacements += 1
+                st.rung = -1
+                st.drained = False
+                st.flag_streak = 0
+                st.healthy_streak = 0
         else:
             st.retry_rung = next_rung
             st.attempts += 1
@@ -308,6 +373,17 @@ class RemediationEngine:
                     ok = False
             return self._emit(_RECOVER, target, f"healthy x{self.healthy_windows}", st.rung, ok)
         return self._emit(_DEESCALATE, target, f"healthy x{self.healthy_windows}", st.rung, True)
+
+    def note(self, action: str, target: str, detail: str = "", ok: bool = True) -> RemediationAction:
+        """Record an out-of-band remediation event in the audit log/trace.
+
+        The elastic layer uses this for sub-decisions the ladder itself does
+        not drive — replacement spawn attempts, mesh splices, fence rejects —
+        so the full spawn/admit/fence story reads out of one audit trail.
+        """
+        with self._lock:
+            st = self.targets.get(target)
+            return self._emit(action, target, detail, st.rung if st else -1, ok)
 
     # -- introspection -----------------------------------------------------
 

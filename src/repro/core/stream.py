@@ -103,8 +103,9 @@ class ProtocolError(RuntimeError):
 class ServerRejected(ProtocolError):
     """The server refused the request: auth failure or quota exceeded.
 
-    Carries the server's ``error`` code (``"auth"`` / ``"quota"``) so clients
-    can distinguish retryable transport trouble from a hard rejection."""
+    Carries the server's ``error`` code (``"auth"`` / ``"quota"`` /
+    ``"fence"``) so clients can distinguish retryable transport trouble from
+    a hard rejection."""
 
     def __init__(self, code: str, detail: str = ""):
         super().__init__(f"server rejected request ({code}): {detail or code}")
@@ -264,6 +265,14 @@ class ServeOptions:
     #: always use the non-blocking retry pacing.
     connect_retries: int = 0
     connect_backoff_s: float = 0.25
+    #: garbage-collect sources whose last frame is older than this many
+    #: seconds (the sender disconnected, died, or was evicted and never
+    #: replaced): their rows leave ``ranks()``, the composite, and rollup
+    #: groups, and each collection bumps the ``source_gc`` counter in
+    #: ``stats()``.  0 (the default) keeps every source forever — the
+    #: historical behavior, and the right one for short-lived runs where
+    #: the final composite must include every rank that ever pushed.
+    source_ttl_s: float = 0.0
 
     def __post_init__(self):
         if self.tls_key and not self.tls_cert:
@@ -279,6 +288,8 @@ class ServeOptions:
             raise ValueError("connect_retries must be >= 0")
         if self.connect_backoff_s <= 0:
             raise ValueError("connect_backoff_s must be > 0")
+        if self.source_ttl_s < 0:
+            raise ValueError("source_ttl_s must be >= 0 (0 = never collect)")
 
     @property
     def auth_required(self) -> bool:
@@ -366,9 +377,18 @@ class SnapshotStreamer:
         server_hostname: Optional[str] = None,
         connect_retries: int = 0,
         connect_backoff_s: float = 0.25,
+        incarnation: int = 0,
     ):
         self.addr = parse_addr(addr)
         self.source = source
+        #: incarnation of this source's identity (elastic rank replacement:
+        #: a replacement worker for the same logical rank carries a strictly
+        #: larger incarnation; the master fences frames from superseded
+        #: ones — docs/streaming.md §incarnations).  Rides the ``hello``
+        #: and every state frame for the default source.
+        if incarnation < 0:
+            raise ValueError("incarnation must be >= 0")
+        self.incarnation = int(incarnation)
         self.retry_s = retry_s
         self.timeout_s = timeout_s
         self.delta = delta
@@ -401,6 +421,7 @@ class SnapshotStreamer:
         self.bytes_sent = 0
         self.resyncs = 0
         self.rejected = 0  # master sent an error frame (auth/quota): conn dropped
+        self.fenced = 0  # master fenced this incarnation: pushing stopped for good
         self._sock: Optional[socket.socket] = None
         self._next_retry = 0.0
         self._lock = threading.Lock()
@@ -430,6 +451,7 @@ class SnapshotStreamer:
         source: Optional[str] = None,
         skip_unchanged: bool = False,
         telemetry: Optional[dict] = None,
+        incarnation: Optional[int] = None,
     ) -> bool:
         """Deliver the current cumulative ``tally``; returns delivery success.
 
@@ -445,9 +467,17 @@ class SnapshotStreamer:
         pressure, transfer bandwidths — docs/streaming.md) that rides the
         frame as an optional key; a push carrying telemetry is never elided
         (sick-host evidence must flow even when the tally is idle).
+        ``incarnation`` overrides the streamer-level incarnation per push —
+        forwarders pass each origin source's incarnation so the fence holds
+        at every level of the master tree; None uses the streamer's own for
+        its default source and 0 for explicitly-named ones.
         """
         cur = tally if isinstance(tally, Tally) else Tally.from_obj(tally)
         src = source if source is not None else self.source
+        if incarnation is not None:
+            inc = int(incarnation)
+        else:
+            inc = self.incarnation if source is None else 0
         with self._lock:
             sock = self._ensure_conn()
             if sock is None:
@@ -463,6 +493,8 @@ class SnapshotStreamer:
                 return True
             if telemetry is not None:
                 msg["telemetry"] = telemetry
+            if inc:
+                msg["incarnation"] = inc
             frame = pack_frame(msg)
             try:
                 sock.sendall(frame)
@@ -578,7 +610,15 @@ class SnapshotStreamer:
                     msg.get("detail", ""),
                 )
                 self._drop_conn()
-                self._next_retry = time.monotonic() + self.retry_s
+                if msg.get("error") == "fence":
+                    # this incarnation is superseded: a replacement took over
+                    # the source identity.  Reconnecting can never succeed
+                    # (the fence is monotone), so stop for good — the polite
+                    # client side of zombie containment.
+                    self.fenced += 1
+                    self._next_retry = float("inf")
+                else:
+                    self._next_retry = time.monotonic() + self.retry_s
                 return False
             # anything else from the master is ignorable here
 
@@ -603,6 +643,8 @@ class SnapshotStreamer:
                 hello = {"type": "hello", "v": PROTOCOL_VERSION, "source": self.source}
                 if self.token is not None:
                     hello["token"] = self.token
+                if self.incarnation:
+                    hello["incarnation"] = self.incarnation
                 s.sendall(pack_frame(hello))
                 break
             except OSError:
@@ -815,7 +857,10 @@ class _SourceEntry:
     snapshot must not be dropped as stale against the old chain.
     ``version`` stamps every state update; ``snap`` caches a frozen copy of
     the tally at ``snap_version`` so per-rank reads refresh only the sources
-    that changed since the last read (O(changed), not O(ranks × rows))."""
+    that changed since the last read (O(changed), not O(ranks × rows)).
+    ``incarnation`` scopes the whole entry to one incarnation of the source
+    identity (elastic replacement): a frame from a lower incarnation is
+    fenced, a higher one atomically replaces the entry."""
 
     __slots__ = (
         "gen",
@@ -826,6 +871,8 @@ class _SourceEntry:
         "snap",
         "snap_version",
         "telemetry",
+        "incarnation",
+        "retired",
     )
 
     def __init__(self, gen: Optional[int], seq: int, tally: Tally, ts: float):
@@ -839,6 +886,11 @@ class _SourceEntry:
         #: latest device-telemetry dict shipped alongside this source's
         #: frames (optional wire key; None until the first carrying frame)
         self.telemetry: Optional[dict] = None
+        #: incarnation number of the sender that produced this state
+        self.incarnation = 0
+        #: tombstone flag: the rank was evicted (and possibly replaced) —
+        #: its contribution still counts, readers render it distinctly
+        self.retired = False
 
 
 class _Tenant:
@@ -977,6 +1029,10 @@ class MasterServer:
         self.quota_src_rejects = 0  # snapshots refused: tenant source quota
         self.quota_row_rejects = 0  # frames refused: tally row quota
         self.quota_sub_rejects = 0  # subscribes refused: subscriber quota
+        # elastic-replacement counters
+        self.fence_rejects = 0  # frames refused: superseded incarnation
+        self.source_gc = 0  # long-dead sources collected (options.source_ttl_s)
+        self._gc_next = 0.0  # next TTL sweep (throttled; guarded by _lock)
         self._lsock: Optional[socket.socket] = None
         self._stop_evt = threading.Event()
         self._threads: List[threading.Thread] = []
@@ -1107,28 +1163,56 @@ class MasterServer:
         gen: Optional[int] = None,
         tenant: str = DEFAULT_TENANT,
         telemetry: Optional[dict] = None,
+        incarnation: int = 0,
     ) -> bool:
         """Ingest a full cumulative snapshot (socket handlers and the
         in-process tracer both land here). Out-of-order frames
-        (seq < stored, same connection generation) are stale duplicates of
-        state we already supersede — dropped.  A frame from a *different*
-        generation (reconnect, new session) always replaces: its snapshot is
-        cumulative truth and its seq chain starts over.
+        (seq < stored, same connection generation and incarnation) are stale
+        duplicates of state we already supersede — dropped.  A frame from a
+        *different* generation (reconnect, new session) always replaces: its
+        snapshot is cumulative truth and its seq chain starts over.
+
+        Incarnation fencing (elastic replacement): a frame whose
+        ``incarnation`` is lower than the stored one comes from a superseded
+        zombie — dropped and counted in ``fence_rejects``; a higher one
+        atomically replaces the whole per-source state (seq chain, tally,
+        telemetry), so the replacement's contribution can never be mixed
+        with its predecessor's.
 
         Returns True when the state was stored.  False means the frame was
-        dropped — a stale duplicate, or a quota rejection for ``tenant``
-        (a *new* source past ``max_sources``, or a tally wider than
-        ``max_tally_rows``; counted in the ``quota_*`` stats).
+        dropped — a stale duplicate, a fenced incarnation, or a quota
+        rejection for ``tenant`` (a *new* source past ``max_sources``, or a
+        tally wider than ``max_tally_rows``; counted in the ``quota_*``
+        stats).
 
         The master takes ownership of ``tally`` — callers must not mutate it
         afterwards (the incremental composite diffs stored states)."""
         if not isinstance(tally, Tally):
             tally = Tally.from_obj(tally)
         opts = self.options
+        incarnation = int(incarnation)
         with self._lock:
             tn = self._tenant_locked(tenant)
+            self._gc_sweep_locked()
             prev = tn.latest.get(source)
-            if prev is not None and seq is not None and gen == prev.gen and seq < prev.seq:
+            if prev is not None and incarnation < prev.incarnation:
+                self.fence_rejects += 1
+                logger.warning(
+                    "tenant %r: fenced snapshot from %r incarnation %d "
+                    "(current %d)",
+                    tenant,
+                    source,
+                    incarnation,
+                    prev.incarnation,
+                )
+                return False
+            if (
+                prev is not None
+                and incarnation == prev.incarnation
+                and seq is not None
+                and gen == prev.gen
+                and seq < prev.seq
+            ):
                 return False
             if prev is None and opts.max_sources and len(tn.latest) >= opts.max_sources:
                 self.quota_src_rejects += 1
@@ -1154,13 +1238,19 @@ class MasterServer:
             nseq = seq if seq is not None else (prev.seq + 1 if prev is not None else 0)
             old = prev.tally if prev is not None else None
             entry = tn.latest[source] = _SourceEntry(gen, nseq, tally, time.time())
+            entry.incarnation = incarnation
             # a frame without telemetry keeps the last-known sample (leaf
             # pushes attach it every tick; forwarded chains may interleave)
+            # — but never across an incarnation swap: the replacement's
+            # telemetry starts clean, a zombie's vitals must not survive it
+            same_inc = prev is not None and prev.incarnation == incarnation
             entry.telemetry = (
                 dict(telemetry)
                 if telemetry is not None
-                else (prev.telemetry if prev is not None else None)
+                else (prev.telemetry if same_inc else None)
             )
+            # an admitted frame un-retires the row: the rank is live again
+            entry.retired = prev.retired if same_inc else False
             self.snapshots += 1
             self.full_snapshots += 1
             self._dirty = True
@@ -1178,24 +1268,47 @@ class MasterServer:
         gen: Optional[int] = None,
         tenant: str = DEFAULT_TENANT,
         telemetry: Optional[dict] = None,
+        incarnation: int = 0,
     ) -> bool:
         """Ingest a delta frame; True if applied.
 
         Applies only when the stored state for ``source`` is exactly
-        ``base_seq`` on the same connection generation — anything else
-        (unknown source after a master restart, a duplicate, an out-of-order
-        frame, a reset seq, a different connection's chain) is rejected so
-        the stored cumulative state is never corrupted; the socket handler
-        then answers ``resync``.  A delta that would grow the stored tally
-        past the tenant's ``max_tally_rows`` quota is rejected the same way
-        (the follow-up full snapshot is then bounced by :meth:`submit`, so
-        an over-quota source parks at its last admitted state).
+        ``base_seq`` on the same connection generation *and incarnation* —
+        anything else (unknown source after a master restart, a duplicate,
+        an out-of-order frame, a reset seq, a different connection's chain)
+        is rejected so the stored cumulative state is never corrupted; the
+        socket handler then answers ``resync``.  A delta from a *lower*
+        incarnation than stored is a zombie's late frame: counted in
+        ``fence_rejects`` and dropped with **no** resync — a superseded
+        sender must be cut off, not coached back into the fold.  A delta
+        that would grow the stored tally past the tenant's
+        ``max_tally_rows`` quota is rejected the same way as a chain
+        mismatch (the follow-up full snapshot is then bounced by
+        :meth:`submit`, so an over-quota source parks at its last admitted
+        state).
         """
         opts = self.options
+        incarnation = int(incarnation)
         with self._lock:
             tn = self._tenant_locked(tenant)
+            self._gc_sweep_locked()
             prev = tn.latest.get(source)
-            if prev is None or prev.gen != gen or prev.seq != base_seq:
+            if prev is not None and incarnation < prev.incarnation:
+                self.fence_rejects += 1
+                logger.warning(
+                    "tenant %r: fenced delta from %r incarnation %d (current %d)",
+                    tenant,
+                    source,
+                    incarnation,
+                    prev.incarnation,
+                )
+                return False
+            if (
+                prev is None
+                or prev.gen != gen
+                or prev.seq != base_seq
+                or prev.incarnation != incarnation
+            ):
                 return False
             if opts.max_tally_rows:
                 try:
@@ -1244,6 +1357,73 @@ class MasterServer:
             if prev is not None:
                 # keep the last tally but accept any future seq from it
                 prev.seq = -1
+
+    def incarnation_of(self, source: str, tenant: str = DEFAULT_TENANT) -> int:
+        """Stored incarnation for ``source`` (-1 when the source is unknown).
+
+        The socket handler uses this to tell a *fenced* rejection (frame
+        incarnation < stored: answer ``error`` code ``"fence"`` and drop the
+        connection) from an ordinary stale/mis-based drop (answer
+        ``resync``)."""
+        with self._lock:
+            prev = self._tenant_locked(tenant).latest.get(source)
+            return prev.incarnation if prev is not None else -1
+
+    def retire_source(self, source: str, tenant: str = DEFAULT_TENANT) -> bool:
+        """Tombstone ``source``: the rank was evicted from the mesh.
+
+        Its cumulative contribution keeps counting toward the composite
+        (the work it did is real), but per-rank readers see it flagged
+        ``retired`` so UIs render the row as a tombstone instead of a live
+        rank.  A frame from a *newer* incarnation un-retires the row (the
+        replacement took over); same-incarnation frames — e.g. a drain's
+        final flush racing the eviction — keep the flag.  Returns False for
+        an unknown source."""
+        with self._lock:
+            tn = self._tenant_locked(tenant)
+            prev = tn.latest.get(source)
+            if prev is None:
+                return False
+            if not prev.retired:
+                prev.retired = True
+                tn.version += 1  # subscribers re-push with the tombstone
+            return True
+
+    def _gc_sweep_locked(self) -> None:
+        """TTL sweep (``options.source_ttl_s``): drop sources whose last
+        frame is older than the TTL — across every tenant.  Throttled to one
+        sweep per TTL/4 so the ingest path never pays a per-frame scan;
+        caller holds ``_lock``.  Collected sources leave the composite and
+        rollup caches (dirty → rebuilt on next read) and bump
+        ``source_gc``."""
+        ttl = self.options.source_ttl_s
+        if not ttl:
+            return
+        now = time.time()
+        if now < self._gc_next:
+            return
+        self._gc_next = now + max(0.25, ttl / 4.0)
+        for tn in self._tenants.values():
+            dead = [src for src, e in tn.latest.items() if now - e.ts > ttl]
+            for src in dead:
+                del tn.latest[src]
+                tn.dirty_srcs.discard(src)
+                g = tn.src_group.pop(src, None)
+                if g is not None:
+                    members = tn.group_members.get(g)
+                    if members is not None:
+                        members.discard(src)
+                    tn.group_dirty.add(g)
+                self.source_gc += 1
+                logger.info(
+                    "tenant %r: collected dead source %r (no frames for > %.1fs)",
+                    tn.name,
+                    src,
+                    ttl,
+                )
+            if dead:
+                tn.comp_dirty = True
+                tn.version += 1
 
     # -- cache maintenance (all called under self._lock) ---------------------
     def _caches_note_update_locked(
@@ -1406,6 +1586,7 @@ class MasterServer:
         sources that changed since the last read are re-copied (O(changed)),
         but callers must treat the tallies as read-only."""
         with self._lock:
+            self._gc_sweep_locked()
             snap = self._ranks_snapshot_locked(self._tenant_locked(tenant))
             if copy:
                 return {src: Tally().merge(t) for src, t in snap.items()}
@@ -1450,6 +1631,7 @@ class MasterServer:
         ``groups`` aggregate across tenants, so single-tenant callers see
         the historical shape unchanged."""
         with self._lock:
+            self._gc_sweep_locked()
             per_tenant = {
                 name: {
                     "sources": len(tn.latest),
@@ -1491,6 +1673,8 @@ class MasterServer:
             "quota_src_rejects": self.quota_src_rejects,
             "quota_row_rejects": self.quota_row_rejects,
             "quota_sub_rejects": self.quota_sub_rejects,
+            "fence_rejects": self.fence_rejects,
+            "source_gc": self.source_gc,
             "sub_encodes": self._hub.encodes,
             "sub_heartbeats": self._hub.heartbeats,
             "sub_frames": self._hub.frames_out,
@@ -1554,6 +1738,13 @@ class MasterServer:
                     for src, e in tn.latest.items()
                     if src in copies and e.telemetry is not None
                 }
+                # origin incarnations ride each forwarded chain, so the
+                # fence holds at every level of the master tree
+                incs = {
+                    src: e.incarnation
+                    for src, e in tn.latest.items()
+                    if src in copies
+                }
             ok = True
             for src, tally in copies.items():
                 ok = self._forwarder.push(
@@ -1561,6 +1752,7 @@ class MasterServer:
                     source=src,
                     skip_unchanged=not force,
                     telemetry=telem.get(src),
+                    incarnation=incs.get(src, 0),
                 ) and ok
             if not ok:
                 with self._lock:
@@ -1666,7 +1858,29 @@ class MasterServer:
                         self._send_error(conn, "auth", "invalid or missing token")
                         break
                     tenant = got
-                    self._reset_seq(str(msg.get("source", "?")), tenant)
+                    src = str(msg.get("source", "?"))
+                    hello_inc = int(msg.get("incarnation", 0) or 0)
+                    cur_inc = self.incarnation_of(src, tenant)
+                    if hello_inc < cur_inc:
+                        # a zombie incarnation reconnecting: fence it at the
+                        # door — letting its hello through would reset the
+                        # live incarnation's seq chain (_reset_seq below)
+                        self.fence_rejects += 1
+                        logger.warning(
+                            "fenced hello from %s: %r incarnation %d "
+                            "superseded by %d",
+                            peer,
+                            src,
+                            hello_inc,
+                            cur_inc,
+                        )
+                        self._send_error(
+                            conn,
+                            "fence",
+                            f"incarnation {hello_inc} superseded by {cur_inc}",
+                        )
+                        break
+                    self._reset_seq(src, tenant)
                     try:
                         conn.sendall(
                             pack_frame(
@@ -1689,17 +1903,27 @@ class MasterServer:
                     )
                     break
                 elif kind == "snapshot":
+                    source = str(msg.get("source", "?"))
+                    inc = int(msg.get("incarnation", 0) or 0)
                     telem = msg.get("telemetry")
-                    self.submit(
-                        str(msg.get("source", "?")),
+                    ok = self.submit(
+                        source,
                         msg["tally"],
                         msg.get("seq"),
                         gen,
                         tenant=tenant,
                         telemetry=telem if isinstance(telem, dict) else None,
+                        incarnation=inc,
                     )
+                    if not ok and inc < self.incarnation_of(source, tenant):
+                        # fenced zombie: tell it why and cut the connection
+                        self._send_error(
+                            conn, "fence", f"incarnation {inc} of {source} superseded"
+                        )
+                        break
                 elif kind == "delta":
                     source = str(msg.get("source", "?"))
+                    inc = int(msg.get("incarnation", 0) or 0)
                     telem = msg.get("telemetry")
                     ok = self.submit_delta(
                         source,
@@ -1709,8 +1933,19 @@ class MasterServer:
                         gen,
                         tenant=tenant,
                         telemetry=telem if isinstance(telem, dict) else None,
+                        incarnation=inc,
                     )
                     if not ok:
+                        if inc < self.incarnation_of(source, tenant):
+                            # fenced zombie: no resync — coaching a superseded
+                            # sender back to full snapshots would just feed
+                            # more fenced frames; cut it off instead
+                            self._send_error(
+                                conn,
+                                "fence",
+                                f"incarnation {inc} of {source} superseded",
+                            )
+                            break
                         # mis-based delta: ask the sender for a full snapshot
                         # (scoped to the one source whose chain diverged)
                         self.resyncs_sent += 1
@@ -1831,6 +2066,16 @@ class MasterServer:
                 version = tn.version
                 copies, ops = self._comp_copies_locked(tn)
             snap = self._ranks_snapshot_locked(tn) if by_rank else None
+            incs = (
+                {src: e.incarnation for src, e in tn.latest.items()}
+                if by_rank
+                else None
+            )
+            retired = (
+                [src for src, e in tn.latest.items() if e.retired]
+                if by_rank
+                else None
+            )
             meta = self._tenant_meta_locked(tn)
         if comp is None:
             comp = self._finish_rebuild(tn, copies, ops, version)
@@ -1838,6 +2083,9 @@ class MasterServer:
         msg.update(meta)
         if by_rank:
             msg["ranks"] = {src: t.to_obj() for src, t in snap.items()}
+            msg["incarnations"] = incs
+            if retired:
+                msg["retired"] = retired
         return msg
 
     def _heartbeat_msg(self, tenant: str = DEFAULT_TENANT) -> dict:
@@ -1852,6 +2100,7 @@ class MasterServer:
         """``query_ranks`` reply: the per-source tally map + receipt times."""
         with self._lock:
             tn = self._tenant_locked(tenant)
+            self._gc_sweep_locked()
             snap = self._ranks_snapshot_locked(tn)
             stamps = {src: e.ts for src, e in tn.latest.items()}
             telem = {
@@ -1859,6 +2108,8 @@ class MasterServer:
                 for src, e in tn.latest.items()
                 if e.telemetry is not None
             }
+            incs = {src: e.incarnation for src, e in tn.latest.items()}
+            retired = [src for src, e in tn.latest.items() if e.retired]
             meta = self._tenant_meta_locked(tn)
         # frozen snapshots: replaced wholesale on change, safe to serialize
         # after the lock is released
@@ -1867,9 +2118,12 @@ class MasterServer:
             "v": PROTOCOL_VERSION,
             "ranks": {src: t.to_obj() for src, t in snap.items()},
             "ts": stamps,
+            "incarnations": incs,
         }
         if telem:
             msg["telemetry"] = telem
+        if retired:
+            msg["retired"] = retired
         msg.update(meta)
         return msg
 
@@ -2304,15 +2558,22 @@ class StreamClient:
         Returns ``(ranks, meta)`` where ``ranks`` maps source id (the rank
         identity, ``host:pid:rankN``) → its latest cumulative tally, and
         ``meta`` carries the composite meta keys plus ``ts`` (source →
-        receipt wall clock) and ``telemetry`` (source → its latest
-        device-telemetry dict, empty when no source shipped any).  Merging
-        every value of ``ranks`` reproduces the :meth:`composite` tally
-        exactly — per-rank sums equal the composite, API for API."""
+        receipt wall clock), ``telemetry`` (source → its latest
+        device-telemetry dict, empty when no source shipped any),
+        ``incarnations`` (source → incarnation number; 0 for sources that
+        were never replaced) and ``retired`` (sources tombstoned by an
+        eviction — render distinctly, their contribution still counts).
+        Merging every value of ``ranks`` reproduces the :meth:`composite`
+        tally exactly — per-rank sums equal the composite, API for API."""
         msg = self._request({"type": "query_ranks", "v": PROTOCOL_VERSION}, "ranks")
         meta = {k: msg[k] for k in _COMPOSITE_META_KEYS if k in msg}
         meta["ts"] = msg.get("ts", {})
         telem = msg.get("telemetry")
         meta["telemetry"] = telem if isinstance(telem, dict) else {}
+        incs = msg.get("incarnations")
+        meta["incarnations"] = incs if isinstance(incs, dict) else {}
+        retired = msg.get("retired")
+        meta["retired"] = list(retired) if isinstance(retired, (list, tuple)) else []
         return {src: Tally.from_obj(o) for src, o in msg["ranks"].items()}, meta
 
     def groups(self) -> Tuple[Dict[str, Tally], dict]:
@@ -2371,6 +2632,8 @@ class StreamClient:
             )
             last_tally: Optional[Tally] = None
             last_ranks: Optional[Dict[str, Tally]] = None
+            last_incs: Dict[str, int] = {}
+            last_retired: List[str] = []
             while True:
                 msg = recv_frame(s)
                 if msg is None:  # master stopped: end of stream
@@ -2385,12 +2648,20 @@ class StreamClient:
                         last_ranks = {
                             src: Tally.from_obj(o) for src, o in msg["ranks"].items()
                         }
+                        incs = msg.get("incarnations")
+                        last_incs = incs if isinstance(incs, dict) else {}
+                        ret = msg.get("retired")
+                        last_retired = (
+                            list(ret) if isinstance(ret, (list, tuple)) else []
+                        )
                 elif last_tally is None:
                     raise ProtocolError("unchanged heartbeat before any composite")
                 else:
                     meta["unchanged"] = True
                 if by_rank and last_ranks is not None:
                     meta["ranks"] = last_ranks
+                    meta["incarnations"] = last_incs
+                    meta["retired"] = last_retired
                 yield last_tally, meta
         finally:
             try:

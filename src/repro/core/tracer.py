@@ -142,6 +142,15 @@ class TraceConfig:
     #: over them (it IS the knob set) and stream_token/stream_tls_ca are
     #: still injected as upstream credentials if the options carry none.
     serve_options: Optional[object] = None
+    #: override the streaming source identity (None = ``default_source(rank)``,
+    #: i.e. "host:pid:rankN").  An elastic replacement process MUST present
+    #: its predecessor's source id so the master's incarnation fencing can
+    #: supersede the dead process instead of seeing a brand-new rank.
+    stream_source: Optional[str] = None
+    #: incarnation number carried in the streaming ``hello``/frames; masters
+    #: fence frames from lower incarnations of the same source (zombie
+    #: containment — see docs/streaming.md).  0 = the original launch.
+    stream_incarnation: int = 0
     #: starting rung of the fidelity ladder (orthogonal to ``mode``, which
     #: selects *what* is traced): "full" | "sampled" | "tally-only" | "off".
     #: Switchable mid-run via Tracer.set_mode / repro.trace.set_mode.
@@ -164,6 +173,8 @@ class TraceConfig:
             raise ValueError("stream_connect_retries must be >= 0")
         if self.stream_connect_backoff_s <= 0:
             raise ValueError("stream_connect_backoff_s must be > 0")
+        if self.stream_incarnation < 0:
+            raise ValueError("stream_incarnation must be >= 0")
         if self.cluster_adaptive is not None and self.serve_port is None:
             raise ValueError(
                 "cluster_adaptive requires serve_port: the in-process master "
@@ -397,7 +408,9 @@ class Tracer:
                 default_source,
             )
 
-            self._stream_source = default_source(self.cfg.rank)
+            self._stream_source = self.cfg.stream_source or default_source(
+                self.cfg.rank
+            )
             if self.cfg.serve_port is not None:
                 # In-process master: serves this rank's live tally (plus any
                 # children streaming to it); forwards upstream when stream_to
@@ -436,6 +449,7 @@ class Tracer:
                     ),
                     connect_retries=self.cfg.stream_connect_retries,
                     connect_backoff_s=self.cfg.stream_connect_backoff_s,
+                    incarnation=self.cfg.stream_incarnation,
                 )
         if self.cfg.adaptive is not None:
             from .adaptive import build_controller
@@ -708,7 +722,12 @@ class Tracer:
             snap.scale(self.cfg.sampling_interval)
         telem = self._telemetry_snapshot() if self.cfg.stream_telemetry else None
         if self.server is not None:
-            self.server.submit(self._stream_source, snap, telemetry=telem)
+            self.server.submit(
+                self._stream_source,
+                snap,
+                telemetry=telem,
+                incarnation=self.cfg.stream_incarnation,
+            )
         if self.streamer is not None:
             self.streamer.push(snap, telemetry=telem)
 

@@ -81,6 +81,58 @@ class RemeshPlan:
                 i += 1
         return out
 
+    def deal_shares(self, rank: int, remainder: int) -> Dict[int, int]:
+        """How :meth:`reassign` would deal ``rank``'s ``remainder`` across
+        the survivors: survivor id → share.  The record a driver must keep
+        at eviction time so a later :meth:`splice_rank` can claw exactly the
+        re-dealt work back (work conservation is an identity over these
+        shares, not a re-derivation)."""
+        if rank not in set(self.evicted):
+            raise ValueError(f"rank {rank} is not evicted in this plan")
+        shared = self.reassign({rank: int(remainder)})
+        return {s: shared[s] for s in self.survivors if shared[s]}
+
+    def splice_rank(
+        self,
+        rank: int,
+        dealt: Dict[int, int],
+        done_extra: Optional[Dict[int, int]] = None,
+    ) -> Tuple["RemeshPlan", Dict[int, int]]:
+        """Splice an evicted ``rank`` back into the mesh (its replacement).
+
+        ``dealt`` is the share of the evicted rank's remainder each survivor
+        was handed at eviction time (:meth:`deal_shares`); ``done_extra``
+        is how much of that share each survivor has *already finished* —
+        finished work is never clawed back.  Returns ``(new_plan,
+        giveback)`` where ``giveback`` maps survivor id → steps returned to
+        the replacement: ``max(0, dealt - done_extra)``.  The replacement
+        takes back exactly the un-done remainder, so total work across the
+        mesh is conserved through evict → splice regardless of how far each
+        survivor got (the chaos harness asserts this identity end-to-end).
+        """
+        ev = set(self.evicted)
+        if rank not in ev:
+            raise ValueError(f"rank {rank} is not evicted in this plan")
+        done = done_extra or {}
+        giveback: Dict[int, int] = {}
+        for s, share in dealt.items():
+            if s not in self.dense_rank:
+                raise ValueError(f"dealt share names non-survivor rank {s}")
+            back = max(0, int(share) - int(done.get(s, 0)))
+            if back:
+                giveback[s] = back
+        ev.discard(rank)
+        surv = tuple(sorted(set(self.survivors) | {rank}))
+        return (
+            RemeshPlan(
+                world_size=self.world_size,
+                evicted=tuple(sorted(ev)),
+                survivors=surv,
+                dense_rank={r: i for i, r in enumerate(surv)},
+            ),
+            giveback,
+        )
+
 
 def plan_eviction(world_size: int, evicted: Iterable[int]) -> RemeshPlan:
     """Build the survivor re-mesh plan for evicting ``evicted`` ranks.

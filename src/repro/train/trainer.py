@@ -165,6 +165,10 @@ class Trainer:
         #: drain checkpoint commits — stop data pipelines, close streams,
         #: release device handles before the host is taken away
         self.on_drain: List[Callable[[], None]] = []
+        #: which incarnation of this logical rank the loop is running as —
+        #: bumped by :meth:`admit_replacement`; the streaming layer fences
+        #: frames from lower incarnations (zombie containment)
+        self.incarnation = 0
 
     @property
     def straggler_steps(self) -> int:
@@ -235,6 +239,30 @@ class Trainer:
                 except Exception:
                     pass  # quiesce hooks must not block the drain
         return path
+
+    # -- elastic rejoin (remediation rung: replace) -------------------------------
+    def admit_replacement(self, incarnation: int, extra_steps: int = 0) -> int:
+        """Rejoin barrier for a replacement incarnation of this rank.
+
+        Called in the replacement process before :meth:`run`: restores from
+        the newest undamaged checkpoint (normally the predecessor's drain
+        checkpoint), clears the drain latch the predecessor tripped, records
+        the new ``incarnation`` (its fencing credential on the stream), and
+        extends the step budget by ``extra_steps`` — the work the mesh
+        splice clawed back from the survivors.  Returns the restored step.
+        """
+        inc = int(incarnation)
+        if inc < 0:
+            raise ValueError("incarnation must be >= 0")
+        if self.ckpt is not None:
+            self.ckpt.wait()  # never race an in-flight async commit
+        self._maybe_restore()
+        self.draining.clear()
+        self.drained = False
+        self.incarnation = inc
+        if extra_steps:
+            self.cfg.steps += int(extra_steps)
+        return self.step
 
     # -- batching -----------------------------------------------------------------
     def _device_batch(self, host_batch: Dict[str, np.ndarray]):

@@ -21,7 +21,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 EXAMPLE = os.path.join(REPO_ROOT, "examples", "distributed_train.py")
 
 
-def run_chaos(*extra):
+def run_chaos(*extra, timeout=300):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
     proc = subprocess.run(
@@ -36,7 +36,7 @@ def run_chaos(*extra):
         ],
         capture_output=True,
         text=True,
-        timeout=300,
+        timeout=timeout,
         env=env,
         cwd=REPO_ROOT,
     )
@@ -82,4 +82,31 @@ def test_chaos_no_fault_baseline_is_quiet():
     out = run_chaos()
     assert "steps completed = 3 ranks" in out
     assert "0 remediation decisions" in out
+    assert "FAIL" not in out
+
+
+def test_chaos_kill_then_replace_elastic():
+    """The elastic tentpole e2e: a killed rank is replaced, not evicted.
+
+    The example self-verifies the full elastic story — replacement admitted
+    within the remediation budget, final healthy rank count == N, work
+    conservation through deal → splice → claw-back, live tally == offline
+    fold per rank, and a zombie frame from the dead incarnation fenced with
+    its poison row absent from the composite.  The tighter subprocess
+    timeout is the hard per-test bound: a hung replacement spawn fails this
+    test fast instead of stalling the whole chaos job."""
+    out = run_chaos(
+        "--chaos-replace",
+        "--inject-fault", "kill:rank=1,after=8",
+        "--chaos-timeout", "90",
+        timeout=180,
+    )
+    assert "replace_admit" in out
+    assert "(drain before replace, no eviction)" in out
+    assert "3/3 ranks healthy at exit" in out
+    assert "steps completed = 3 ranks" in out  # work conserved through splice
+    assert "1 replacement admitted" in out
+    assert "zombie fenced (fence_rejects=" in out
+    assert "poison row absent from the composite" in out
+    assert "every one traced" in out
     assert "FAIL" not in out
